@@ -1,0 +1,19 @@
+"""Benchmark helpers: row schema + timing."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # microseconds
+
+
+def row(name: str, us_per_call: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": round(us_per_call, 2),
+            "derived": derived}

@@ -1,0 +1,65 @@
+"""Paper Tables VII-IX (§V-F): controller overhead.
+
+Reproduces the paper's headline ratios from the structured Vivado data
+(HW 1.45% LUTs / 0.015 W ~ 2% share; SW 57.52% BRAM = 31.96x; static power
+5.60x), then measures the SAME property for THIS system's controller: the
+in-graph (HW-analogue) policy update and energy accounting must stay <2% of
+the training step, and the host (SW-analogue) path's per-step cost is
+reported like Table VI."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import overhead
+from repro.core.policy import PhaseAware
+from repro.core.power_plane import (HostPowerController, PowerPlaneState,
+                                    StepProfile, account_step)
+
+
+def run():
+    rows = []
+    rows.append(row("tableVII.hw_utilization", 0.0,
+                    f"LUT={overhead.HW_UTILIZATION_PCT['total']['slice_luts']}% "
+                    f"BRAM={overhead.HW_UTILIZATION_PCT['total']['bram_tiles']}% "
+                    f"(paper: 1.45% / 1.80%)"))
+    rows.append(row("tableVIII.sw_utilization", 0.0,
+                    f"LUT={overhead.SW_UTILIZATION_PCT['total']['slice_luts']}% "
+                    f"BRAM={overhead.SW_UTILIZATION_PCT['total']['bram_tiles']}% "
+                    f"bram_ratio={overhead.bram_ratio():.2f}x (paper: 31.96x)"))
+    rows.append(row("tableIX.static_power", 0.0,
+                    f"hw={overhead.HW_STATIC_TOTAL_W}W sw={overhead.SW_STATIC_TOTAL_W}W "
+                    f"ratio={overhead.static_power_ratio():.2f}x (paper: 5.60x, "
+                    f"hw share ~2%)"))
+
+    # our controller: in-graph path cost vs a representative step
+    profile = StepProfile(2e12, 8e9, 4e9, 3e9)
+    policy = PhaseAware()
+
+    @jax.jit
+    def controller_only(plane):
+        plane, m = account_step(profile, plane)
+        return policy.update_jax(plane, m)
+
+    plane = PowerPlaneState.nominal()
+    _, us_ctrl = timed(lambda: jax.block_until_ready(controller_only(plane)),
+                       repeats=20)
+    t_step_target = float(jax.device_get(
+        account_step(profile, plane)[1]["t_step_s"]))
+    frac = (us_ctrl * 1e-6) / t_step_target
+    rows.append(row("ours.in_graph_controller", us_ctrl,
+                    f"cost_vs_step={100*frac:.3f}% (<2% budget: {frac < 0.02}; "
+                    f"in-graph ops are ~30 scalars — free once fused)"))
+
+    # host path: PMBus actuation cost per adjustment
+    hc = HostPowerController()
+    st = PowerPlaneState.nominal()
+    import dataclasses
+    st2 = dataclasses.replace(st, v_io=jnp.float32(0.85))
+    _, us_host = timed(lambda: hc.apply(st2), repeats=1)
+    rows.append(row("ours.host_controller_actuation", us_host,
+                    f"simulated_pmbus_latency={hc.actuation_seconds*1e3:.2f}ms "
+                    f"(ms-scale, matches paper §VII-C)"))
+    return rows

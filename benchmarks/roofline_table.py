@@ -1,0 +1,43 @@
+"""Deliverable (g): the full roofline table from the dry-run artifacts —
+three terms per (arch x shape x mesh), dominant bottleneck, useful-FLOPs
+ratio, and the hillclimb picks. Reads reports/dryrun_single_multi.json."""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import row
+from repro.roofline.analysis import (analyze_report, format_table,
+                                     pick_hillclimb_cells)
+
+REPORT = os.environ.get("REPRO_DRYRUN_REPORT",
+                        "reports/dryrun_single_multi.json")
+
+
+def run():
+    rows = []
+    if not os.path.exists(REPORT):
+        return [row("roofline.missing", 0.0,
+                    f"{REPORT} not found — run `python -m repro.launch.dryrun "
+                    f"--all --mesh both --out reports --save-hlo` first")]
+    for mesh in ("single", "multi"):
+        try:
+            rrows = analyze_report(REPORT, mesh)
+        except Exception as e:
+            rows.append(row(f"roofline.{mesh}.error", 0.0, str(e)))
+            continue
+        print(f"\n=== Roofline ({mesh}-pod) ===")
+        print(format_table(rrows))
+        for r in rrows:
+            rows.append(row(
+                f"roofline.{mesh}.{r.arch}.{r.shape}", 0.0,
+                f"t_comp={r.t_compute_s*1e3:.2f}ms t_mem={r.t_memory_s*1e3:.2f}ms "
+                f"t_coll={r.t_collective_s*1e3:.2f}ms dom={r.dominant} "
+                f"useful={r.useful_ratio:.2f} roofline={100*r.roofline_fraction:.1f}%"))
+        if mesh == "single":
+            picks = pick_hillclimb_cells(rrows)
+            for k, r in picks.items():
+                rows.append(row(f"roofline.hillclimb.{k}", 0.0,
+                                f"{r.arch} x {r.shape} dom={r.dominant} "
+                                f"roofline={100*r.roofline_fraction:.1f}%"))
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV and writes reports/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import importlib
+import json
+import os
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.transition_latency",    # Fig 7
+    "benchmarks.measurement_interval",  # Table VI / Fig 8
+    "benchmarks.settling_detection",    # Fig 9 / §V-D
+    "benchmarks.controller_overhead",   # Tables VII-IX
+    "benchmarks.ber_sweep",             # Fig 12
+    "benchmarks.tx_rx_sensitivity",     # Fig 13 / Table XI
+    "benchmarks.link_speed",            # Fig 14
+    "benchmarks.latency_impact",        # Fig 15
+    "benchmarks.power_reduction",       # Fig 16 / Table XII
+    "benchmarks.ecollectives_frontier",  # beyond-paper (DESIGN.md §2.2)
+    "benchmarks.roofline_table",        # deliverable (g)
+]
+
+
+def main() -> None:
+    all_rows = []
+    failures = 0
+    for name in MODULES:
+        try:
+            mod = importlib.import_module(name)
+            rows = mod.run()
+            all_rows.extend(rows)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            all_rows.append({"name": f"{name}.FAILED", "us_per_call": 0.0,
+                             "derived": "see traceback"})
+    print("\nname,us_per_call,derived")
+    for r in all_rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/bench_results.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"\n{len(all_rows)} rows, {failures} module failures "
+          f"-> reports/bench_results.json")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig 7: voltage transition latency and dynamics (HW PMBus, 400 kHz).
+
+Validates: 1.0 V -> 0.5 V end-to-end in 2.3 ms; transition time monotone in
+the step size; full decrease/increase sweeps of Table V."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.power_manager import PowerManager
+
+MGTAVCC = 6
+
+
+def run():
+    rows = []
+
+    def fig7a():
+        pm = PowerManager(path="hw", clock_hz=400_000)
+        tr = pm.measure_transition(MGTAVCC, 0.5, duration_s=6e-3)
+        return tr.end_to_end_latency_s()
+
+    lat, us = timed(fig7a)
+    rows.append(row("fig7a.transition_1.0->0.5V.hw400", us,
+                    f"end_to_end={lat*1e3:.2f}ms paper=2.3ms "
+                    f"match={abs(lat*1e3-2.3)<0.25}"))
+
+    # Fig 7b + Table V sweeps
+    for direction, targets in (("down", (0.9, 0.8, 0.7, 0.6, 0.5)),
+                               ("up", (0.5, 0.6, 0.7, 0.8, 0.9))):
+        lats = []
+        for tgt in targets:
+            pm = PowerManager(path="hw", clock_hz=400_000)
+            if direction == "up":
+                pm.set_voltage(MGTAVCC, tgt)
+                pm.clock.advance(5e-3)
+                tr = pm.measure_transition(MGTAVCC, 1.0, duration_s=6e-3)
+            else:
+                tr = pm.measure_transition(MGTAVCC, tgt, duration_s=6e-3)
+            lats.append(tr.end_to_end_latency_s() * 1e3)
+        if direction == "down":
+            mono = all(b >= a for a, b in zip(lats, lats[1:]))
+        else:
+            mono = all(b <= a for a, b in zip(lats, lats[1:]))
+        rows.append(row(f"fig7b.sweep_{direction}", 0.0,
+                        f"latencies_ms={[round(x,2) for x in lats]} "
+                        f"monotone_dV={mono}"))
+    return rows

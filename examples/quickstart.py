@@ -1,0 +1,46 @@
+"""Quickstart: the VolTune control plane in 60 lines.
+
+Programs a rail voltage through the PMBus-simulated PowerManager, watches
+the transition settle (paper Fig 7), and reads back telemetry — then shows
+the same opcode interface driving the TPU logical rails.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import PowerManager, settling_time
+from repro.core.power_manager import Opcode
+from repro.core.power_plane import HostPowerController, PowerPlaneState
+from repro.core.rails import KC705_RAIL_MAP
+
+# --- 1. KC705: set VCCBRAM to 0.9 V (the paper's §IV-E example) -----------
+pm = PowerManager(KC705_RAIL_MAP, path="hw", clock_hz=400_000)
+lane = KC705_RAIL_MAP.by_name("VCCBRAM").lane
+res = pm.set_voltage(lane, 0.9)
+print(f"set_voltage(VCCBRAM, 0.9V): ok={res.ok}, "
+      f"{len(res.completions)} PMBus transactions, "
+      f"command time {res.elapsed_s*1e3:.2f} ms")
+
+# --- 2. watch the transition settle (Fig 7 methodology) -------------------
+tr = pm.measure_transition(KC705_RAIL_MAP.by_name("MGTAVCC").lane, 0.85,
+                           duration_s=5e-3)
+det = settling_time(tr.times, tr.volts, n=8, band_pct=1.0)
+print(f"MGTAVCC 1.0->0.85V: settled={det.settled}, "
+      f"end-to-end latency {tr.end_to_end_latency_s()*1e3:.2f} ms "
+      f"(sampling interval {pm.measurement_interval_s()*1e3:.1f} ms)")
+
+# --- 3. raw opcode interface (Table III) -----------------------------------
+r = pm.execute(Opcode.GET_VOLTAGE, lane)
+print(f"opcode 0x5 GET_VOLTAGE(VCCBRAM) -> {r.value:.4f} V "
+      f"in {r.elapsed_s*1e3:.2f} ms")
+
+# --- 4. the same stack driving TPU logical rails ---------------------------
+hc = HostPowerController()
+import dataclasses
+import jax.numpy as jnp
+want = dataclasses.replace(PowerPlaneState.nominal(),
+                           v_io=jnp.float32(0.80))   # undervolt ICI SerDes
+achieved = hc.apply(want)
+print(f"TPU VDD_IO 0.95->0.80V via PMBus: achieved {float(achieved.v_io):.3f} V, "
+      f"actuation cost {hc.actuation_seconds*1e3:.2f} ms "
+      f"({hc.pm.bus.transaction_count} transactions)")
+print("readback:", {k: round(v, 3) for k, v in hc.readback().items()})

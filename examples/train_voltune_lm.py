@@ -1,0 +1,114 @@
+"""End-to-end training driver: a real LM trained for a few hundred steps
+with the full production stack — VolTune power plane (phase-aware policy +
+host PMBus controller), error-feedback int8 gradient collectives,
+step-atomic checkpointing with simulated failure recovery, straggler
+mitigation, and telemetry.
+
+Run:  PYTHONPATH=src python examples/train_voltune_lm.py [--steps 300]
+      [--d-model 512 --layers 8]   (~100M params: --d-model 768 --layers 12)
+"""
+
+import argparse
+import dataclasses
+import shutil
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import PhaseAware, StaticNominal
+from repro.core.power_plane import HostPowerController, StepProfile
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import registry
+from repro.optim import adamw
+from repro.optim.schedule import wsd
+from repro.train.step import StepConfig, make_train_step, shard_map_ef_step
+from repro.train.trainer import (FaultConfig, Trainer, TrainerConfig,
+                                 initial_plane_and_ef)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--d-model", type=int, default=512)
+ap.add_argument("--layers", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--policy", choices=("phase-aware", "static"),
+                default="phase-aware")
+ap.add_argument("--grad-sync", choices=("auto", "ef_int8"), default="ef_int8")
+ap.add_argument("--ckpt-dir", default="/tmp/voltune_train_ckpt")
+args = ap.parse_args()
+
+cfg = ModelConfig(
+    name="voltune-demo-lm", family="dense", n_layers=args.layers,
+    d_model=args.d_model, n_heads=args.d_model // 64,
+    n_kv_heads=max(1, args.d_model // 128), d_ff=args.d_model * 4 * 2 // 3,
+    vocab_size=4096, tp=1)
+api = registry.build(cfg, remat="none")
+params = api.init(jax.random.PRNGKey(0))
+n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))
+print(f"model: {cfg.n_layers}L d={cfg.d_model} -> {n_params/1e6:.1f}M params")
+
+opt_cfg = adamw.AdamWConfig()
+opt = adamw.init_state(params, opt_cfg)
+plane, ef = initial_plane_and_ef(params)
+
+# roofline profile of this step (scale-correct for the energy model)
+tokens = args.batch * args.seq
+profile = StepProfile(
+    flops_per_chip=6.0 * n_params * tokens,
+    hbm_bytes_per_chip=14.0 * n_params + 8.0 * tokens * cfg.d_model,
+    ici_bytes_per_chip=4.0 * n_params,
+    grad_bytes_per_chip=4.0 * n_params)
+
+policy = PhaseAware() if args.policy == "phase-aware" else StaticNominal()
+sched = lambda s: wsd(s, peak_lr=3e-4, warmup_steps=20,
+                      stable_steps=int(args.steps * 0.7),
+                      decay_steps=int(args.steps * 0.2))
+step_cfg = StepConfig(microbatches=1, grad_sync=args.grad_sync, policy=policy)
+raw_step = make_train_step(lambda p, b: api.loss_fn(p, b), opt_cfg, sched,
+                           profile, step_cfg)
+if args.grad_sync != "auto":
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    train_step = jax.jit(shard_map_ef_step(raw_step, mesh))
+else:
+    train_step = jax.jit(raw_step)
+
+shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0))
+hc = HostPowerController()
+tcfg = TrainerConfig(
+    total_steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir,
+    async_ckpt=True, host_policy=None, host_controller=hc,
+    faults=FaultConfig(fail_prob=0.004, straggler_prob=0.02,
+                       straggler_factor=6.0, grace=1.5, seed=7))
+trainer = Trainer(train_step, data, tcfg,
+                  {"params": params, "opt": opt, "plane": plane, "ef": ef})
+
+print(f"training {args.steps} steps (policy={args.policy}, "
+      f"grad_sync={args.grad_sync}, failure+straggler injection ON)...")
+log = trainer.run()
+
+records = list(log.records)
+head = sum(r.loss for r in records[:10]) / 10
+tail = sum(r.loss for r in records[-10:]) / 10
+s = trainer.summary()
+print(f"\nloss: {head:.4f} -> {tail:.4f}   "
+      f"({'improved' if tail < head else 'NO IMPROVEMENT'})")
+print(f"energy: {s['energy_j']:.1f} J over {s['time_s']:.2f} modelled-s "
+      f"(mean {s['mean_power_w']:.1f} W/chip)")
+print(f"fault tolerance: {s['restarts']} restarts, "
+      f"{s['straggler_events']} stragglers mitigated, "
+      f"{s['ckpt_writes']} checkpoints")
+print(f"rails at end: v_core={records[-1].v_core:.3f} "
+      f"v_hbm={records[-1].v_hbm:.3f} v_io={records[-1].v_io:.3f} "
+      f"comp_level={records[-1].comp_level}")
+
+# compare with the static-nominal baseline energy at identical step math
+if args.policy == "phase-aware":
+    from repro.core.power_plane import PowerPlaneState, account_step
+    nominal_plane = PowerPlaneState.nominal()
+    _, m = account_step(profile, nominal_plane)
+    e_nominal = float(m["energy_step_j"]) * len(records)
+    print(f"\nVolTune saving vs static-nominal margins: "
+          f"{100*(1-s['energy_j']/e_nominal):.1f}% "
+          f"({e_nominal:.1f} J -> {s['energy_j']:.1f} J) — "
+          f"the paper's thesis, at training-system scale")

@@ -1,0 +1,156 @@
+"""Step-atomic checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/
+    manifest.msgpack   — leaf paths, shapes, dtypes, step, mesh metadata
+    arrays.npz         — one entry per leaf (path-keyed)
+    .complete          — commit marker written LAST (atomicity: a partially
+                         written checkpoint is never visible to restore)
+
+Elastic restore: arrays are saved as full (unsharded) host arrays with their
+*logical* role recorded via path names; restore re-shards onto whatever mesh
+is active via parallel.sharding.param_pspecs — a 2x16x16 checkpoint restores
+onto 16x16 (or 1 device) unchanged. Background (async) save is supported for
+step-overlap; `wait()` joins the writer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+_DTYPE_FIX = {"bfloat16": "bfloat16"}
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def go(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", None)))
+                for k in path]
+        flat["/".join(keys)] = np.asarray(jax.device_get(leaf))
+
+    jax.tree_util.tree_map_with_path(go, tree)
+    return flat
+
+
+def _unflatten_into(tree_like, flat: dict[str, np.ndarray]):
+    def go(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", None)))
+                for k in path]
+        arr = flat["/".join(keys)]
+        return arr
+
+    return jax.tree_util.tree_map_with_path(go, tree_like)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = False
+    _thread: threading.Thread | None = None
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: dict[str, Any]) -> str:
+        """state: dict of pytrees, e.g. {'params': ..., 'opt': ..., 'plane': ...}"""
+        self.wait()
+        path = os.path.join(self.directory, f"step_{step:08d}")
+
+        host = {name: _flatten(tree) for name, tree in state.items()}
+        bf16_mask = {name: {k: str(v.dtype) for k, v in flat.items()}
+                     for name, flat in host.items()}
+
+        def write():
+            os.makedirs(path, exist_ok=True)
+            arrays = {}
+            manifest = {"step": step, "groups": {}, "time": time.time()}
+            for name, flat in host.items():
+                manifest["groups"][name] = {
+                    k: {"shape": list(v.shape), "dtype": bf16_mask[name][k]}
+                    for k, v in flat.items()}
+                for k, v in flat.items():
+                    # npz has no bf16: store as uint16 view, dtype in manifest
+                    if v.dtype == jax.numpy.bfloat16:
+                        v = v.view(np.uint16)
+                    arrays[f"{name}::{k}"] = v
+            np.savez(os.path.join(path, "arrays.npz"), **arrays)
+            with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+                f.write(msgpack.packb(manifest))
+            with open(os.path.join(path, ".complete"), "w") as f:
+                f.write("ok")
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+        return path
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            p = os.path.join(self.directory, f"step_{s:08d}")
+            for fn in os.listdir(p):
+                os.unlink(os.path.join(p, fn))
+            os.rmdir(p)
+
+    # -- restore --------------------------------------------------------------
+    def list_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, d, ".complete")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like: dict[str, Any], step: int | None = None,
+                shardings: dict[str, Any] | None = None) -> tuple[int, dict]:
+        """Restore into the structure of `state_like`. If `shardings` maps
+        group name -> NamedSharding pytree, leaves are device_put sharded
+        (elastic restore onto a different mesh)."""
+        import jax.numpy as jnp
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            out = {}
+            for name, tree in state_like.items():
+                flat = {}
+                for k, meta in manifest["groups"][name].items():
+                    v = z[f"{name}::{k}"]
+                    if meta["dtype"] == "bfloat16":
+                        v = v.view(jnp.bfloat16)
+                    flat[k] = v
+                restored = _unflatten_into(tree, flat)
+                if shardings and name in shardings:
+                    restored = jax.tree_util.tree_map(
+                        lambda a, s: jax.device_put(jnp.asarray(a), s),
+                        restored, shardings[name])
+                else:
+                    restored = jax.tree_util.tree_map(jnp.asarray, restored)
+                out[name] = restored
+        return manifest["step"], out

@@ -1,0 +1,7 @@
+from repro.configs.base import (
+    ARCH_IDS, LONG_CONTEXT_ARCHS, SHAPES, ModelConfig, ShapeConfig, cells,
+    get_config,
+)
+
+__all__ = ["ARCH_IDS", "LONG_CONTEXT_ARCHS", "SHAPES", "ModelConfig",
+           "ShapeConfig", "cells", "get_config"]

@@ -1,0 +1,15 @@
+"""Granite-20B (code): llama-arch with MQA (kv=1) [arXiv:2405.04324; hf]
+
+Exact assigned configuration (see system prompt / DESIGN.md §4); TINY is the
+reduced same-family smoke-test variant (CPU, tp=1).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b", family="dense", n_layers=52, d_model=6144,
+    n_heads=48, n_kv_heads=1, d_ff=24576, vocab_size=49152)
+
+TINY = ModelConfig(
+    name="granite-tiny", family="dense", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=1, d_ff=512, vocab_size=512, tp=1)

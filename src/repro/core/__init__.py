@@ -1,0 +1,23 @@
+"""The paper's primary contribution: the VolTune runtime voltage-control
+architecture — faithful KC705/UCD9248 simulation (codecs, pmbus, regulator,
+power_manager, settling, transceiver, overhead) plus its TPU-native
+adaptation (power_plane, ecollectives, policy, energy accounting).
+See DESIGN.md §2 for the mapping."""
+
+from repro.core.codecs import (
+    linear11_decode, linear11_encode, linear16_decode, linear16_encode,
+)
+from repro.core.power_manager import ControlPath, Opcode, PowerManager, Thresholds
+from repro.core.power_plane import (
+    HostPowerController, PowerPlaneState, StepProfile, account_step,
+)
+from repro.core.rails import KC705_RAIL_MAP, TPU_V5E_RAIL_MAP, RailMap
+from repro.core.settling import settling_time
+from repro.core.transceiver import GtxLinkModel
+
+__all__ = [
+    "ControlPath", "GtxLinkModel", "HostPowerController", "KC705_RAIL_MAP",
+    "Opcode", "PowerManager", "PowerPlaneState", "RailMap", "StepProfile",
+    "TPU_V5E_RAIL_MAP", "Thresholds", "account_step", "linear11_decode",
+    "linear11_encode", "linear16_decode", "linear16_encode", "settling_time",
+]

@@ -1,0 +1,206 @@
+"""Error-bounded collectives — the TPU-native analogue of the paper's
+bounded-BER transceiver operation (DESIGN.md §2.2).
+
+The paper undervolts the GTX rail and accepts BER <= 1e-6 for ~29.3% link
+power savings (paper §VI-G). On a TPU pod, the ICI SerDes is the same kind
+of multi-Gb/s link; the workload-visible equivalent of "bounded link error"
+is a *bounded-error gradient collective*: compress the gradient on the wire
+(int8 block quantization, optionally top-k sparsification), carry the
+compression residual forward with error feedback so the error stays bounded
+over training, and bank the ICI bytes/energy.
+
+Compression levels (the "voltage knob" of the ICI rail):
+    0  lossless     : bf16/f32 psum                    (the >= onset region)
+    1  int8 + EF    : blockwise int8 quantized         (bounded-error region)
+    2  int8+topk+EF : additionally top-k sparsified    (aggressive region)
+
+Collective wire-byte accounting per level is exposed for the roofline
+analysis and the energy model. The quantization hot loop has a Pallas TPU
+kernel (repro.kernels.quant_codec); this module uses the jnp reference path
+so it stays differentiable-free and shard_map-safe everywhere, and swaps in
+the kernel through repro.kernels.ops when on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 256
+LEVEL_LOSSLESS, LEVEL_INT8, LEVEL_INT8_TOPK = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 quantization (the codec; LINEAR16 analogue for gradients)
+# ---------------------------------------------------------------------------
+
+def _pad_to_block(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    n = x.size
+    pad = (-n) % block
+    flat = jnp.ravel(x)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def quantize_int8(x: jnp.ndarray, block: int = DEFAULT_BLOCK
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization. Returns (q[int8], scales[f32])
+    with one scale per `block` contiguous elements."""
+    flat, _ = _pad_to_block(x, block)
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape: tuple[int, ...],
+                    dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def topk_mask(x: jnp.ndarray, k_fraction: float, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Keep the top ceil(k_fraction*block) magnitudes per block, zero the rest."""
+    flat, pad = _pad_to_block(x, block)
+    blocks = flat.reshape(-1, block)
+    k = max(1, int(round(k_fraction * block)))
+    thresh = -jnp.sort(-jnp.abs(blocks), axis=1)[:, k - 1:k]
+    masked = jnp.where(jnp.abs(blocks) >= thresh, blocks, 0.0)
+    out = masked.reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Compressed cross-device reduction (for use inside shard_map)
+# ---------------------------------------------------------------------------
+
+def psum_lossless(x: jnp.ndarray, axis_name) -> jnp.ndarray:
+    return jax.lax.psum(x, axis_name)
+
+
+def psum_int8(x: jnp.ndarray, axis_name, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Bounded-error sum over `axis_name`: quantize locally to int8, exchange
+    the int8 payload + scales (all-gather), dequantize-and-sum locally.
+
+    Ring all-gather moves ~1 byte/element/device-hop vs ~4 bytes for a bf16
+    ring all-reduce (2 passes x 2 bytes) => ~4x ICI byte reduction, at the
+    cost of a bounded quantization error (the "BER") that the caller bounds
+    with error feedback."""
+    q, s = quantize_int8(x, block)
+    qg = jax.lax.all_gather(q, axis_name)            # [P, nblk, block] int8
+    sg = jax.lax.all_gather(s, axis_name)            # [P, nblk, 1] f32
+    total = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    return dequantize_like(total, x)
+
+
+def dequantize_like(blocks_sum: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    flat = blocks_sum.reshape(-1)[: x.size]
+    return flat.reshape(x.shape).astype(x.dtype)
+
+
+def psum_int8_topk(x: jnp.ndarray, axis_name, k_fraction: float = 0.25,
+                   block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Level-2: top-k sparsify then int8-quantize. Wire bytes scale with the
+    kept fraction (indices are implicit in the blockwise dense-mask layout)."""
+    return psum_int8(topk_mask(x, k_fraction, block), axis_name, block)
+
+
+def reduce_gradients(grads, axis_name, level: int, k_fraction: float = 0.25,
+                     mean: bool = True):
+    """Reduce a gradient pytree across `axis_name` at a compression level."""
+    size = jax.lax.psum(1, axis_name)
+
+    def red(g):
+        if level == LEVEL_LOSSLESS:
+            out = psum_lossless(g, axis_name)
+        elif level == LEVEL_INT8:
+            out = psum_int8(g, axis_name)
+        elif level == LEVEL_INT8_TOPK:
+            out = psum_int8_topk(g, axis_name, k_fraction)
+        else:
+            raise ValueError(f"unknown compression level {level}")
+        return out / size if mean else out
+
+    return jax.tree_util.tree_map(red, grads)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (keeps the compression error bounded over training)
+# ---------------------------------------------------------------------------
+
+def ef_compress(grads, residuals, level: int, k_fraction: float = 0.25,
+                block: int = DEFAULT_BLOCK):
+    """Error-feedback transform: g' = compress(g + r); r' = (g + r) - g'.
+
+    With EF the *accumulated* compression error stays O(one-step error)
+    instead of growing with steps (Karimireddy et al. 2019) — this is what
+    makes the bounded-error region usable, exactly like the paper's
+    bounded-BER region is usable because the payload tolerates rare flips."""
+    if level == LEVEL_LOSSLESS:
+        return grads, residuals
+
+    def comp(g, r):
+        corrected = g + r
+        if level == LEVEL_INT8_TOPK:
+            kept = topk_mask(corrected, k_fraction, block)
+        else:
+            kept = corrected
+        q, s = quantize_int8(kept, block)
+        g_hat = dequantize_int8(q, s, corrected.shape, corrected.dtype)
+        return g_hat, corrected - g_hat
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+    gs = tdef.unflatten([o[0] for o in out])
+    rs = tdef.unflatten([o[1] for o in out])
+    return gs, rs
+
+
+def zeros_like_residuals(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# Wire-byte accounting (feeds the roofline collective term + energy model)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireCost:
+    bytes_per_element: float     # on-wire bytes per gradient element per device
+    description: str
+
+
+def wire_cost(level: int, k_fraction: float = 0.25,
+              elem_bytes: int = 2, block: int = DEFAULT_BLOCK) -> WireCost:
+    """Ring-collective wire bytes per gradient element (per device).
+
+    Lossless ring all-reduce: 2 passes x elem_bytes. int8 all-gather +
+    local reduce: 1 byte + scales overhead. top-k: fraction kept + scales."""
+    scale_overhead = 4.0 / block
+    if level == LEVEL_LOSSLESS:
+        return WireCost(2.0 * elem_bytes, "ring all-reduce bf16")
+    if level == LEVEL_INT8:
+        return WireCost(1.0 + scale_overhead, "int8 all-gather + local reduce")
+    if level == LEVEL_INT8_TOPK:
+        return WireCost(k_fraction * 1.0 + scale_overhead + 0.25,
+                        "top-k int8 (+index bitmap) all-gather + local reduce")
+    raise ValueError(f"unknown level {level}")
+
+
+def compression_error_norm(grads, grads_hat) -> jnp.ndarray:
+    """Relative L2 error — the gradient-domain 'BER' telemetry channel."""
+    num = sum(jnp.sum((a - b) ** 2) for a, b in
+              zip(jax.tree_util.tree_leaves(grads), jax.tree_util.tree_leaves(grads_hat)))
+    den = sum(jnp.sum(a ** 2) for a in jax.tree_util.tree_leaves(grads))
+    return jnp.sqrt(num / jnp.maximum(den, 1e-30))

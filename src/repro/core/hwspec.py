@@ -1,0 +1,72 @@
+"""Target hardware constants (TPU v5e) shared by the roofline analysis and
+the energy model.
+
+Roofline constants are the ones mandated for this reproduction:
+197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per ICI link.
+
+Chip power constants are stated assumptions (vendor does not publish a rail
+breakdown); they only set the *scale* of the energy numbers — all paper-
+validation claims are expressed as ratios, which are insensitive to them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12        # FLOP/s per chip
+    hbm_bandwidth: float = 819e9           # bytes/s per chip
+    ici_link_bandwidth: float = 50e9       # bytes/s per link (per direction)
+    ici_links_per_chip: int = 4            # 2-D torus on a 16x16 pod
+    hbm_bytes: float = 16e9                # 16 GB HBM per chip
+    vmem_bytes: float = 128 * 2**20        # ~128 MiB VMEM
+
+    # --- power model assumptions (documented in DESIGN.md) -----------------
+    nominal_v_core: float = 0.90
+    nominal_v_hbm: float = 1.10
+    nominal_v_io: float = 0.95
+    p_core_dynamic_w: float = 90.0   # at 100% MXU utilization, nominal V/f
+    p_core_static_w: float = 25.0
+    p_hbm_w: float = 30.0            # at 100% bandwidth utilization
+    p_ici_w: float = 15.0            # at 100% link utilization (all links)
+    p_other_w: float = 10.0          # fans/host share/uncore, not scalable
+
+    def idle_power_w(self) -> float:
+        return self.p_core_static_w + self.p_other_w
+
+
+V5E = ChipSpec()
+
+
+def core_frequency_scale(v_core: float, spec: ChipSpec = V5E) -> float:
+    """Linear DVFS approximation: f ∝ v (clamped at 40% floor)."""
+    return max(0.4, v_core / spec.nominal_v_core)
+
+
+def chip_power_w(
+    *,
+    v_core: float,
+    v_hbm: float,
+    v_io: float,
+    mxu_utilization: float,
+    hbm_utilization: float,
+    ici_utilization: float,
+    spec: ChipSpec = V5E,
+) -> float:
+    """Rail-resolved chip power.
+
+    Dynamic power ∝ v^2 * f with f ∝ v (=> v^3); static ∝ v^2 (leakage is
+    super-linear in v; quadratic is the standard compact model). Utilizations
+    come from the compiled-step roofline terms.
+    """
+    sv_core = v_core / spec.nominal_v_core
+    sv_hbm = v_hbm / spec.nominal_v_hbm
+    sv_io = v_io / spec.nominal_v_io
+    p_core = (spec.p_core_dynamic_w * mxu_utilization * sv_core**3
+              + spec.p_core_static_w * sv_core**2)
+    p_hbm = spec.p_hbm_w * (0.3 + 0.7 * hbm_utilization) * sv_hbm**2
+    p_ici = spec.p_ici_w * (0.15 + 0.85 * ici_utilization) * sv_io**2
+    return p_core + p_hbm + p_ici + spec.p_other_w

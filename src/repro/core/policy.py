@@ -1,0 +1,144 @@
+"""Voltage/compression selection policies (paper §VII-B: 'VolTune is designed
+as a control mechanism rather than as a fixed automatic optimizer').
+
+The mechanism layer (power_plane / power_manager / ecollectives) never decides
+operating points; these policies do. Each policy exists in two forms matching
+the paper's control paths:
+
+  * `update_jax(state, telemetry) -> state` — pure jnp, compiled into the
+    step (in-graph / HW-path analogue);
+  * `update_host(state, telemetry) -> state` — plain Python between steps
+    (host / SW-path analogue), to be pushed through HostPowerController.
+
+Telemetry is a dict with (at least) the keys produced by
+power_plane.account_step plus 'grad_error' (the gradient-domain BER) when
+error-bounded collectives are active.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecollectives
+from repro.core.hwspec import V5E, ChipSpec
+from repro.core.power_plane import PowerPlaneState
+
+
+class Policy:
+    name = "base"
+
+    def update_jax(self, state: PowerPlaneState, telemetry) -> PowerPlaneState:
+        raise NotImplementedError
+
+    def update_host(self, state: PowerPlaneState, telemetry) -> PowerPlaneState:
+        # default: same decision logic, evaluated host-side between steps
+        return self.update_jax(state, telemetry)
+
+
+@dataclasses.dataclass
+class StaticNominal(Policy):
+    """Fixed worst-case margins — the design-time status quo the paper argues
+    against (§I). Baseline for all energy comparisons."""
+    spec: ChipSpec = V5E
+    name: str = "static-nominal"
+
+    def update_jax(self, state, telemetry):
+        return dataclasses.replace(
+            state,
+            v_core=jnp.float32(self.spec.nominal_v_core),
+            v_hbm=jnp.float32(self.spec.nominal_v_hbm),
+            v_io=jnp.float32(self.spec.nominal_v_io),
+            comp_level=jnp.int32(ecollectives.LEVEL_LOSSLESS),
+        )
+
+
+@dataclasses.dataclass
+class BERBounded(Policy):
+    """The paper's case-study policy, gradient-domain: pick the most
+    aggressive compression level whose measured relative gradient error stays
+    below `error_bound` (the BER <= 1e-6 analogue), and undervolt VDD_IO in
+    proportion to the wire-byte savings (lower effective link utilization ->
+    lower safe operating point on the same curve)."""
+    error_bound: float = 5e-3
+    v_io_floor: float = 0.80
+    spec: ChipSpec = V5E
+    name: str = "ber-bounded"
+
+    def update_jax(self, state, telemetry):
+        err = telemetry.get("grad_error", jnp.float32(0.0))
+        # hysteresis: escalate when comfortably under bound, retreat when over
+        lvl = state.comp_level
+        lvl = jnp.where(err < 0.5 * self.error_bound,
+                        jnp.minimum(lvl + 1, ecollectives.LEVEL_INT8_TOPK), lvl)
+        lvl = jnp.where(err > self.error_bound, jnp.maximum(lvl - 1, 0), lvl)
+        v_io = jnp.where(lvl > 0,
+                         jnp.float32(max(self.v_io_floor, self.spec.nominal_v_io * 0.9)),
+                         jnp.float32(self.spec.nominal_v_io))
+        return dataclasses.replace(state, comp_level=lvl.astype(jnp.int32),
+                                   v_io=v_io)
+
+
+@dataclasses.dataclass
+class PhaseAware(Policy):
+    """Exploit temporal slack (paper §I: 'during low-utilization or
+    communication-light phases, operating all rails at worst-case margins
+    results in unnecessary power'): whichever roofline term is NOT dominant
+    has slack — undervolt its rail until the terms balance."""
+    margin: float = 0.10          # keep 10% headroom below the dominant term
+    spec: ChipSpec = V5E
+    name: str = "phase-aware"
+
+    def update_jax(self, state, telemetry):
+        t_comp = telemetry["t_comp_s"]
+        t_mem = telemetry["t_mem_s"]
+        t_coll = telemetry["t_coll_s"]
+        t_dom = jnp.maximum(t_comp, jnp.maximum(t_mem, t_coll))
+        target = t_dom * (1.0 - self.margin)
+
+        def scaled(v_nom, v_min, t_mine):
+            # f ∝ v: slowing this rail by t_mine/target keeps it under the
+            # dominant term; clamp to the rail's platform safety envelope
+            # (paper §VII-B: per-rail envelopes are platform-defined).
+            s = jnp.clip(t_mine / target, 0.0, 1.0)
+            return jnp.maximum(jnp.float32(v_nom) * s, jnp.float32(v_min))
+
+        from repro.core.rails import TPU_V5E_RAIL_MAP as rm
+        return dataclasses.replace(
+            state,
+            v_core=scaled(self.spec.nominal_v_core, rm.by_name("VDD_CORE").v_min, t_comp),
+            v_hbm=scaled(self.spec.nominal_v_hbm, rm.by_name("VDD_HBM").v_min, t_mem),
+            v_io=scaled(self.spec.nominal_v_io, rm.by_name("VDD_IO").v_min, t_coll),
+        )
+
+
+@dataclasses.dataclass
+class ClosedLoop(Policy):
+    """The paper's explicit future work (§VIII): feedback control on
+    telemetry. A conservative integral controller that walks VDD_IO down
+    while the gradient-error telemetry stays under the bound and backs off
+    multiplicatively on violation (AIMD — stable under noisy telemetry)."""
+    error_bound: float = 5e-3
+    step_v: float = 0.005
+    backoff: float = 1.05
+    v_io_floor: float = 0.75
+    spec: ChipSpec = V5E
+    name: str = "closed-loop"
+
+    def update_jax(self, state, telemetry):
+        err = telemetry.get("grad_error", jnp.float32(0.0))
+        ok = err <= self.error_bound
+        v_down = jnp.maximum(state.v_io - self.step_v, self.v_io_floor)
+        v_up = jnp.minimum(state.v_io * self.backoff,
+                           jnp.float32(self.spec.nominal_v_io))
+        v_io = jnp.where(ok, v_down, v_up)
+        lvl = jnp.where(ok, jnp.minimum(state.comp_level + 1,
+                                        ecollectives.LEVEL_INT8),
+                        jnp.int32(ecollectives.LEVEL_LOSSLESS))
+        return dataclasses.replace(state, v_io=v_io, comp_level=lvl.astype(jnp.int32))
+
+
+POLICIES = {p.name: p for p in
+            (StaticNominal(), BERBounded(), PhaseAware(), ClosedLoop())}

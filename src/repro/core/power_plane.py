@@ -1,0 +1,198 @@
+"""The TPU power plane: VolTune's rail abstraction mapped onto a TPU chip
+(DESIGN.md §2.2).
+
+Three logical rails per chip — VDD_CORE (MXU/VPU), VDD_HBM, VDD_IO (ICI
+SerDes, the MGTAVCC analogue) — are runtime-controlled state threaded through
+the training/serving step. Mirroring the paper's two control paths:
+
+  * in-graph controller (HW-path analogue): a pure `jax.lax` state update
+    compiled into the jitted step — deterministic, zero host round-trip;
+  * host controller (SW-path analogue): a Python policy loop between steps
+    that actuates through a real (simulated) PMBus `PowerManager` on the
+    TPU rail map, so every actuation pays the paper-characterized
+    millisecond-scale PMBus latency and is logged transaction-by-transaction.
+
+Step time/energy are derived from the compiled step's roofline terms
+(`StepProfile`), scaled by rail voltages (DVFS: f ∝ v) and the collective
+compression level ("link voltage" knob — see ecollectives.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecollectives
+from repro.core.hwspec import V5E, ChipSpec
+from repro.core.power_manager import ControlPath, PowerManager
+from repro.core.rails import TPU_V5E_RAIL_MAP
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["v_core", "v_hbm", "v_io", "comp_level", "energy_j", "step"],
+         meta_fields=[])
+@dataclasses.dataclass
+class PowerPlaneState:
+    """Per-step rail state (replicated across the mesh; SPMD-identical)."""
+    v_core: jnp.ndarray    # f32 []
+    v_hbm: jnp.ndarray     # f32 []
+    v_io: jnp.ndarray      # f32 []
+    comp_level: jnp.ndarray  # i32 [] — ecollectives compression level
+    energy_j: jnp.ndarray  # f32 [] — accumulated chip energy
+    step: jnp.ndarray      # i32 []
+
+    @staticmethod
+    def nominal(spec: ChipSpec = V5E) -> "PowerPlaneState":
+        return PowerPlaneState(
+            v_core=jnp.float32(spec.nominal_v_core),
+            v_hbm=jnp.float32(spec.nominal_v_hbm),
+            v_io=jnp.float32(spec.nominal_v_io),
+            comp_level=jnp.int32(ecollectives.LEVEL_LOSSLESS),
+            energy_j=jnp.float32(0.0),
+            step=jnp.int32(0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StepProfile:
+    """Static per-(arch, shape, mesh) roofline terms of one compiled step,
+    extracted by repro.roofline from the dry-run artifacts."""
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    ici_bytes_per_chip: float      # at lossless compression
+    grad_bytes_per_chip: float = 0.0  # gradient-sync share of ici bytes
+
+    def as_jnp(self) -> dict[str, jnp.ndarray]:
+        return {k: jnp.float32(v) for k, v in dataclasses.asdict(self).items()}
+
+
+# ---------------------------------------------------------------------------
+# Step time + power as differentiable-free jnp (usable in-graph)
+# ---------------------------------------------------------------------------
+
+def _freq_scale(v: jnp.ndarray, v_nom: float) -> jnp.ndarray:
+    return jnp.maximum(0.4, v / v_nom)
+
+
+def step_terms(profile: StepProfile, state: PowerPlaneState,
+               spec: ChipSpec = V5E, k_fraction: float = 0.25):
+    """Three roofline terms (seconds) under the current rail state."""
+    f_core = _freq_scale(state.v_core, spec.nominal_v_core)
+    f_hbm = _freq_scale(state.v_hbm, spec.nominal_v_hbm)
+    f_io = _freq_scale(state.v_io, spec.nominal_v_io)
+
+    # compression rescales only the gradient-sync share of ICI traffic
+    lossless = ecollectives.wire_cost(ecollectives.LEVEL_LOSSLESS).bytes_per_element
+    ratios = jnp.array([
+        1.0,
+        ecollectives.wire_cost(ecollectives.LEVEL_INT8).bytes_per_element / lossless,
+        ecollectives.wire_cost(ecollectives.LEVEL_INT8_TOPK, k_fraction).bytes_per_element / lossless,
+    ], jnp.float32)
+    ratio = ratios[jnp.clip(state.comp_level, 0, 2)]
+    grad_b = jnp.float32(profile.grad_bytes_per_chip)
+    other_b = jnp.float32(profile.ici_bytes_per_chip) - grad_b
+    ici_bytes = other_b + grad_b * ratio
+
+    t_comp = jnp.float32(profile.flops_per_chip) / (spec.peak_bf16_flops * f_core)
+    t_mem = jnp.float32(profile.hbm_bytes_per_chip) / (spec.hbm_bandwidth * f_hbm)
+    t_coll = ici_bytes / (spec.ici_link_bandwidth * spec.ici_links_per_chip * f_io)
+    return t_comp, t_mem, t_coll
+
+
+def step_time_s(profile: StepProfile, state: PowerPlaneState,
+                spec: ChipSpec = V5E, overlap: float = 1.0) -> jnp.ndarray:
+    """Step wall time: max of the three terms under perfect overlap
+    (overlap=1.0), or their weighted blend toward the sum when overlap<1."""
+    t_comp, t_mem, t_coll = step_terms(profile, state, spec)
+    t_max = jnp.maximum(t_comp, jnp.maximum(t_mem, t_coll))
+    t_sum = t_comp + t_mem + t_coll
+    return overlap * t_max + (1.0 - overlap) * t_sum
+
+
+def chip_power_w_jnp(state: PowerPlaneState, util_mxu, util_hbm, util_ici,
+                     spec: ChipSpec = V5E) -> jnp.ndarray:
+    sv_core = state.v_core / spec.nominal_v_core
+    sv_hbm = state.v_hbm / spec.nominal_v_hbm
+    sv_io = state.v_io / spec.nominal_v_io
+    p_core = (spec.p_core_dynamic_w * util_mxu * sv_core**3
+              + spec.p_core_static_w * sv_core**2)
+    p_hbm = spec.p_hbm_w * (0.3 + 0.7 * util_hbm) * sv_hbm**2
+    p_ici = spec.p_ici_w * (0.15 + 0.85 * util_ici) * sv_io**2
+    return p_core + p_hbm + p_ici + spec.p_other_w
+
+
+def account_step(profile: StepProfile, state: PowerPlaneState,
+                 spec: ChipSpec = V5E, overlap: float = 1.0
+                 ) -> tuple[PowerPlaneState, dict[str, jnp.ndarray]]:
+    """Advance the energy accumulator by one step; returns (state', metrics).
+    Pure jnp — runs inside the jitted step (in-graph controller path)."""
+    t_comp, t_mem, t_coll = step_terms(profile, state, spec)
+    t_step = step_time_s(profile, state, spec, overlap)
+    util_mxu = t_comp / t_step
+    util_hbm = t_mem / t_step
+    util_ici = t_coll / t_step
+    p = chip_power_w_jnp(state, util_mxu, util_hbm, util_ici, spec)
+    e = p * t_step
+    new = dataclasses.replace(state, energy_j=state.energy_j + e,
+                              step=state.step + 1)
+    metrics = {
+        "t_step_s": t_step, "t_comp_s": t_comp, "t_mem_s": t_mem,
+        "t_coll_s": t_coll, "power_w": p, "energy_step_j": e,
+        "util_mxu": util_mxu, "util_hbm": util_hbm, "util_ici": util_ici,
+    }
+    return new, metrics
+
+
+# ---------------------------------------------------------------------------
+# Host controller (SW-path analogue): actuates via simulated PMBus
+# ---------------------------------------------------------------------------
+
+class HostPowerController:
+    """Python-side controller that drives the TPU logical rails through the
+    same PowerManager/PMBus stack as the KC705 (paper §III-C analogue).
+
+    Every actuation pays the characterized PMBus cost: the returned
+    `actuation_latency_s` is the simulated control-path latency (command
+    sequence + regulator settling), and transactions are logged."""
+
+    LANES = {"VDD_CORE": 0, "VDD_HBM": 1, "VDD_IO": 2}
+
+    def __init__(self, path: ControlPath | str = ControlPath.SOFTWARE,
+                 clock_hz: int = 400_000, spec: ChipSpec = V5E):
+        self.spec = spec
+        self.pm = PowerManager(TPU_V5E_RAIL_MAP, path=path, clock_hz=clock_hz)
+        self.actuations = 0
+        self.actuation_seconds = 0.0
+
+    def apply(self, state: PowerPlaneState) -> PowerPlaneState:
+        """Push the requested rail voltages through PMBus; returns the state
+        with voltages replaced by what the regulators actually achieved
+        (clamp + LINEAR16 quantization + settling)."""
+        wanted = {"VDD_CORE": float(state.v_core), "VDD_HBM": float(state.v_hbm),
+                  "VDD_IO": float(state.v_io)}
+        t0 = self.pm.clock.now
+        achieved = {}
+        for name, volts in wanted.items():
+            lane = self.LANES[name]
+            cur = self.pm.rail_voltage_now(lane)
+            if abs(cur - volts) > 1e-4:
+                res = self.pm.set_voltage(lane, volts)
+                if res.ok:
+                    # wait out regulator settling (1% band)
+                    ch = self.pm.channels[lane]
+                    self.pm.clock.advance(ch.settle_time_to_band(volts * 0.01))
+                self.actuations += 1
+            achieved[name] = self.pm.rail_voltage_now(lane)
+        self.actuation_seconds += self.pm.clock.now - t0
+        return dataclasses.replace(
+            state,
+            v_core=jnp.float32(achieved["VDD_CORE"]),
+            v_hbm=jnp.float32(achieved["VDD_HBM"]),
+            v_io=jnp.float32(achieved["VDD_IO"]),
+        )
+
+    def readback(self) -> dict[str, float]:
+        return {name: self.pm.get_voltage(lane) for name, lane in self.LANES.items()}

@@ -1,0 +1,69 @@
+"""Settling-time detection (paper §V-D, Fig 9).
+
+Given a sampled voltage trace v[0..T] during a transition:
+  (a) stable-voltage estimate v_avg = mean of the last N samples,
+  (b) stability band v_avg +/- x%,
+  (c) first index t_s such that N consecutive samples starting at t_s are
+      inside the band,
+  (d) settling time = t[t_s] - t[0].
+
+Robust to transient overshoot and measurement noise, and reproducible across
+PMBus clock rates / control paths (the paper's stated design goals). Written
+in jnp so it can run in-graph on telemetry streams (the in-graph controller
+uses it) as well as on host numpy traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SettlingResult:
+    settled: bool
+    settling_time_s: float
+    t_s_index: int
+    v_avg: float
+    band_v: float
+
+
+def _stable_window_start(stable: jnp.ndarray, n: int) -> jnp.ndarray:
+    """First index i such that stable[i:i+n] are all True, else -1."""
+    c = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(stable.astype(jnp.int32))])
+    win = c[n:] - c[:-n]          # win[i] = number of stable samples in [i, i+n)
+    hit = win == n
+    idx = jnp.argmax(hit)         # first True (0 if none — disambiguate below)
+    return jnp.where(jnp.any(hit), idx, -1)
+
+
+def settling_time(times, volts, *, n: int = 8, band_pct: float = 1.0) -> SettlingResult:
+    """Detect the settling time of a sampled transition (paper Fig 9).
+
+    `n` is the window length N (both for the stable-voltage average and the
+    consecutive-stability requirement); `band_pct` is x in the +/- x% band.
+    """
+    t = np.asarray(times, np.float64)  # host-side: keep full time resolution
+    v = jnp.asarray(volts)
+    if v.shape[0] < n + 1:
+        raise ValueError(f"need more than n={n} samples, got {v.shape[0]}")
+    v_avg = jnp.mean(v[-n:])
+    band = jnp.abs(v_avg) * (band_pct / 100.0)
+    stable = jnp.abs(v - v_avg) <= band
+    ts_idx = _stable_window_start(stable, n)
+    settled = bool(ts_idx >= 0)
+    st = float(t[ts_idx] - t[0]) if settled else float("nan")
+    return SettlingResult(settled, st, int(ts_idx), float(v_avg), float(band))
+
+
+def settling_time_jax(times: jnp.ndarray, volts: jnp.ndarray,
+                      *, n: int = 8, band_pct: float = 1.0) -> jnp.ndarray:
+    """Pure-jnp scalar variant for in-graph use: returns settling time in
+    seconds, or NaN when the trace never stabilizes. jit/vmap-safe."""
+    v_avg = jnp.mean(volts[-n:])
+    band = jnp.abs(v_avg) * (band_pct / 100.0)
+    stable = jnp.abs(volts - v_avg) <= band
+    idx = _stable_window_start(stable, n)
+    return jnp.where(idx >= 0, times[idx] - times[0], jnp.nan)

@@ -1,0 +1,66 @@
+"""Telemetry plumbing: per-step records (the READ_VOUT/READ_IOUT analogue of
+the training system) and a host-side ring log used by host controllers,
+benchmarks and the trainer."""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    loss: float
+    grad_error: float
+    t_step_s: float
+    power_w: float
+    energy_step_j: float
+    comp_level: int
+    v_core: float
+    v_hbm: float
+    v_io: float
+    extras: dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class TelemetryLog:
+    """Bounded host-side telemetry store (ring buffer)."""
+
+    def __init__(self, capacity: int = 100_000):
+        self.records: collections.deque[StepRecord] = collections.deque(maxlen=capacity)
+
+    def append_from(self, step: int, loss, metrics: dict[str, Any], state) -> StepRecord:
+        get = lambda x: float(jax.device_get(x))
+        rec = StepRecord(
+            step=step,
+            loss=get(loss),
+            grad_error=get(metrics.get("grad_error", 0.0)),
+            t_step_s=get(metrics.get("t_step_s", 0.0)),
+            power_w=get(metrics.get("power_w", 0.0)),
+            energy_step_j=get(metrics.get("energy_step_j", 0.0)),
+            comp_level=int(jax.device_get(state.comp_level)),
+            v_core=get(state.v_core), v_hbm=get(state.v_hbm), v_io=get(state.v_io),
+            extras={k: get(v) for k, v in metrics.items()
+                    if k not in ("grad_error", "t_step_s", "power_w", "energy_step_j")
+                    and np.ndim(jax.device_get(v)) == 0},
+        )
+        self.records.append(rec)
+        return rec
+
+    def totals(self) -> dict[str, float]:
+        if not self.records:
+            return {"steps": 0, "energy_j": 0.0, "mean_power_w": 0.0, "time_s": 0.0}
+        e = sum(r.energy_step_j for r in self.records)
+        t = sum(r.t_step_s for r in self.records)
+        return {"steps": len(self.records), "energy_j": e,
+                "mean_power_w": e / max(t, 1e-12), "time_s": t}
+
+    def dump_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            for r in self.records:
+                f.write(json.dumps(dataclasses.asdict(r)) + "\n")

@@ -1,0 +1,154 @@
+"""Public jit'd wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas implementations run natively; elsewhere (this container is
+CPU-only) the mathematically-identical XLA reference path executes, and the
+Pallas bodies are validated in interpret mode by the kernel test suite.
+Set REPRO_PALLAS=interpret to force interpret-mode Pallas everywhere
+(slow; used by tests)."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _pallas_mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env == "interpret":
+        return "interpret"
+    if env == "off":
+        return "off"
+    return "native" if jax.default_backend() == "tpu" else "off"
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal", "group",
+                                             "sliding_window", "use_flash"))
+def flash_attention(q, k, v, *, causal: bool = True, group: int = 1,
+                    sliding_window: int = 0, use_flash: bool = True):
+    """q [B,T,Hq,Dh], k/v [B,S,Hkv,Dh] -> [B,T,Hq,Dh]."""
+    mode = _pallas_mode() if use_flash else "off"
+    if mode != "off":
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, group=group,
+                                  sliding_window=sliding_window,
+                                  interpret=(mode == "interpret"))
+    return ref.mha_reference(q, k, v, causal=causal, group=group,
+                             sliding_window=sliding_window)
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def decode_attention(q, k, v, lengths, *, group: int = 1):
+    """q [B,1,Hq,Dh] against cache k/v [B,S,Hkv,Dh]; lengths [B] valid slots."""
+    mode = _pallas_mode()
+    if mode != "off":
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(q, k, v, lengths, group=group,
+                                   interpret=(mode == "interpret"))
+    return ref.mha_reference(q, k, v, causal=False, group=group,
+                             lengths=lengths)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunked scan
+#
+# The Pallas scans run the forward; the backward recomputes through the
+# differentiable jnp reference (identical math) via custom_vjp, so training
+# through the kernels is exact on TPU. Off-TPU the reference runs directly.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _mamba2_kernel_vjp(x, dt, A, B, C, D, chunk, interpret, init_state):
+    from repro.kernels import mamba2_ssd as m2
+    return m2.mamba2_ssd(x, dt, A, B, C, D, chunk=chunk,
+                         init_state=init_state, interpret=interpret)
+
+
+def _mamba2_fwd(x, dt, A, B, C, D, chunk, interpret, init_state):
+    out = _mamba2_kernel_vjp(x, dt, A, B, C, D, chunk, interpret, init_state)
+    return out, (x, dt, A, B, C, D, init_state)
+
+
+def _mamba2_bwd(chunk, interpret, res, g):
+    x, dt, A, B, C, D, init_state = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.mamba2_scan_reference(*a[:6], init_state=a[6]),
+        x, dt, A, B, C, D,
+        init_state if init_state is not None
+        else jnp.zeros((x.shape[0], x.shape[2], B.shape[3], x.shape[3]),
+                       jnp.float32))
+    grads = vjp(g)
+    return grads[:6] + (grads[6] if init_state is not None else None,)
+
+
+_mamba2_kernel_vjp.defvjp(_mamba2_fwd, _mamba2_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba2_scan(x, dt, A, B, C, D, *, chunk: int = 128, init_state=None):
+    mode = _pallas_mode()
+    if mode != "off":
+        return _mamba2_kernel_vjp(x, dt, A, B, C, D, chunk,
+                                  mode == "interpret", init_state)
+    return ref.mamba2_scan_reference(x, dt, A, B, C, D, init_state=init_state)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 recurrence (same custom_vjp pattern)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _rwkv6_kernel_vjp(r, k, v, w, u, chunk, interpret, init_state):
+    from repro.kernels import rwkv6_scan as r6
+    return r6.rwkv6_scan(r, k, v, w, u, chunk=chunk,
+                         init_state=init_state, interpret=interpret)
+
+
+def _rwkv6_fwd(r, k, v, w, u, chunk, interpret, init_state):
+    out = _rwkv6_kernel_vjp(r, k, v, w, u, chunk, interpret, init_state)
+    return out, (r, k, v, w, u, init_state)
+
+
+def _rwkv6_bwd(chunk, interpret, res, g):
+    r, k, v, w, u, init_state = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.rwkv6_scan_reference(*a[:5], init_state=a[5]),
+        r, k, v, w, u,
+        init_state if init_state is not None
+        else jnp.zeros((r.shape[0], r.shape[2], r.shape[3], r.shape[3]),
+                       jnp.float32))
+    grads = vjp(g)
+    return grads[:5] + (grads[5] if init_state is not None else None,)
+
+
+_rwkv6_kernel_vjp.defvjp(_rwkv6_fwd, _rwkv6_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 64, init_state=None):
+    mode = _pallas_mode()
+    if mode != "off":
+        return _rwkv6_kernel_vjp(r, k, v, w, u, chunk,
+                                 mode == "interpret", init_state)
+    return ref.rwkv6_scan_reference(r, k, v, w, u, init_state=init_state)
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization codec
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_int8(x, *, block: int = 256):
+    mode = _pallas_mode()
+    if mode != "off":
+        from repro.kernels import quant_codec as qc
+        return qc.quantize_int8(x, block=block, interpret=(mode == "interpret"))
+    return ref.quantize_int8_reference(x, block=block)

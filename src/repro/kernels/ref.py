@@ -1,0 +1,149 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: kernel tests sweep shapes/dtypes and
+assert_allclose against these, and non-TPU backends execute them directly
+(the kernels target TPU; see kernels/__init__.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Attention (flash_attention / decode_attention oracle)
+# ---------------------------------------------------------------------------
+
+def mha_reference(q, k, v, *, causal: bool = True, group: int = 1,
+                  sliding_window: int = 0, lengths=None):
+    """q [B,T,Hq,Dh], k/v [B,S,Hkv,Dh] with Hq = group * Hkv.
+
+    causal assumes aligned positions (self-attention). `lengths` [B] masks
+    key slots >= length (decode against a partially-filled cache).
+    Accumulates in f32, returns q.dtype."""
+    B, T, Hq, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert Hq == group * Hkv, (Hq, group, Hkv)
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(Dh))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to match q heads
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+    scores = jnp.einsum("bthk,bshk->bhts", qf, kf)
+    neg = jnp.float32(-1e30)
+    if causal:
+        i = jnp.arange(T)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = j <= i
+        if sliding_window:
+            mask = mask & (j > i - sliding_window)
+        scores = jnp.where(mask[None, None], scores, neg)
+    if lengths is not None:
+        valid = jnp.arange(S)[None, :] < lengths[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshk->bthk", probs, vf)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD oracle (sequential scan over time)
+# ---------------------------------------------------------------------------
+
+def mamba2_scan_reference(x, dt, A, B, C, D, *, init_state=None):
+    """Sequential state-space scan (the SSD recurrence, Mamba2 eq. form).
+
+    x  [Bt, T, H, P]   input per head (P = head channel dim)
+    dt [Bt, T, H]      softplus-activated step sizes (>0)
+    A  [H]             negative scalar decay per head (A < 0)
+    B  [Bt, T, G, N]   input->state projection (G groups, N = state dim)
+    C  [Bt, T, G, N]   state->output projection
+    D  [H]             skip connection
+    Heads are split evenly over groups: head h uses group h // (H // G).
+
+    state s_{t} = exp(dt_t * A) * s_{t-1} + dt_t * B_t x_t^T   (per head: [N,P])
+    y_t = C_t . s_t + D * x_t
+    Returns (y [Bt,T,H,P], final_state [Bt,H,N,P]).
+    """
+    Bt, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    hpg = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    Bh = jnp.repeat(Bf, hpg, axis=2)  # [Bt,T,H,N]
+    Ch = jnp.repeat(Cf, hpg, axis=2)
+
+    s0 = (jnp.zeros((Bt, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # [Bt,H,P],[Bt,H],[Bt,H,N],[Bt,H,N]
+        decay = jnp.exp(dtt * Af)[..., None, None]          # [Bt,H,1,1]
+        upd = (dtt[..., None, None]
+               * bt[..., :, None] * xt[..., None, :])       # [Bt,H,N,P]
+        s = s * decay + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + Df[None, None, :, None] * xf
+    return y.astype(x.dtype), s_fin
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 oracle (data-dependent decay linear attention)
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan_reference(r, k, v, w, u, *, init_state=None):
+    """RWKV6 ("Finch") recurrence, sequential oracle.
+
+    r,k,v [B,T,H,Dh]; w [B,T,H,Dh] per-step decay logits (w<0 after -exp
+    transform applied by caller: here w is the *log-decay*, decay=exp(w));
+    u [H,Dh] bonus for the current token.
+
+    state S [B,H,Dh,Dh] (key-major):
+      y_t = (u * k_t) v_t^T . r_t  +  S_{t-1} . r_t
+      S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+    Returns (y [B,T,H,Dh], final_state).
+    """
+    B, T, H, Dh = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    s0 = (jnp.zeros((B, H, Dh, Dh), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # each [B,H,Dh]
+        att = s + (uf * kt)[..., :, None] * vt[..., None, :]   # [B,H,Dk,Dv]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        s = s * jnp.exp(wt)[..., :, None] + kt[..., :, None] * vt[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_fin
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 quantization oracle (ecollectives codec)
+# ---------------------------------------------------------------------------
+
+def quantize_int8_reference(x, block: int = 256):
+    flat = jnp.ravel(x)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

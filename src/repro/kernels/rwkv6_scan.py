@@ -1,0 +1,104 @@
+"""RWKV6 recurrence as a Pallas TPU kernel (chunked).
+
+Unlike Mamba2's scalar-per-head decay, RWKV6's decay is a per-channel vector
+(data-dependent), so the clean matmul dual does not apply directly. The
+kernel processes chunks sequentially (grid axis) keeping the [Dh, Dh] state
+in VMEM scratch, and walks the chunk with an unrolled fori loop of rank-1
+outer-product updates — VPU work with the state resident in VMEM, which is
+the part XLA does badly (it spills the state to HBM every step).
+
+  y_t = r_t . (S + (u * k_t) v_t^T)
+  S   = diag(exp(w_t)) S + k_t v_t^T          (w_t <= 0: log-decay)
+
+Backward: ops.py wires jax.custom_vjp with the differentiable jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sfin_ref,
+            s_scr, *, chunk, n_chunks, n_heads):
+    ci = pl.program_id(1)
+    h = pl.program_id(0) % n_heads
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0]
+
+    r = r_ref[0].astype(jnp.float32)    # [Lc, Dh]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)    # log-decay, <= 0
+    u = u_ref[h].astype(jnp.float32)    # [Dh]
+
+    def step(t, carry):
+        s, y = carry
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)        # [1, Dh]
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
+        kv = kt.T * vt                                       # [Dh, Dh] rank-1
+        att = s + (u[:, None] * kv)
+        yt = jax.lax.dot_general(rt, att, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [1,Dh]
+        s = s * jnp.exp(wt).T + kv
+        y = jax.lax.dynamic_update_slice_in_dim(y, yt, t, 0)
+        return s, y
+
+    y0 = jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    s_fin, y = jax.lax.fori_loop(0, chunk, step, (s_scr[...], y0))
+    s_scr[...] = s_fin
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        sfin_ref[0] = s_fin
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk=DEFAULT_CHUNK, init_state=None,
+               interpret=False):
+    """r,k,v,w [B,T,H,Dh] (w = log-decay <= 0); u [H,Dh].
+    Returns (y [B,T,H,Dh], final_state [B,H,Dh,Dh])."""
+    B, T, H, Dh = r.shape
+    chunk = min(chunk, T)
+    if T % chunk:
+        raise ValueError(f"T={T} must tile by chunk={chunk}")
+    n_chunks = T // chunk
+    if init_state is None:
+        init_state = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+    def flat(a):
+        return jnp.swapaxes(a, 1, 2).reshape(B * H, T, Dh)
+
+    s0 = init_state.reshape(B * H, Dh, Dh)
+    row = lambda bh, ci: (bh, ci, 0)
+    y, sfin = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks, n_heads=H),
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Dh), row),
+            pl.BlockSpec((1, chunk, Dh), row),
+            pl.BlockSpec((1, chunk, Dh), row),
+            pl.BlockSpec((1, chunk, Dh), row),
+            pl.BlockSpec(memory_space=pl.ANY),  # u [H, Dh]
+            pl.BlockSpec((1, Dh, Dh), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, Dh), row),
+            pl.BlockSpec((1, Dh, Dh), lambda bh, ci: (bh, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((Dh, Dh), jnp.float32)],
+        out_shape=(jax.ShapeDtypeStruct((B * H, T, Dh), r.dtype),
+                   jax.ShapeDtypeStruct((B * H, Dh, Dh), jnp.float32)),
+        interpret=interpret,
+    )(flat(r), flat(k), flat(v), flat(w), jnp.asarray(u, jnp.float32), s0)
+    return jnp.swapaxes(y.reshape(B, H, T, Dh), 1, 2), sfin.reshape(B, H, Dh, Dh)

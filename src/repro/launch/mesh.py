@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Function (not module-level constant) so importing never touches jax device
+state. Single pod = 16x16 (256 chips of a v5e pod) over ('data', 'model');
+multi-pod adds a leading 'pod' axis: (2, 16, 16) = 512 chips.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} — run under "
+            f"launch/dryrun.py (which forces 512 host devices) or real hardware")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for tests (requires the test process to have forced enough
+    host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             devices=jax.devices()[: pod * data * model])
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,53 @@
+"""Serving launcher: batched prefill+decode with the power plane.
+
+    python -m repro.launch.serve --arch qwen2p5_14b --tiny --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.policy import POLICIES
+from repro.core.power_plane import StepProfile
+from repro.models import registry
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--policy", choices=list(POLICIES), default="phase-aware")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=args.tiny or True)
+    if cfg.family == "encdec":
+        raise SystemExit("whisper serving uses cross-attention prefill; see "
+                         "tests/test_models_smoke.py::test_arch_decode_step_smoke")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+    engine = ServeEngine(
+        cfg, params, max_len=args.prompt_len + args.max_new + 8,
+        batch_size=args.batch,
+        prefill_profile=StepProfile(2.0 * n * args.batch * args.prompt_len,
+                                    2.0 * n, 0.0),
+        decode_profile=StepProfile(2.0 * n * args.batch, 2.0 * n, 0.0),
+        policy=POLICIES[args.policy])
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+    out = engine.generate(prompts, max_new_tokens=args.max_new)
+    print(f"{cfg.name} ({n/1e6:.1f}M): generated {out.shape} tokens")
+    print("summary:", engine.summary())
+
+
+if __name__ == "__main__":
+    main()

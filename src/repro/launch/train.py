@@ -1,0 +1,90 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch minicpm_2b --tiny --steps 100
+    python -m repro.launch.train --arch grok1_314b --dry-run   (lower only)
+
+On real hardware the full configs train on the production mesh; on this CPU
+container use --tiny (reduced same-family config) or --dry-run (AOT compile
+check via launch/dryrun.py)."""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.policy import POLICIES
+from repro.core.power_plane import HostPowerController, StepProfile
+from repro.data.pipeline import DataConfig, SyntheticLM, stub_frontend_inputs
+from repro.models import registry
+from repro.optim import adamw
+from repro.optim.schedule import wsd
+from repro.train.step import StepConfig, jit_train_step, make_train_step
+from repro.train.trainer import (FaultConfig, Trainer, TrainerConfig,
+                                 initial_plane_and_ef)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="AOT lower+compile on the production mesh instead")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--policy", choices=list(POLICIES), default="phase-aware")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import subprocess
+        import sys
+        raise SystemExit(subprocess.call(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+             "--shape", "train_4k", "--mesh", "both"]))
+
+    cfg = get_config(args.arch, tiny=args.tiny or True)
+    api = registry.build(cfg, remat="none" if args.tiny else "full")
+    params = api.init(jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params (tiny={args.tiny})")
+
+    opt_cfg = adamw.AdamWConfig()
+    opt = adamw.init_state(params, opt_cfg)
+    plane, ef = initial_plane_and_ef(params)
+    tokens = args.batch * args.seq
+    profile = StepProfile(6.0 * n * tokens, 14.0 * n, 4.0 * n, 4.0 * n)
+    sched = lambda s: wsd(s, peak_lr=3e-4, warmup_steps=10,
+                          stable_steps=int(args.steps * 0.7),
+                          decay_steps=int(args.steps * 0.2))
+    step = jit_train_step(make_train_step(
+        lambda p, b: api.loss_fn(p, b), opt_cfg, sched, profile,
+        StepConfig(policy=POLICIES[args.policy])), donate=False)
+
+    class _Data(SyntheticLM):
+        def jax_batch(self, s, extra=None):
+            return super().jax_batch(s, stub_frontend_inputs(
+                cfg, cfg.family, args.batch))
+
+    data = _Data(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    if not args.resume:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    trainer = Trainer(step, data, TrainerConfig(
+        total_steps=args.steps, ckpt_every=max(10, args.steps // 5),
+        ckpt_dir=args.ckpt_dir, host_controller=HostPowerController()),
+        {"params": params, "opt": opt, "plane": plane, "ef": ef})
+    if args.resume and trainer.maybe_restore():
+        print(f"resumed from step {trainer.start_step}")
+    log = trainer.run()
+    rec = list(log.records)
+    print(f"loss {rec[0].loss:.4f} -> {rec[-1].loss:.4f}; "
+          f"summary: {trainer.summary()}")
+
+
+if __name__ == "__main__":
+    main()

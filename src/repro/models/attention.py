@@ -1,0 +1,149 @@
+"""GQA attention with TP head padding, rotary embeddings, causal/windowed
+masking, prefill and single-token decode paths.
+
+The O(T^2) core dispatches to the Pallas flash kernel via repro.kernels.ops
+(XLA reference fallback on non-TPU backends); this module owns projections,
+rotary, KV-cache handling and sharding annotations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import HeadPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    head_dim: int
+    plan: HeadPlan
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    causal: bool = True
+    sliding_window: int = 0      # 0 = full attention
+    use_rotary: bool = True      # False: learned/absolute positions upstream
+
+
+def init_attention(key, spec: AttnSpec, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    D, Dh = spec.d_model, spec.head_dim
+    nq, nkv = spec.plan.n_q_pad, spec.plan.n_kv_pad
+    p = {
+        "wq": common.dense_init(ks[0], (D, nq, Dh), D, dtype),
+        "wk": common.dense_init(ks[1], (D, nkv, Dh), D, dtype),
+        "wv": common.dense_init(ks[2], (D, nkv, Dh), D, dtype),
+        "wo": common.dense_init(ks[3], (nq, Dh, D), nq * Dh, dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((nq, Dh), dtype)
+        p["bk"] = jnp.zeros((nkv, Dh), dtype)
+        p["bv"] = jnp.zeros((nkv, Dh), dtype)
+    # zero the padded q slots so padding stays numerically exact under training
+    mask = jnp.asarray(spec.plan.q_pad_mask, dtype)
+    p["wq"] = p["wq"] * mask[None, :, None]
+    p["wo"] = p["wo"] * mask[:, None, None]
+    return p
+
+
+def _project_qkv(params, x, spec: AttnSpec, positions):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if spec.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if spec.use_rotary:
+        sin, cos = common.rotary_angles(positions, spec.head_dim, spec.rope_theta)
+        q = common.apply_rotary(q, sin, cos)
+        k = common.apply_rotary(k, sin, cos)
+    return q, k, v
+
+
+def attention_full(params, x, spec: AttnSpec, positions=None, *,
+                   cross_kv=None, use_flash: bool = True):
+    """Training / prefill attention. x [B,T,D]; returns ([B,T,D], (k, v)).
+
+    cross_kv: optional precomputed (k, v) for encoder-decoder cross-attention
+    (no rotary applied on either side in that case)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+    if cross_kv is None:
+        q, k, v = _project_qkv(params, x, spec, positions)
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+        if spec.qkv_bias:
+            q = q + params["bq"]
+        k, v = cross_kv
+
+    from repro.kernels import ops as kops
+    out = kops.flash_attention(
+        q, k, v,
+        causal=spec.causal and cross_kv is None,
+        group=spec.plan.group,
+        sliding_window=spec.sliding_window,
+        use_flash=use_flash,
+    )
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, (k, v)
+
+
+def encode_kv(params, x_enc, spec: AttnSpec):
+    """Precompute cross-attention K/V from encoder output (enc-dec models)."""
+    k = jnp.einsum("btd,dhk->bthk", x_enc, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x_enc, params["wv"])
+    if spec.qkv_bias:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return k, v
+
+
+def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype=jnp.bfloat16):
+    nkv, Dh = spec.plan.n_kv_pad, spec.head_dim
+    window = spec.sliding_window or max_len
+    size = min(max_len, window)
+    return {
+        "k": jnp.zeros((batch, size, nkv, Dh), dtype),
+        "v": jnp.zeros((batch, size, nkv, Dh), dtype),
+    }
+
+
+def attention_decode(params, x, cache, cur_index, spec: AttnSpec, *,
+                     cross_kv=None):
+    """Single-token decode. x [B,1,D]; cache holds k/v [B,S,nkv,Dh];
+    cur_index [] int32 — number of tokens already in the cache.
+
+    Returns (y [B,1,D], new_cache). Sliding-window caches are rolling
+    (position cur_index % window)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_index, jnp.int32)
+    if cross_kv is None:
+        q, k, v = _project_qkv(params, x, spec, positions)
+        S = cache["k"].shape[1]
+        slot = cur_index % S
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        cache = {"k": ck, "v": cv}
+        kk, vv = ck, cv
+        # valid positions: < cur_index+1 (non-window) or everything once wrapped
+        n_valid = jnp.minimum(cur_index + 1, S)
+        lengths = jnp.full((B,), n_valid, jnp.int32)
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+        if spec.qkv_bias:
+            q = q + params["bq"]
+        kk, vv = cross_kv
+        lengths = jnp.full((B,), kk.shape[1], jnp.int32)
+
+    from repro.kernels import ops as kops
+    out = kops.decode_attention(q, kk, vv, lengths, group=spec.plan.group)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, cache

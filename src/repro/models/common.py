@@ -1,0 +1,179 @@
+"""Shared model building blocks: norms, rotary embeddings, initializers,
+losses, and the TP head-padding planner.
+
+Everything is functional: `init_*` builds parameter pytrees, `apply`-style
+functions are pure. No framework dependency beyond jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def default_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32, scale=1.0):
+    """Truncated-normal fan-in init (LLM standard)."""
+    std = scale / math.sqrt(max(1, in_axis_size))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rotary_angles(positions, head_dim: int, theta: float = 1e4):
+    """positions [*, T] int -> (sin, cos) each [*, T, head_dim//2] f32."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rotary(x, sin, cos):
+    """x [..., T, H, Dh]; sin/cos [..., T, Dh//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Mean token cross-entropy with optional z-loss; logits [*, V] f32-cast.
+    labels == -1 are masked out (padding)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+
+
+# ---------------------------------------------------------------------------
+# Head-padding planner: make any (n_q, n_kv) GQA layout shard exactly on a
+# tp-way model axis (DESIGN.md §5). Padded q heads have zeroed projections
+# (their outputs are multiplied by zeroed W_o rows => numerically exact);
+# kv heads are *duplicated* (gather of original rows => numerically exact).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HeadPlan:
+    n_q: int                  # original query heads
+    n_kv: int                 # original kv heads
+    n_q_pad: int              # padded query heads (multiple of tp)
+    n_kv_pad: int             # padded kv heads (multiple of tp)
+    group: int                # n_q_pad // n_kv_pad
+    kv_src: tuple[int, ...]   # len n_kv_pad: original kv head feeding each slot
+    q_src: tuple[int, ...]    # len n_q_pad: original q head per slot, -1 = zero pad
+
+    @property
+    def q_pad_mask(self) -> np.ndarray:
+        return np.asarray([s >= 0 for s in self.q_src])
+
+
+def plan_head_padding(n_q: int, n_kv: int, tp: int) -> HeadPlan:
+    """Construct an exact TP-shardable padded head layout.
+
+    Invariants (property-tested):
+      * n_q_pad % tp == 0 and n_kv_pad % tp == 0
+      * uniform group size G = n_q_pad / n_kv_pad (integer)
+      * q slot i attends kv slot i // G, whose source equals the original
+        kv head of the original q head in slot i (when not a pad slot).
+    """
+    if n_q % n_kv != 0:
+        raise ValueError(f"GQA requires n_kv | n_q, got {n_q=}, {n_kv=}")
+    g_orig = n_q // n_kv
+
+    if n_q == n_kv and n_kv % tp != 0:
+        # MHA: zero-pad both q and kv to the same padded count
+        n_kv_pad = tp * math.ceil(n_q / tp)
+        n_q_pad = n_kv_pad
+        kv_src = [k if k < n_kv else -1 for k in range(n_kv_pad)]
+        q_src = [k if k < n_q else -1 for k in range(n_q_pad)]
+    else:
+        # GQA/MQA (or already-divisible MHA): duplicate kv heads to the
+        # smallest multiple of both n_kv and tp, split q groups across copies
+        n_kv_pad = n_kv if n_kv % tp == 0 else math.lcm(n_kv, tp)
+        dup = n_kv_pad // n_kv
+        g = max(1, math.ceil(g_orig / dup))
+        kv_src, q_src = [], []
+        for k in range(n_kv):
+            qs = list(range(k * g_orig, (k + 1) * g_orig))
+            for c in range(dup):
+                kv_src.append(k)
+                chunk = qs[c * g:(c + 1) * g]
+                chunk += [-1] * (g - len(chunk))
+                q_src.extend(chunk)
+        n_q_pad = len(q_src)
+
+    if n_q_pad % tp != 0 or n_kv_pad % tp != 0 or n_q_pad % n_kv_pad != 0:
+        raise AssertionError(
+            f"planner failed: q={n_q}->{n_q_pad} kv={n_kv}->{n_kv_pad} tp={tp}")
+    return HeadPlan(n_q, n_kv, n_q_pad, n_kv_pad, n_q_pad // n_kv_pad,
+                    tuple(kv_src), tuple(q_src))
+
+
+def pad_heads_q(w: jnp.ndarray, plan: HeadPlan) -> jnp.ndarray:
+    """w [..., n_q, Dh] -> [..., n_q_pad, Dh], zero rows at pad slots."""
+    src = np.asarray(plan.q_src)
+    gathered = jnp.take(w, jnp.asarray(np.maximum(src, 0)), axis=-2)
+    mask = jnp.asarray((src >= 0), w.dtype)[..., :, None]
+    return gathered * mask
+
+
+def pad_heads_kv(w: jnp.ndarray, plan: HeadPlan) -> jnp.ndarray:
+    """w [..., n_kv, Dh] -> [..., n_kv_pad, Dh] by duplication (or zero pad
+    for MHA layouts where kv_src == -1)."""
+    src = np.asarray(plan.kv_src)
+    gathered = jnp.take(w, jnp.asarray(np.maximum(src, 0)), axis=-2)
+    mask = jnp.asarray((src >= 0), w.dtype)[..., :, None]
+    return gathered * mask

@@ -1,0 +1,179 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: `input_specs()` supplies
+precomputed frame embeddings [B, enc_seq, D] (what the two conv1d layers
+would produce). Encoder: pre-LN non-causal MHA + GELU MLP with learned
+positions. Decoder: causal self-attn + cross-attn + GELU MLP.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common, mlp
+from repro.models.attention import AttnSpec
+from repro.parallel.sharding import constrain
+
+
+def enc_attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(d_model=cfg.d_model, head_dim=cfg.head_dim_,
+                    plan=cfg.head_plan(), qkv_bias=True, causal=False,
+                    use_rotary=False)
+
+
+def dec_attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(d_model=cfg.d_model, head_dim=cfg.head_dim_,
+                    plan=cfg.head_plan(), qkv_bias=True, causal=True,
+                    use_rotary=False)
+
+
+def _init_ln(dtype, d):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(x, p, eps):
+    return common.layer_norm(x, p["w"], p["b"], eps)
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    D = cfg.d_model
+    return {"ln1": _init_ln(dtype, D),
+            "attn": attn.init_attention(k1, enc_attn_spec(cfg), dtype),
+            "ln2": _init_ln(dtype, D),
+            "mlp": mlp.init_gelu_mlp(k2, D, cfg.d_ff, dtype)}
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.d_model
+    return {"ln1": _init_ln(dtype, D),
+            "self_attn": attn.init_attention(k1, dec_attn_spec(cfg), dtype),
+            "ln2": _init_ln(dtype, D),
+            "cross_attn": attn.init_attention(k2, enc_attn_spec(cfg), dtype),
+            "ln3": _init_ln(dtype, D),
+            "mlp": mlp.init_gelu_mlp(k3, D, cfg.d_ff, dtype)}
+
+
+def init_encdec(key, cfg: ModelConfig):
+    dtype = common.default_dtype(cfg.dtype)
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    keys = jax.random.split(key, 8)
+    ne = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "enc_pos": common.embed_init(keys[0], (cfg.enc_seq_len, D), dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(
+            jnp.stack(jax.random.split(keys[1], ne))),
+        "enc_ln": _init_ln(dtype, D),
+        "embed": common.embed_init(keys[2], (Vp, D), dtype),
+        "dec_pos": common.embed_init(keys[3], (4 * 32768, D), dtype),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(
+            jnp.stack(jax.random.split(keys[4], cfg.n_layers))),
+        "dec_ln": _init_ln(dtype, D),
+        "lm_head": common.dense_init(keys[5], (D, Vp), D, dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames [B, enc_seq, D] (stub frontend output) -> encoder states."""
+    x = frames.astype(common.default_dtype(cfg.dtype))
+    x = x + params["enc_pos"][None, : x.shape[1]]
+    x = constrain(x, "batch", "seq", "embed")
+    spec = enc_attn_spec(cfg)
+
+    def body(x, p):
+        h = _ln(x, p["ln1"], cfg.norm_eps)
+        a, _ = attn.attention_full(p["attn"], h, spec)
+        x = x + a
+        h = _ln(x, p["ln2"], cfg.norm_eps)
+        return x + mlp.gelu_mlp(p["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return _ln(x, params["enc_ln"], cfg.norm_eps)
+
+
+def cross_kv(params, enc_states, cfg: ModelConfig):
+    """Precompute per-decoder-layer cross-attention K/V (stacked [L,...])."""
+    spec = enc_attn_spec(cfg)
+
+    def body(_, p):
+        k, v = attn.encode_kv(p["cross_attn"], enc_states, spec)
+        return None, {"k": k, "v": v}
+
+    _, kv = jax.lax.scan(body, None, params["dec_blocks"])
+    return kv
+
+
+def decode_train(params, enc_states, tokens, cfg: ModelConfig):
+    """Teacher-forced decoder pass -> logits [B,T,Vp]."""
+    B, T = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + params["dec_pos"][None, :T]
+    x = constrain(x, "batch", "seq", "embed")
+    sspec, cspec = dec_attn_spec(cfg), enc_attn_spec(cfg)
+
+    def body(x, p):
+        h = _ln(x, p["ln1"], cfg.norm_eps)
+        a, _ = attn.attention_full(p["self_attn"], h, sspec)
+        x = x + a
+        h = _ln(x, p["ln2"], cfg.norm_eps)
+        ckv = attn.encode_kv(p["cross_attn"], enc_states, cspec)
+        a, _ = attn.attention_full(p["cross_attn"], h, cspec, cross_kv=ckv)
+        x = x + a
+        h = _ln(x, p["ln3"], cfg.norm_eps)
+        return x + mlp.gelu_mlp(p["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = _ln(x, params["dec_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    if cfg.vocab_padded != cfg.vocab_size:
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(mask[None, None], logits,
+                           jnp.float32(-1e9).astype(logits.dtype))
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward_train(params, batch, cfg: ModelConfig, *, remat: str = "full"):
+    enc = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, enc, batch["tokens"], cfg)
+    loss = common.softmax_cross_entropy(logits, batch["labels"])
+    return loss, {"ce_loss": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = common.default_dtype(cfg.dtype)
+    L = cfg.n_layers
+    kv = attn.init_kv_cache(batch, max_len, dec_attn_spec(cfg), dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), kv)
+
+
+def decode_step(params, cache, xkv, tokens, cur_index, cfg: ModelConfig):
+    """One serving step. xkv: stacked cross K/V from `cross_kv`."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = params["dec_pos"][cur_index][None, None]
+    x = x + pos
+    sspec, cspec = dec_attn_spec(cfg), enc_attn_spec(cfg)
+
+    def body(x, xs):
+        p, c, ck = xs
+        h = _ln(x, p["ln1"], cfg.norm_eps)
+        a, c = attn.attention_decode(p["self_attn"], h, c, cur_index, sspec)
+        x = x + a
+        h = _ln(x, p["ln2"], cfg.norm_eps)
+        a, _ = attn.attention_decode(p["cross_attn"], h, None, cur_index,
+                                     cspec, cross_kv=(ck["k"], ck["v"]))
+        x = x + a
+        h = _ln(x, p["ln3"], cfg.norm_eps)
+        return x + mlp.gelu_mlp(p["mlp"], h), c
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache, xkv))
+    x = _ln(x, params["dec_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    return logits, new_cache

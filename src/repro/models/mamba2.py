@@ -1,0 +1,124 @@
+"""Mamba2 block (state-space dual form), used by the zamba2 hybrid
+architecture. Train/prefill use the chunked SSD scan (Pallas kernel on TPU,
+sequential oracle elsewhere); decode carries (conv_states, ssm_state) and
+advances one token in O(1).
+
+The input projection is kept as separate weights (w_z, w_x, w_B, w_C, w_dt)
+rather than one fused matrix so each output dim can be TP-sharded exactly —
+depthwise causal conv commutes with channel concatenation, so splitting the
+conv into per-component convs is numerically identical to the fused layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    d_state: int          # N
+    head_dim: int = 64    # P
+    expand: int = 2
+    n_groups: int = 1     # B/C groups
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, spec: Mamba2Spec, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    D, Din, H, N, G, W = (spec.d_model, spec.d_inner, spec.n_heads,
+                          spec.d_state, spec.n_groups, spec.conv_width)
+    return {
+        "w_z": common.dense_init(ks[0], (D, Din), D, dtype),
+        "w_x": common.dense_init(ks[1], (D, Din), D, dtype),
+        "w_B": common.dense_init(ks[2], (D, G * N), D, dtype),
+        "w_C": common.dense_init(ks[3], (D, G * N), D, dtype),
+        "w_dt": common.dense_init(ks[4], (D, H), D, dtype),
+        "conv_x_w": common.dense_init(ks[5], (W, Din), W, dtype),
+        "conv_x_b": jnp.zeros((Din,), dtype),
+        "conv_B_w": common.dense_init(ks[6], (W, G * N), W, dtype),
+        "conv_B_b": jnp.zeros((G * N,), dtype),
+        "conv_C_w": common.dense_init(jax.random.fold_in(key, 7), (W, G * N), W, dtype),
+        "conv_C_b": jnp.zeros((G * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "norm_w": jnp.ones((Din,), dtype),
+        "w_out": common.dense_init(jax.random.fold_in(key, 8), (Din, D), Din, dtype),
+    }
+
+
+def _causal_conv(u, conv_w, conv_b, *, prev=None, silu=True):
+    """Depthwise causal conv over time. u [B,T,C]; conv_w [W,C]; prev
+    [B,W-1,C] prepends history (decode). Returns (y [B,T,C], new_prev)."""
+    W = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros(u.shape[:1] + (W - 1, u.shape[-1]), u.dtype)
+    xfull = jnp.concatenate([prev, u], axis=1)                # [B,T+W-1,C]
+    out = sum(xfull[:, i:i + u.shape[1]] * conv_w[i] for i in range(W))
+    out = out + conv_b
+    if silu:
+        out = jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype)
+    new_prev = xfull[:, -(W - 1):] if W > 1 else prev
+    return out, new_prev
+
+
+def init_mamba2_state(batch: int, spec: Mamba2Spec, dtype=jnp.bfloat16):
+    W, GN = spec.conv_width, spec.n_groups * spec.d_state
+    convs = (jnp.zeros((batch, W - 1, spec.d_inner), dtype),
+             jnp.zeros((batch, W - 1, GN), dtype),
+             jnp.zeros((batch, W - 1, GN), dtype))
+    ssm = jnp.zeros((batch, spec.n_heads, spec.d_state, spec.head_dim),
+                    jnp.float32)
+    return (convs, ssm)
+
+
+def mamba2_forward(params, x, spec: Mamba2Spec, *, init_state=None):
+    """Train/prefill pass. x [B,T,D] -> (y [B,T,D], state)."""
+    from repro.kernels import ops as kops
+    B, T, D = x.shape
+    H, N, G, P = spec.n_heads, spec.d_state, spec.n_groups, spec.head_dim
+    convs_prev = (None, None, None) if init_state is None else init_state[0]
+    ssm_prev = None if init_state is None else init_state[1]
+
+    z = jnp.einsum("btd,de->bte", x, params["w_z"])
+    xs = jnp.einsum("btd,de->bte", x, params["w_x"])
+    Bm = jnp.einsum("btd,de->bte", x, params["w_B"])
+    Cm = jnp.einsum("btd,de->bte", x, params["w_C"])
+    dt = jnp.einsum("btd,dh->bth", x, params["w_dt"])
+
+    xs, sx = _causal_conv(xs, params["conv_x_w"], params["conv_x_b"], prev=convs_prev[0])
+    Bm, sB = _causal_conv(Bm, params["conv_B_w"], params["conv_B_b"], prev=convs_prev[1])
+    Cm, sC = _causal_conv(Cm, params["conv_C_w"], params["conv_C_b"], prev=convs_prev[2])
+
+    xh = xs.reshape(B, T, H, P)
+    Bh = Bm.reshape(B, T, G, N)
+    Ch = Cm.reshape(B, T, G, N)
+    dts = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, ssm_state = kops.mamba2_scan(xh, dts, A, Bh, Ch, params["D"],
+                                    init_state=ssm_prev)
+    y = y.reshape(B, T, spec.d_inner)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        params["norm_w"])
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"])
+    return out, ((sx, sB, sC), ssm_state)
+
+
+def mamba2_decode(params, x, state, spec: Mamba2Spec):
+    """Single-token step: x [B,1,D]."""
+    return mamba2_forward(params, x, spec, init_state=state)

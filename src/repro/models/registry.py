@@ -1,0 +1,119 @@
+"""Unified model API over the two assembly families (decoder-only `lm` and
+encoder-decoder `encdec`), plus input ShapeDtypeStructs for every assigned
+(arch x shape) cell — the dry-run lowers against these (no allocation)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Any]           # (params, batch) -> (loss, metrics)
+    init_decode_cache: Callable[..., Any]  # (batch, max_len) -> cache
+    decode_fn: Callable[..., Any]          # (params, cache, batch) -> (logits, cache)
+    prefill_fn: Callable[..., Any] | None
+
+
+def build(cfg: ModelConfig, *, remat: str = "full") -> ModelApi:
+    if cfg.family == "encdec":
+        def loss_fn(params, batch):
+            return encdec.forward_train(params, batch, cfg, remat=remat)
+
+        def decode_fn(params, cache, batch):
+            # batch: tokens [B,1], cur_index [], enc frame embeds -> xkv once
+            xkv = batch["cross_kv"]
+            return encdec.decode_step(params, cache, xkv, batch["tokens"],
+                                      batch["cur_index"], cfg)
+
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss_fn=loss_fn,
+            init_decode_cache=lambda b, s: encdec.init_decode_cache(cfg, b, s),
+            decode_fn=decode_fn,
+            prefill_fn=None,
+        )
+
+    def loss_fn(params, batch):
+        return lm.forward_train(params, batch, cfg, remat=remat)
+
+    def decode_fn(params, cache, batch):
+        return lm.decode_step(params, cache, batch["tokens"],
+                              batch["cur_index"], cfg)
+
+    def prefill_fn(params, tokens, max_len):
+        return lm.prefill(params, tokens, cfg, max_len)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: lm.init_lm(key, cfg),
+        loss_fn=loss_fn,
+        init_decode_cache=lambda b, s: lm.init_decode_cache(cfg, b, s),
+        decode_fn=decode_fn,
+        prefill_fn=prefill_fn,
+    )
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    api = build(cfg)
+    return jax.eval_shape(api.init, jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every step input of this cell.
+
+    train/prefill: token batch (+ stub modality frontends).
+    decode: one new token + cur_index; the KV cache is a separate argument
+    (see launch/dryrun.py) sized to shape.seq_len."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch: dict[str, Any] = {
+            "tokens": sds((B, T), i32), "labels": sds((B, T), i32)}
+        if cfg.family == "vlm":
+            batch["tokens"] = sds((B, T - cfg.n_img_tokens), i32)
+            batch["labels"] = sds((B, T - cfg.n_img_tokens), i32)
+            batch["img_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.enc_seq_len, cfg.d_model), f32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, T), i32), "labels": sds((B, T), i32)}
+        if cfg.family == "vlm":
+            batch["tokens"] = sds((B, T - cfg.n_img_tokens), i32)
+            batch["labels"] = sds((B, T - cfg.n_img_tokens), i32)
+            batch["img_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.enc_seq_len, cfg.d_model), f32)
+        return batch
+    # decode
+    batch = {"tokens": sds((B, 1), i32),
+             "cur_index": sds((), i32)}
+    if cfg.family == "encdec":
+        plan = cfg.head_plan()
+        batch["cross_kv"] = {
+            "k": sds((cfg.n_layers, B, cfg.enc_seq_len, plan.n_kv_pad,
+                      cfg.head_dim_), jnp.bfloat16),
+            "v": sds((cfg.n_layers, B, cfg.enc_seq_len, plan.n_kv_pad,
+                      cfg.head_dim_), jnp.bfloat16),
+        }
+    return batch
+
+
+def abstract_decode_cache(cfg: ModelConfig, shape: ShapeConfig):
+    api = build(cfg)
+    return jax.eval_shape(lambda: api.init_decode_cache(
+        shape.global_batch, shape.seq_len))

@@ -1,0 +1,121 @@
+"""RWKV6 ("Finch") block: data-dependent-decay linear attention (time-mix)
+plus squared-ReLU channel-mix. Attention-free: decode state is O(1) in
+sequence length (one [H, Dh, Dh] matrix per layer), which is what makes the
+long_500k cell runnable for this architecture (DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class Rwkv6Spec:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    lora_rank: int = 32
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_rwkv6(key, spec: Rwkv6Spec, dtype=jnp.float32):
+    ks = jax.random.split(key, 12)
+    D, H, Dh, R = spec.d_model, spec.n_heads, spec.head_dim, spec.lora_rank
+    return {
+        # time-mix (5 interpolation targets: w,k,v,r,g) — data-dependent lerp
+        "mix_base": jnp.zeros((5, D), dtype),
+        "mix_w1": common.dense_init(ks[0], (D, 5 * R), D, dtype),
+        "mix_w2": common.dense_init(ks[1], (5, R, D), R, dtype),
+        "w_r": common.dense_init(ks[2], (D, D), D, dtype),
+        "w_k": common.dense_init(ks[3], (D, D), D, dtype),
+        "w_v": common.dense_init(ks[4], (D, D), D, dtype),
+        "w_g": common.dense_init(ks[5], (D, D), D, dtype),
+        "w_o": common.dense_init(ks[6], (D, D), D, dtype),
+        # decay: w = -exp(w0 + tanh(x W_a) W_b) (low-rank data dependence)
+        "decay_base": jnp.full((D,), -2.0, jnp.float32),
+        "decay_w1": common.dense_init(ks[7], (D, R), D, dtype),
+        "decay_w2": common.dense_init(ks[8], (R, D), R, dtype),
+        "bonus_u": jnp.full((H, Dh), 0.5, jnp.float32),
+        "ln_x_w": jnp.ones((D,), dtype),
+        "ln_x_b": jnp.zeros((D,), dtype),
+        # channel-mix
+        "cmix_k": jnp.zeros((D,), dtype),
+        "cmix_r": jnp.zeros((D,), dtype),
+        "cm_wk": common.dense_init(ks[9], (D, spec.d_ff), D, dtype),
+        "cm_wv": common.dense_init(ks[10], (spec.d_ff, D), spec.d_ff, dtype),
+        "cm_wr": common.dense_init(ks[11], (D, D), D, dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """Shift sequence right by one: y[t] = x[t-1]; slot 0 takes `last`
+    (decode continuation) or zeros."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(params, x, spec: Rwkv6Spec, *, init_state=None, last_x=None):
+    """x [B,T,D] -> (y, (wkv_state, last_token)). The recurrence itself runs
+    in the Pallas kernel (chunked) or the jnp oracle."""
+    from repro.kernels import ops as kops
+    B, T, D = x.shape
+    H, Dh, R = spec.n_heads, spec.head_dim, spec.lora_rank
+    xs = _token_shift(x, last_x)
+    dx = xs - x
+
+    # data-dependent lerp (ddlerp): 5 mixed inputs
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", x, params["mix_w1"])
+                    .reshape(B, T, 5, R).astype(jnp.float32))
+    dyn = jnp.einsum("btfr,frd->btfd", lora.astype(x.dtype), params["mix_w2"])
+    mix = params["mix_base"][None, None] + dyn                   # [B,T,5,D]
+    xw, xk, xv, xr, xg = [x + dx * mix[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("btd,de->bte", xr, params["w_r"]).reshape(B, T, H, Dh)
+    k = jnp.einsum("btd,de->bte", xk, params["w_k"]).reshape(B, T, H, Dh)
+    v = jnp.einsum("btd,de->bte", xv, params["w_v"]).reshape(B, T, H, Dh)
+    g = jnp.einsum("btd,de->bte", xg, params["w_g"])
+
+    dec = jnp.einsum("btr,rd->btd",
+                     jnp.tanh(jnp.einsum("btd,dr->btr", xw, params["decay_w1"])
+                              .astype(jnp.float32)).astype(x.dtype),
+                     params["decay_w2"])
+    w_log = -jnp.exp(params["decay_base"][None, None] + dec.astype(jnp.float32))
+    w_log = w_log.reshape(B, T, H, Dh)
+
+    y, state = kops.rwkv6_scan(r, k, v, w_log, params["bonus_u"],
+                               init_state=init_state)
+    y = y.reshape(B, T, D)
+    y = common.layer_norm(y, params["ln_x_w"], params["ln_x_b"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("btd,de->bte", y, params["w_o"])
+    return out, (state, x[:, -1:])
+
+
+def rwkv6_channel_mix(params, x, *, last_x=None):
+    xs = _token_shift(x, last_x)
+    dx = xs - x
+    xk = x + dx * params["cmix_k"][None, None]
+    xr = x + dx * params["cmix_r"][None, None]
+    k = jnp.einsum("btd,df->btf", xk, params["cm_wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["cm_wr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return r * jnp.einsum("btf,fd->btd", k, params["cm_wv"]), x[:, -1:]
+
+
+def init_rwkv6_state(batch: int, spec: Rwkv6Spec, dtype=jnp.bfloat16):
+    """Per-layer decode state: (wkv [B,H,Dh,Dh] f32, tm_last [B,1,D],
+    cm_last [B,1,D])."""
+    return (
+        jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.head_dim), jnp.float32),
+        jnp.zeros((batch, 1, spec.d_model), dtype),
+        jnp.zeros((batch, 1, spec.d_model), dtype),
+    )

@@ -1,0 +1,32 @@
+"""LR schedules. WSD (Warmup-Stable-Decay) is included because minicpm-2b is
+trained with it (arXiv:2404.06395): linear warmup, long stable plateau, then
+a short sharp decay — the schedule that makes continuous pretraining cheap."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+    stable = jnp.float32(peak_lr)
+    d = (s - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1)
+    decay = peak_lr * (final_frac ** jnp.clip(d, 0.0, 1.0))
+    lr = jnp.where(s < warmup_steps, warm,
+                   jnp.where(s < warmup_steps + stable_steps, stable, decay))
+    return lr
+
+
+def cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+           final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+
+
+SCHEDULES = {"wsd": wsd, "cosine": cosine}

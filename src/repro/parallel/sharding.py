@@ -1,0 +1,292 @@
+"""Sharding infrastructure: logical-axis rules, activation constraints, and
+parameter PartitionSpec trees (MaxText-style, but path-name driven).
+
+Mesh axes (launch/mesh.py): ('pod', 'data', 'model') multi-pod or
+('data', 'model') single-pod. Logical axes used by the models:
+
+    batch   -> ('pod', 'data')   (replicated when the batch doesn't divide)
+    seq     -> None              (sequence-parallel variants map it to 'model')
+    heads/kv_heads/ff/experts_ff -> 'model'   (TP)
+    vocab   -> 'model'
+    fsdp    -> 'data'            (parameter/optimizer-state sharding)
+
+Activation constraints are applied through `constrain(x, *logical_axes)`,
+which resolves against the ambient mesh set by `mesh_context`. With no mesh
+active (unit tests, single device) it is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar[tuple[Mesh, dict] | None] = \
+    contextvars.ContextVar("repro_mesh", default=None)
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "batch_nodp": None,        # long_500k: batch of 1 cannot shard
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "fsdp": "data",
+    "experts": None,
+    "ssm_heads": "model",
+    "state": None,
+}
+
+
+def rules_for_mesh(mesh: Mesh, overrides: dict | None = None) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if "pod" not in mesh.axis_names:
+        rules["batch"] = ("data",)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, overrides: dict | None = None):
+    """Activates the (mesh, rules) pair that `constrain` resolves against.
+    NamedShardings are fully explicit, so no ambient jax mesh is needed."""
+    token = _ACTIVE.set((mesh, rules_for_mesh(mesh, overrides)))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_mesh() -> Mesh | None:
+    st = _ACTIVE.get()
+    return st[0] if st else None
+
+
+def resolve(*logical: str | None) -> P:
+    st = _ACTIVE.get()
+    if st is None:
+        return P()
+    _, rules = st
+    out = []
+    for name in logical:
+        ax = rules.get(name) if name else None
+        out.append(ax)
+    return P(*out)
+
+
+def constrain(x, *logical: str | None):
+    """with_sharding_constraint against the ambient mesh (no-op without)."""
+    st = _ACTIVE.get()
+    if st is None:
+        return x
+    mesh, _ = st
+    spec = resolve(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs by path-name convention
+# ---------------------------------------------------------------------------
+
+# Ordered (regex on dot-joined param path, spec builder) table. The builder
+# receives the leaf shape and returns a PartitionSpec of equal rank. All
+# models name their parameters so exactly one rule matches.
+def _p(*axes):
+    return lambda shape: P(*axes[: len(shape)]) if len(axes) >= len(shape) \
+        else P(*(list(axes) + [None] * (len(shape) - len(axes))))
+
+
+PARAM_RULES: list[tuple[str, Any]] = [
+    # embeddings / unembedding
+    (r"embed$", _p("model", "fsdp")),                    # [Vp, D]
+    (r"lm_head$", _p("fsdp", "model")),                  # [D, Vp]
+    # attention
+    (r"\bwq$", _p("fsdp", "model", None)),               # [D, Hq, Dh]
+    (r"\bwk$", _p("fsdp", "model", None)),
+    (r"\bwv$", _p("fsdp", "model", None)),
+    (r"\bwo$", _p("model", None, "fsdp")),               # [Hq, Dh, D]
+    (r"\bb[qkv]$", _p("model", None)),                   # [H, Dh]
+    # dense mlp
+    (r"w_gate$", _p("fsdp", "model")),                   # [D, F]
+    (r"w_in$", _p("fsdp", "model")),
+    (r"w_out$", _p("model", "fsdp")),                    # [F, D]
+    (r"b_in$", _p("model")),
+    (r"b_out$", _p(None)),
+    # moe (leading E dim; experts replicated, ff TP + fsdp)
+    (r"moe.*router$", _p("fsdp", None)),                 # [D, E]
+    (r"moe.*w_gate$", _p(None, "fsdp", "model")),        # [E, D, F]
+    (r"moe.*w_in$", _p(None, "fsdp", "model")),
+    (r"moe.*w_out$", _p(None, "model", "fsdp")),         # [E, F, D]
+    # mamba2
+    (r"mamba.*w_z$", _p("fsdp", "model")),               # [D, Din]
+    (r"mamba.*w_x$", _p("fsdp", "model")),
+    (r"mamba.*w_B$", _p("fsdp", None)),                  # [D, G*N] tiny
+    (r"mamba.*w_C$", _p("fsdp", None)),
+    (r"mamba.*w_dt$", _p("fsdp", "model")),              # [D, H]
+    (r"mamba.*conv_x_w$", _p(None, "model")),
+    (r"mamba.*conv_[BC]_w$", _p(None, None)),
+    (r"mamba.*conv_x_b$", _p("model")),
+    (r"mamba.*conv_[BC]_b$", _p(None)),
+    (r"mamba.*(A_log|dt_bias)$", _p("model")),           # [H]
+    (r"mamba.*\bD$", _p("model")),
+    (r"mamba.*norm_w$", _p("model")),                    # [Din]
+    (r"mamba.*w_out$", _p("model", "fsdp")),             # [Din, D]
+    # rwkv6
+    (r"rwkv.*w_[rkvg]$", _p("fsdp", "model")),           # [D, D]
+    (r"rwkv.*w_o$", _p("model", "fsdp")),
+    (r"rwkv.*mix_base$", _p(None, None)),
+    (r"rwkv.*mix_w1$", _p("fsdp", None)),
+    (r"rwkv.*mix_w2$", _p(None, None, None)),
+    (r"rwkv.*decay_base$", _p(None)),
+    (r"rwkv.*decay_w1$", _p("fsdp", None)),
+    (r"rwkv.*decay_w2$", _p(None, "model")),
+    (r"rwkv.*bonus_u$", _p("model", None)),              # [H, Dh]
+    (r"rwkv.*ln_x_[wb]$", _p(None)),
+    (r"rwkv.*cmix_[kr]$", _p(None)),
+    (r"rwkv.*cm_wk$", _p("fsdp", "model")),
+    (r"rwkv.*cm_wv$", _p("model", "fsdp")),
+    (r"rwkv.*cm_wr$", _p("fsdp", "model")),
+    # int8 optimizer moments: flat [n_blocks, block]/[n_blocks, 1] arrays,
+    # FSDP-sharded over the block dim when divisible
+    (r"\.q$", _p("fsdp", None)),
+    (r"\.scale$", _p("fsdp", None)),
+    # norms / misc scalars+vectors
+    (r"(ln|norm).*(_w|_b|weight|bias)?$", _p(None)),
+]
+
+# True expert parallelism (E % model == 0): experts sharded over 'model',
+# per-expert F kept full-width (MXU-friendly for skinny experts like
+# qwen3's F=768); dispatch becomes all-to-all over the model axis.
+# Consulted BEFORE the base table when the moe_ep profile is active.
+PARAM_RULES_MOE_EP: list[tuple[str, Any]] = [
+    (r"moe.*router$", _p("fsdp", None)),
+    (r"moe.*w_gate$", _p("model", "fsdp", None)),
+    (r"moe.*w_in$", _p("model", "fsdp", None)),
+    (r"moe.*w_out$", _p("model", None, "fsdp")),
+]
+
+
+def spec_for_path(path: str, shape: tuple[int, ...], *,
+                  moe_ep: bool = False) -> P:
+    if moe_ep:
+        for pat, builder in PARAM_RULES_MOE_EP:
+            if re.search(pat, path):
+                return builder(shape)
+    for pat, builder in PARAM_RULES:
+        if re.search(pat, path):
+            return builder(shape)
+    return P(*([None] * len(shape)))
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    """Axis size; 0 for axes absent from this mesh (caller drops them)."""
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        s = 1
+        for n in name:
+            sz = _axis_size(mesh, n)
+            if sz == 0:
+                return 0
+            s *= sz
+        return s
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 0)
+
+
+def _validate_divisible(spec: P, shape: tuple[int, ...], mesh: Mesh, path: str) -> P:
+    """Drop sharding on dims the mesh axis doesn't divide, or axes the mesh
+    doesn't have (tests/examples on smaller meshes)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        size = _axis_size(mesh, ax)
+        if ax is not None and (size == 0 or dim % size != 0):
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def _rewrite_fsdp(spec: P, fsdp_axes) -> P:
+    return P(*((fsdp_axes if ax == "fsdp" else ax) for ax in spec))
+
+
+def param_pspecs(abstract_params, mesh: Mesh, *, fsdp="data", moe_ep=False,
+                 stacked_prefixes: tuple[str, ...] = ("blocks", "enc_blocks",
+                                                      "dec_blocks")):
+    """PartitionSpec tree for a parameter pytree.
+
+    Stacked (scan-over-layers) params carry a leading L dim which is never
+    sharded: rules are applied to the trailing dims and shifted right."""
+    def one(path_tuple, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path_tuple]
+        path = ".".join(str(k) for k in keys if k is not None)
+        shape = leaf.shape
+        # int8-optimizer moment leaves (…/q, …/scale) are flat block arrays,
+        # never layer-stacked even when their path mentions 'blocks'
+        flat_moment = re.search(r"\.(q|scale)$", path) is not None
+        stacked = (not flat_moment and len(shape) >= 1
+                   and any(seg in stacked_prefixes for seg in path.split(".")))
+        eff_shape = shape[1:] if stacked else shape
+        spec = spec_for_path(path, tuple(eff_shape), moe_ep=moe_ep)
+        spec = _rewrite_fsdp(spec, fsdp)
+        if fsdp is not None and not isinstance(fsdp, str):
+            # wide-FSDP profiles shard params over (data, model): drop the
+            # 'model' TP assignment so dims aren't double-sharded
+            spec = P(*((None if ax == "model" else ax) for ax in spec))
+        spec = _validate_divisible(spec, tuple(eff_shape), mesh, path)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def named_shardings(abstract_params, mesh: Mesh, **kw):
+    specs = param_pspecs(abstract_params, mesh, **kw)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache PartitionSpecs (leading stacked layer/occurrence axis)
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(abstract_cache, mesh: Mesh, *, batch_axes) -> Any:
+    """Shard decode caches: batch over the DP axes, heads over 'model'.
+
+    Leaf layouts (leading L = stacked layers/occurrences):
+      k/v        [L,B,S,Hkv,Dh] -> (None, batch, None, 'model', None)
+      wkv        [L,B,H,Dk,Dv]  -> (None, batch, 'model', None, None)
+      ssm state  [L,B,H,N,P]    -> (None, batch, 'model', None, None)
+      conv state [L,B,W-1,C]    -> (None, batch, None, 'model')
+      *_last     [L,B,1,D]      -> (None, batch, None, None)
+    Dims that don't divide fall back to replication (validated)."""
+    def one(path_tuple, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", None)))
+                for k in path_tuple]
+        path = ".".join(keys)
+        shape = leaf.shape
+        rank = len(shape)
+        if re.search(r"(^|\.)([kv]|wkv)$", path) and rank == 5:
+            spec = P(None, batch_axes, None, "model", None)
+        elif rank == 5:
+            spec = P(None, batch_axes, "model", None, None)
+        elif rank == 4 and shape[-1] % _axis_size(mesh, "model") == 0 \
+                and "last" not in path:
+            spec = P(None, batch_axes, None, "model")
+        elif rank >= 2:
+            spec = P(*((None, batch_axes) + (None,) * (rank - 2)))
+        else:
+            spec = P(*([None] * rank))
+        return _validate_divisible(spec, shape, mesh, path)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)

@@ -1,0 +1,105 @@
+"""Batched serving engine: continuous prefill + greedy decode with KV caches,
+power-plane energy accounting per token, and the serve-side host controller.
+
+Serving is where the paper's "communication-light phases" argument (§I) bites
+hardest: decode is HBM-bound, so the PhaseAware policy undervolts VDD_CORE
+and VDD_IO during decode and restores them for prefill bursts — the serving
+analogue of the transceiver case study.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    energy_j: float = 0.0
+    model_time_s: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int,
+                 batch_size: int,
+                 prefill_profile: StepProfile | None = None,
+                 decode_profile: StepProfile | None = None,
+                 policy=None):
+        self.cfg = cfg
+        self.params = params
+        self.api = registry.build(cfg)
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.plane = PowerPlaneState.nominal()
+        self.policy = policy
+        self.prefill_profile = prefill_profile or StepProfile(1e9, 1e9, 0.0)
+        self.decode_profile = decode_profile or StepProfile(1e8, 1e9, 0.0)
+        self.stats = ServeStats()
+
+        self._decode = jax.jit(
+            lambda params, cache, batch: self.api.decode_fn(params, cache, batch))
+        self._prefill = (jax.jit(
+            lambda params, toks: self.api.prefill_fn(params, toks, max_len))
+            if self.api.prefill_fn else None)
+
+    def _account(self, profile: StepProfile, n: int = 1):
+        for _ in range(n):
+            self.plane, m = account_step(profile, self.plane)
+            self.stats.energy_j += float(m["energy_step_j"])
+            self.stats.model_time_s += float(m["t_step_s"])
+            if self.policy is not None:
+                self.plane = self.policy.update_jax(self.plane, m)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 eos_id: int | None = None) -> np.ndarray:
+        """prompts [B, Tp] int32 -> generated [B, max_new_tokens]."""
+        B, Tp = prompts.shape
+        assert B == self.batch_size, (B, self.batch_size)
+        toks = jnp.asarray(prompts, jnp.int32)
+
+        if self._prefill is not None:
+            logits, cache, cur = self._prefill(self.params, toks)
+            self._account(self.prefill_profile)
+            self.stats.prefill_tokens += B * Tp
+            next_tok = jnp.argmax(logits[:, -1, : self.cfg.vocab_size],
+                                  axis=-1).astype(jnp.int32)[:, None]
+            cur_index = jnp.int32(Tp)
+        else:
+            raise NotImplementedError("encdec serving uses serve_encdec()")
+
+        out = [next_tok]
+        for i in range(max_new_tokens - 1):
+            logits, cache = self._decode(
+                self.params, cache,
+                {"tokens": out[-1], "cur_index": cur_index})
+            self._account(self.decode_profile)
+            self.stats.decode_tokens += B
+            nxt = jnp.argmax(logits[:, -1, : self.cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)[:, None]
+            out.append(nxt)
+            cur_index = cur_index + 1
+            if eos_id is not None and bool(jnp.all(nxt == eos_id)):
+                break
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    def summary(self) -> dict[str, Any]:
+        toks = max(self.stats.decode_tokens, 1)
+        return {
+            "prefill_tokens": self.stats.prefill_tokens,
+            "decode_tokens": self.stats.decode_tokens,
+            "energy_j": self.stats.energy_j,
+            "model_time_s": self.stats.model_time_s,
+            "j_per_decoded_token": self.stats.energy_j / toks,
+            "v_core": float(self.plane.v_core),
+            "v_io": float(self.plane.v_io),
+        }

@@ -1,0 +1,127 @@
+"""Train-step factory: microbatch gradient accumulation, gradient sync
+(XLA-auto or error-feedback-compressed — the paper-adapted bounded-error
+link), AdamW update, and the power plane woven through the step.
+
+Two control paths, mirroring the paper (DESIGN.md §2.2):
+  * in-graph controller: policy.update_jax composed INTO the jitted step
+    (HW path analogue — deterministic, no host round trip);
+  * host controller: the trainer calls policy.update_host between steps and
+    actuates through the PMBus-simulated HostPowerController (SW analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ecollectives
+from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    microbatches: int = 1
+    grad_sync: str = "auto"          # auto | ef_int8 | ef_int8_topk
+    k_fraction: float = 0.25
+    policy: Any = None               # in-graph policy or None
+    dp_axes: tuple[str, ...] = ("data",)  # manual axes for ef sync
+
+
+def _accumulate_grads(loss_fn, params, batch, microbatches: int):
+    """Returns (mean_loss, metrics, mean_grads)."""
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, metrics, grads
+
+    def reshape(a):
+        b = a.shape[0]
+        return a.reshape((microbatches, b // microbatches) + a.shape[1:])
+
+    mbatch = jax.tree_util.tree_map(reshape, batch)
+
+    def body(acc, mb):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc_loss, acc_grads = acc
+        acc_grads = jax.tree_util.tree_map(jnp.add, acc_grads, grads)
+        return (acc_loss + loss, acc_grads), metrics
+
+    zero_grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grads_sum), metrics = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_grads), mbatch)
+    inv = 1.0 / microbatches
+    grads = jax.tree_util.tree_map(lambda g: g * inv, grads_sum)
+    metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+    return loss_sum * inv, metrics, grads
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
+                    schedule_fn: Callable, profile: StepProfile,
+                    step_cfg: StepConfig):
+    """Returns train_step(params, opt_state, plane, ef_resid, batch) ->
+    (params', opt_state', plane', ef_resid', metrics)."""
+
+    def train_step(params, opt_state, plane: PowerPlaneState, ef_resid, batch):
+        loss, metrics, grads = _accumulate_grads(
+            loss_fn, params, batch, step_cfg.microbatches)
+
+        grad_error = jnp.zeros((), jnp.float32)
+        if step_cfg.grad_sync.startswith("ef_int8"):
+            # error-feedback compression BEFORE the cross-replica reduction
+            level = (ecollectives.LEVEL_INT8_TOPK
+                     if step_cfg.grad_sync == "ef_int8_topk"
+                     else ecollectives.LEVEL_INT8)
+            raw = grads
+            grads, ef_resid = ecollectives.ef_compress(
+                grads, ef_resid, level, step_cfg.k_fraction)
+            grad_error = ecollectives.compression_error_norm(raw, grads)
+            axis = step_cfg.dp_axes[0]
+            grads = ecollectives.reduce_gradients(
+                grads, axis, level=ecollectives.LEVEL_INT8
+                if level >= ecollectives.LEVEL_INT8 else 0)
+            loss = jax.lax.pmean(loss, axis)
+
+        lr = schedule_fn(opt_state["step"])
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, lr, opt_cfg)
+
+        plane, power_metrics = account_step(profile, plane)
+        telemetry = {**power_metrics, "grad_error": grad_error}
+        if step_cfg.policy is not None:
+            plane = step_cfg.policy.update_jax(plane, telemetry)
+
+        out_metrics = {"loss": loss, **metrics, **opt_metrics, **telemetry}
+        return params, opt_state, plane, ef_resid, out_metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, *, donate=True):
+    return jax.jit(train_step,
+                   donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
+def shard_map_ef_step(train_step, mesh, dp_axes=("data",)):
+    """Wrap a train step for error-feedback compressed data parallelism:
+    manual over the DP axes (so the int8 collective is ours), params/opt
+    replicated, batch sharded. Used by the e2e examples and the ecollectives
+    case-study benchmark (DESIGN.md §2.2)."""
+    batch_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    rep = P()
+
+    def mapped(params, opt_state, plane, ef_resid, batch):
+        return train_step(params, opt_state, plane, ef_resid, batch)
+
+    return jax.shard_map(
+        mapped, mesh=mesh,
+        in_specs=(rep, rep, rep, rep, batch_spec),
+        out_specs=(rep, rep, rep, rep, rep),
+        axis_names=set(dp_axes), check_vma=False)

@@ -1,0 +1,55 @@
+"""LINEAR16/LINEAR11 codec tests (paper §IV-B) — exact formats + hypothesis
+round-trip properties."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import codecs
+
+
+def test_linear16_known_values():
+    # 2^-12 exponent: 0.9 V -> 3686 LSBs
+    assert codecs.linear16_encode(0.9) == round(0.9 * 4096)
+    assert codecs.linear16_decode(4096) == 1.0
+    assert codecs.linear16_resolution() == pytest.approx(1 / 4096)
+
+
+def test_linear16_clamps():
+    assert codecs.linear16_encode(-1.0) == 0
+    assert codecs.linear16_encode(1e9) == 0xFFFF
+
+
+@given(st.floats(min_value=0.0, max_value=15.0, allow_nan=False))
+@settings(max_examples=200)
+def test_linear16_roundtrip_within_lsb(v):
+    dec = codecs.linear16_decode(codecs.linear16_encode(v))
+    assert abs(dec - v) <= codecs.linear16_resolution() / 2 + 1e-12
+
+
+@given(st.integers(min_value=0, max_value=0xFFFF))
+def test_linear16_decode_encode_exact(word):
+    assert codecs.linear16_encode(codecs.linear16_decode(word)) == word
+
+
+@given(st.floats(min_value=-500.0, max_value=500.0, allow_nan=False))
+@settings(max_examples=200)
+def test_linear11_roundtrip_relative(v):
+    word = codecs.linear11_encode(v)
+    dec = codecs.linear11_decode(word)
+    # 11-bit mantissa: relative error bounded by ~2^-10
+    assert abs(dec - v) <= max(abs(v) * 2 ** -9, 2 ** -16 + 1e-12)
+
+
+@given(st.integers(min_value=0, max_value=0xFFFF))
+def test_linear11_word_roundtrip(word):
+    v = codecs.linear11_decode(word)
+    # re-encoding with the same exponent must reproduce the word
+    exp = codecs._twos_complement(word >> 11, 5)
+    assert codecs.linear11_encode(v, exponent=exp) == word
+
+
+def test_word_bytes_le():
+    lo, hi = codecs.word_to_bytes_le(0xABCD)
+    assert (lo, hi) == (0xCD, 0xAB)
+    assert codecs.bytes_le_to_word(lo, hi) == 0xABCD

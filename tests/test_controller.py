@@ -1,0 +1,130 @@
+"""PowerManager controller characterization tests — pins the paper's
+measured numbers (§V): Table VI intervals, Fig 7 transition latency 2.3 ms,
+monotone dV->time, opcode->PMBus expansion (Table III), settling detection
+(§V-D), and the overhead tables (§V-F)."""
+
+import numpy as np
+import pytest
+
+from repro.core import overhead
+from repro.core.power_manager import ControlPath, Opcode, PowerManager
+from repro.core.settling import settling_time
+
+
+@pytest.mark.parametrize("path,hz,expect_ms", [
+    ("hw", 400_000, 0.2), ("hw", 100_000, 0.6),
+    ("sw", 400_000, 0.8), ("sw", 100_000, 1.0),
+])
+def test_measurement_interval_table_vi(path, hz, expect_ms):
+    pm = PowerManager(path=path, clock_hz=hz)
+    assert pm.measurement_interval_s() * 1e3 == pytest.approx(expect_ms, rel=0.02)
+
+
+def test_end_to_end_transition_2p3ms():
+    """Paper Fig 7a: HW/400kHz, 1.0 V -> 0.5 V completes in 2.3 ms."""
+    pm = PowerManager(path="hw", clock_hz=400_000)
+    tr = pm.measure_transition(6, 0.5, duration_s=6e-3)  # MGTAVCC
+    lat = tr.end_to_end_latency_s(n=8, band_pct=1.0)
+    assert lat * 1e3 == pytest.approx(2.3, abs=0.25)
+
+
+def test_transition_monotone_in_dv():
+    """Paper Fig 7b: larger dV takes longer (HW/400kHz)."""
+    lats = []
+    for tgt in (0.9, 0.8, 0.7, 0.6, 0.5):
+        pm = PowerManager(path="hw", clock_hz=400_000)
+        tr = pm.measure_transition(6, tgt, duration_s=6e-3)
+        lats.append(tr.end_to_end_latency_s())
+    assert all(b >= a for a, b in zip(lats, lats[1:])), lats
+
+
+def test_sw_path_slower_than_hw():
+    lat = {}
+    for path in ("hw", "sw"):
+        pm = PowerManager(path=path, clock_hz=400_000)
+        tr = pm.measure_transition(6, 0.8, duration_s=10e-3)
+        lat[path] = tr.end_to_end_latency_s()
+    assert lat["sw"] > lat["hw"]
+
+
+def test_set_voltage_expands_to_six_transactions():
+    """Fig 5 prototype workflow: PAGE + UV warn + UV fault + PG on + PG off
+    + VOUT_COMMAND = 6 PMBus transactions on first touch of a lane."""
+    pm = PowerManager(path="hw", clock_hz=400_000)
+    res = pm.set_voltage(9, 0.9)   # the paper's own VCCBRAM example
+    assert res.ok
+    assert len(res.completions) == 6
+    # second set on the same lane: PAGE cached -> 5 transactions (§IV-C)
+    res2 = pm.set_voltage(9, 0.95)
+    assert len(res2.completions) == 5
+
+
+def test_opcode_get_voltage_reads_back():
+    pm = PowerManager(path="hw", clock_hz=400_000)
+    pm.set_voltage(6, 0.85)
+    pm.clock.advance(5e-3)
+    v = pm.get_voltage(6)
+    assert v == pytest.approx(0.85, abs=5e-3)
+
+
+def test_envelope_rejected_at_mechanism_layer():
+    pm = PowerManager(path="hw", clock_hz=400_000)
+    res = pm.set_voltage(6, 0.2)   # below MGTAVCC v_min
+    assert not res.ok and "outside" in res.error
+
+
+def test_clear_status_no_pmbus_traffic():
+    """Table III: opcode 0x0 is controller-internal (no transaction)."""
+    pm = PowerManager(path="hw", clock_hz=400_000)
+    before = pm.bus.transaction_count
+    res = pm.execute(Opcode.CLEAR_STATUS)
+    assert res.ok and pm.bus.transaction_count == before
+
+
+# -- §V-D settling detection ---------------------------------------------------
+
+def test_settling_detector_basic():
+    t = np.linspace(0, 5e-3, 50)
+    v = 0.5 + 0.5 * np.exp(-t / 3e-4)
+    res = settling_time(t, v, n=8, band_pct=1.0)
+    assert res.settled
+    assert 0 < res.settling_time_s < 4e-3
+
+
+def test_settling_detector_robust_to_overshoot():
+    t = np.linspace(0, 5e-3, 100)
+    v = 0.5 + 0.3 * np.exp(-t / 2e-4) * np.cos(t / 1e-4)  # ringing
+    res = settling_time(t, v, n=8, band_pct=1.0)
+    assert res.settled
+    # overshoot excursions beyond the band must not count as settled
+    first_stable = res.t_s_index
+    band = res.band_v
+    assert np.all(np.abs(v[first_stable:first_stable + 8] - res.v_avg) <= band)
+
+
+def test_settling_detector_never_settles():
+    t = np.linspace(0, 1e-3, 64)
+    v = np.where(np.arange(64) % 2 == 0, 1.0, 0.5)  # oscillates forever
+    res = settling_time(t, v, n=8, band_pct=1.0)
+    assert not res.settled
+
+
+# -- §V-F overhead tables ---------------------------------------------------------
+
+def test_static_power_ratio_5p6x():
+    assert overhead.static_power_ratio() == pytest.approx(5.60, abs=0.01)
+    assert overhead.HW_STATIC_TOTAL_W == pytest.approx(0.015)
+    assert overhead.SW_STATIC_TOTAL_W == pytest.approx(0.084)
+
+
+def test_bram_ratio_31p96x():
+    assert overhead.bram_ratio() == pytest.approx(31.96, abs=0.01)
+
+
+def test_controller_budget_check():
+    rep = overhead.ControllerOverheadReport(
+        path="in_graph", controller_flops_per_step=1e6,
+        model_flops_per_step=1e12, controller_bytes_per_step=1e3,
+        model_bytes_per_step=1e9, host_seconds_per_step=1e-5,
+        step_seconds=0.1)
+    assert rep.within_budget(0.02)

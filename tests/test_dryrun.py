@@ -1,0 +1,58 @@
+"""Dry-run guards: the HLO cost walker's correctness on a known case, and a
+subprocess smoke of launch/dryrun.py on the production mesh (subprocess so
+the 512-device XLA flag never leaks into this test process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_costs import analyze_hlo_text
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_walker_counts_scan_trip_counts():
+    """cost_analysis() counts while bodies once (verified upstream bug);
+    the walker must multiply by trip count exactly."""
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=10)
+        return y
+
+    x = jnp.ones((128, 128))
+    compiled = jax.jit(f).lower(x).compile()
+    # the XLA bug: ~1x matmul reported (plus a few loop-counter flops)
+    assert compiled.cost_analysis()["flops"] == pytest.approx(2 * 128**3,
+                                                              rel=1e-4)
+    c = analyze_hlo_text(compiled.as_text())
+    assert c.flops == 10 * 2 * 128**3                       # walker corrects
+    assert c.n_whiles == 1
+
+
+def test_walker_handles_fusion_calls():
+    def f(x):
+        return jnp.sum(jax.nn.relu(x @ x) * 2.0)
+
+    x = jnp.ones((64, 64))
+    c = analyze_hlo_text(jax.jit(f).lower(x).compile().as_text())
+    assert c.flops == 2 * 64**3
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    """One full production-mesh cell: 256 forced devices, lower+compile,
+    JSON record with cost/collective analysis."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper_base",
+         "--shape", "decode_32k", "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "dryrun_single.json"))[0]
+    assert rec["ok"] and rec["devices"] == 256
+    assert rec["flops"] > 0
+    assert rec["collective_bytes"]["total"] > 0

@@ -1,0 +1,96 @@
+"""Error-bounded collective tests: quantization error bounds, error-feedback
+contraction (the property that makes the bounded-error region usable),
+wire-cost accounting, and hypothesis properties of the codec."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import ecollectives as ec
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    q, s = ec.quantize_int8(x)
+    xr = ec.dequantize_int8(q, s, x.shape)
+    # per-block absmax scaling: |err| <= scale/2 elementwise
+    scales = np.repeat(np.asarray(s)[:, 0], ec.DEFAULT_BLOCK)[: x.size]
+    err = np.abs(np.asarray(x) - np.asarray(xr))
+    assert np.all(err <= scales / 2 + 1e-7)
+
+
+@given(st.integers(min_value=1, max_value=1000),
+       st.floats(min_value=1e-3, max_value=1e3))
+@settings(max_examples=30, deadline=None)
+def test_quantize_scale_invariance(n, scale):
+    x = jnp.linspace(-1.0, 1.0, n) * scale
+    q1, _ = ec.quantize_int8(x)
+    q2, _ = ec.quantize_int8(x / scale)
+    # int8 codes are scale-invariant up to one ulp of rounding jitter
+    assert int(jnp.max(jnp.abs(q1.astype(jnp.int32) - q2.astype(jnp.int32)))) <= 1
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.1, 0.05, 2.0, -0.3] * 32)
+    m = ec.topk_mask(x, k_fraction=0.25, block=256)
+    kept = np.flatnonzero(np.asarray(m))
+    assert len(kept) == 64
+    assert np.min(np.abs(np.asarray(x)[kept])) >= 2.0
+
+
+def test_error_feedback_bounded_over_steps():
+    """With EF the residual norm stays bounded (contractive); without EF the
+    cumulative dropped mass grows linearly for top-k."""
+    key = jax.random.PRNGKey(1)
+    g = {"w": jax.random.normal(key, (2048,))}
+    resid = ec.zeros_like_residuals(g)
+    norms = []
+    for i in range(30):
+        gi = {"w": g["w"] * (1.0 + 0.01 * i)}
+        ghat, resid = ec.ef_compress(gi, resid, ec.LEVEL_INT8_TOPK,
+                                     k_fraction=0.25)
+        norms.append(float(jnp.linalg.norm(resid["w"])))
+    # bounded: last norms shouldn't exceed a small multiple of the first
+    assert max(norms[-5:]) < 5.0 * max(norms[:5]) + 1e-6
+
+
+def test_ef_lossless_passthrough():
+    g = {"w": jnp.arange(8.0)}
+    r0 = ec.zeros_like_residuals(g)
+    ghat, r = ec.ef_compress(g, r0, ec.LEVEL_LOSSLESS)
+    assert bool(jnp.all(ghat["w"] == g["w"]))
+    assert bool(jnp.all(r["w"] == 0))
+
+
+def test_wire_cost_ordering():
+    lossless = ec.wire_cost(ec.LEVEL_LOSSLESS).bytes_per_element
+    int8 = ec.wire_cost(ec.LEVEL_INT8).bytes_per_element
+    topk = ec.wire_cost(ec.LEVEL_INT8_TOPK, 0.25).bytes_per_element
+    assert lossless > int8 > topk
+    assert lossless == 4.0   # 2 passes x bf16
+    assert int8 == pytest.approx(1.0, abs=0.05)
+
+
+def test_compression_error_norm_zero_when_equal():
+    g = {"a": jnp.ones((16,))}
+    assert float(ec.compression_error_norm(g, g)) == 0.0
+
+
+def test_psum_int8_single_device():
+    """On one device the compressed psum must equal plain quantize-dequant."""
+    mesh = jax.make_mesh((1,), ("d",))
+    x = jax.random.normal(jax.random.PRNGKey(2), (512,))
+
+    def f(x):
+        return ec.psum_int8(x, "d")
+
+    y = jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                      out_specs=jax.sharding.PartitionSpec(),
+                      check_vma=False)(x)
+    q, s = ec.quantize_int8(x)
+    expect = ec.dequantize_int8(q, s, x.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               rtol=1e-6, atol=1e-7)

@@ -1,0 +1,95 @@
+"""PMBus engine tests: wire timing (Fig 4 primitives), UCD9248 device model
+(Table I commands, PAGE mechanism), serialized transaction discipline."""
+
+import pytest
+
+from repro.core import codecs
+from repro.core.pmbus import (Cmd, PmBus, Primitive, SimClock, Transaction,
+                              Ucd9248, build_board, primitive_clocks,
+                              transaction_seconds)
+from repro.core.rails import KC705_RAIL_MAP
+
+
+def test_primitive_clock_counts():
+    # 9 clocks per byte (8 bits + ACK) + START/STOP framing (paper §IV-A)
+    assert primitive_clocks(Primitive.WRITE_BYTE) == 29
+    assert primitive_clocks(Primitive.WRITE_WORD) == 38
+    assert primitive_clocks(Primitive.READ_BYTE) == 39
+    assert primitive_clocks(Primitive.READ_WORD) == 48
+
+
+def test_transaction_seconds_scales_with_clock():
+    t400 = transaction_seconds(Primitive.WRITE_WORD, 400_000)
+    t100 = transaction_seconds(Primitive.WRITE_WORD, 100_000)
+    assert t100 == pytest.approx(4 * t400)
+    assert t400 == pytest.approx(38 / 400_000)
+
+
+def test_unsupported_clock_rejected():
+    with pytest.raises(ValueError):
+        transaction_seconds(Primitive.WRITE_WORD, 1_000_000)
+
+
+@pytest.fixture
+def board():
+    clock, bus, channels = build_board(KC705_RAIL_MAP)
+    return clock, bus, channels
+
+
+def test_page_selects_rail(board):
+    clock, bus, channels = board
+    # VCCBRAM: addr 54, PAGE 1 (paper Table II / §IV-E example)
+    bus.execute(Transaction(Primitive.WRITE_BYTE, 54, Cmd.PAGE, (1,)))
+    word = codecs.linear16_encode(0.9)
+    bus.execute(Transaction(Primitive.WRITE_WORD, 54, Cmd.VOUT_COMMAND,
+                            codecs.word_to_bytes_le(word)))
+    # rail 9 = VCCBRAM should now be slewing toward 0.9
+    ch = channels[9]
+    assert ch.target_v == pytest.approx(0.9, abs=1e-3)
+    # other rails untouched
+    assert channels[0].target_v == pytest.approx(1.0)
+
+
+def test_bad_page_nacks(board):
+    _, bus, _ = board
+    comp = bus.execute(Transaction(Primitive.WRITE_BYTE, 54, Cmd.PAGE, (7,)))
+    assert not comp.ok and comp.nack
+
+
+def test_address_nack_costs_wire_time(board):
+    clock, bus, _ = board
+    t0 = clock.now
+    comp = bus.execute(Transaction(Primitive.READ_WORD, 99, Cmd.READ_VOUT))
+    assert not comp.ok and comp.nack
+    assert clock.now > t0
+
+
+def test_read_vout_linear16(board):
+    clock, bus, channels = board
+    bus.execute(Transaction(Primitive.WRITE_BYTE, 53, Cmd.PAGE, (2,)))  # MGTAVCC
+    comp = bus.execute(Transaction(Primitive.READ_WORD, 53, Cmd.READ_VOUT))
+    assert comp.ok
+    v = codecs.linear16_decode(codecs.bytes_le_to_word(*comp.data))
+    assert v == pytest.approx(1.0, abs=5e-3)  # nominal + ADC noise
+
+
+def test_serialization_enforced(board):
+    clock, bus, _ = board
+
+    class Evil(Ucd9248):
+        def handle(self, txn, t_end):
+            bus.execute(Transaction(Primitive.READ_WORD, 53, Cmd.READ_VOUT))
+            return super().handle(txn, t_end)
+
+    bus.devices[77] = Evil(77, {})
+    with pytest.raises(RuntimeError, match="serialization"):
+        bus.execute(Transaction(Primitive.WRITE_BYTE, 77, Cmd.PAGE, (0,)))
+
+
+def test_clear_faults(board):
+    clock, bus, channels = board
+    ch = channels[6]
+    ch.fault_latched = True
+    bus.execute(Transaction(Primitive.WRITE_BYTE, 53, Cmd.PAGE, (2,)))
+    comp = bus.execute(Transaction(Primitive.SEND_BYTE, 53, Cmd.CLEAR_FAULTS))
+    assert comp.ok and not ch.fault_latched

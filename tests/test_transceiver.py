@@ -1,0 +1,116 @@
+"""GTX case-study model tests — pins every quantitative claim of paper §VI:
+BER onsets per speed (Fig 12/14), throughput collapse, TX/RX asymmetry
+(Fig 13), latency baselines/excursions (Fig 15), and the headline power
+reductions 28.4% / 29.3% (Fig 16)."""
+
+import math
+
+import pytest
+
+from repro.core.transceiver import (GtxLinkModel, LATENCY_BASE_NS,
+                                    RX_BER_ONSET_V, SPEEDS_GBPS)
+
+
+@pytest.fixture(scope="module")
+def m():
+    return GtxLinkModel(seed=0)
+
+
+def test_ber_zero_above_onset(m):
+    for s in SPEEDS_GBPS:
+        r = m.run_link_test(1.0, 1.0, s)
+        assert r.ber == 0.0 and r.bytes_received == r.bytes_sent
+
+
+@pytest.mark.parametrize("speed,onset", list(RX_BER_ONSET_V.items()))
+def test_ber_onset_voltages(m, speed, onset):
+    """Fig 14: onsets 0.869 / 0.787 / 0.745 / 0.744 V."""
+    above = m.run_link_test(onset + 0.003, onset + 0.003, speed)
+    below = m.run_link_test(onset - 0.002, onset - 0.002, speed)
+    assert above.ber == 0.0
+    assert below.ber > 0.0
+
+
+def test_ber_ramp_at_10g(m):
+    """Fig 12c: ~1e-7 near 0.866 V, ~1e-6 near 0.864 V."""
+    b866 = m.run_link_test(0.866, 0.866, 10.0).ber_true
+    b864 = m.run_link_test(0.864, 0.864, 10.0).ber_true
+    assert math.log10(b866) == pytest.approx(-7.0, abs=0.3)
+    assert math.log10(b864) == pytest.approx(-6.0, abs=0.3)
+
+
+def test_throughput_collapse_near_0p80(m):
+    """Fig 12a: first major collapse near 0.80 V at 10 Gbps."""
+    ok = m.run_link_test(0.805, 0.805, 10.0)
+    dead = m.run_link_test(0.79, 0.79, 10.0)
+    assert ok.bytes_received == ok.bytes_sent
+    assert dead.bytes_received < 0.5 * dead.bytes_sent and not dead.link_up
+
+
+def test_rx_dominant_sensitivity(m):
+    """Fig 13: TX-only sweep keeps full payload to 0.7 V; RX-swept degrades;
+    TX BER onset ~0.82 V vs RX ~0.869 V."""
+    tx_only = m.run_link_test(0.70, 1.0, 10.0)
+    rx_only = m.run_link_test(1.0, 0.79, 10.0)
+    assert tx_only.bytes_received == tx_only.bytes_sent
+    assert rx_only.bytes_received < rx_only.bytes_sent
+    assert m.run_link_test(0.825, 1.0, 10.0).ber == 0.0
+    assert m.run_link_test(0.815, 1.0, 10.0).ber_true > 1e-10
+
+
+@pytest.mark.parametrize("speed,base", list(LATENCY_BASE_NS.items()))
+def test_latency_baselines(m, speed, base):
+    """Fig 15b: ~100/130/200/410 ns in the stable region."""
+    assert m.latency_ns(1.0, 1.0, speed) == pytest.approx(base)
+
+
+def test_latency_excursions_below_onset(m):
+    """Fig 15a: sustained excursions appear below ~0.86 V at 10 Gbps."""
+    spikes = [m.latency_ns(v, v, 10.0) for v in
+              [0.84 - i * 0.002 for i in range(30)]]
+    assert max(spikes) > 10 * LATENCY_BASE_NS[10.0]
+
+
+def test_power_reduction_headline(m):
+    """Fig 16: 28.4% at the near-zero-BER boundary; 29.3% at BER<=1e-6."""
+    p_nom = m.rail_power_w("tx", 1.0, 10.0)
+    assert p_nom == pytest.approx(0.200, abs=1e-3)
+    p_nb = m.rail_power_w("tx", 0.869, 10.0)
+    assert 1 - p_nb / p_nom == pytest.approx(0.284, abs=0.002)
+    p_b6 = m.rail_power_w("tx", 0.864, 10.0)
+    assert 1 - p_b6 / p_nom == pytest.approx(0.293, abs=0.002)
+    assert p_nb == pytest.approx(0.1432, abs=5e-4)
+    assert p_b6 == pytest.approx(0.1415, abs=5e-4)
+
+
+def test_power_table_xii_anchors(m):
+    """Table XII: representative rail power at 1.0/0.8 V across speeds."""
+    expect = {
+        (10.0, "tx"): (0.20, 0.13), (10.0, "rx"): (0.17, 0.11),
+        (7.5, "tx"): (0.18, 0.12), (7.5, "rx"): (0.155, 0.10),
+        (5.0, "tx"): (0.14, 0.09), (5.0, "rx"): (0.12, 0.08),
+        (2.5, "tx"): (0.12, 0.08), (2.5, "rx"): (0.095, 0.07),
+    }
+    for (speed, side), (p10, p08) in expect.items():
+        assert m.rail_power_w(side, 1.0, speed) == pytest.approx(p10, rel=0.06)
+        assert m.rail_power_w(side, 0.8, speed) == pytest.approx(p08, rel=0.10)
+
+
+def test_power_monotone_in_voltage(m):
+    for side in ("tx", "rx"):
+        for s in SPEEDS_GBPS:
+            ps = [m.rail_power_w(side, v, s)
+                  for v in [0.7 + 0.01 * i for i in range(31)]]
+            assert all(b >= a - 1e-12 for a, b in zip(ps, ps[1:]))
+
+
+def test_power_locality(m):
+    """Table XI: savings localize to the swept side."""
+    r = m.run_link_test(0.75, 1.0, 10.0)   # TX swept, RX fixed
+    assert r.tx_power_w < 0.12 and r.rx_power_w == pytest.approx(0.17, rel=0.02)
+
+
+def test_sweep_procedure_shape(m):
+    sw = m.sweep(10.0, mode="both", v_stop=0.9)
+    assert len(sw) == 101  # 1 mV steps over 0.1 V
+    assert sw[0].v_tx == 1.0 and sw[-1].v_tx == pytest.approx(0.9)
