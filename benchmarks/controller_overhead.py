@@ -14,9 +14,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import row, timed
 from repro.core import overhead
+from repro.core.control_plane import HostRailController, InGraphRailController
 from repro.core.policy import PhaseAware
-from repro.core.power_plane import (HostPowerController, PowerPlaneState,
-                                    StepProfile, account_step)
+from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
 
 
 def run():
@@ -34,14 +34,15 @@ def run():
                     f"ratio={overhead.static_power_ratio():.2f}x (paper: 5.60x, "
                     f"hw share ~2%)"))
 
-    # our controller: in-graph path cost vs a representative step
+    # our controller, through the unified control plane: in-graph (HW-path
+    # analogue) cost vs a representative step
     profile = StepProfile(2e12, 8e9, 4e9, 3e9)
-    policy = PhaseAware()
+    in_graph = InGraphRailController(PhaseAware())
 
     @jax.jit
     def controller_only(plane):
         plane, m = account_step(profile, plane)
-        return policy.update_jax(plane, m)
+        return in_graph.control_step(plane, m)
 
     plane = PowerPlaneState.nominal()
     _, us_ctrl = timed(lambda: jax.block_until_ready(controller_only(plane)),
@@ -53,12 +54,12 @@ def run():
                     f"cost_vs_step={100*frac:.3f}% (<2% budget: {frac < 0.02}; "
                     f"in-graph ops are ~30 scalars — free once fused)"))
 
-    # host path: PMBus actuation cost per adjustment
-    hc = HostPowerController()
+    # host path (SW analogue): PMBus actuation cost per adjustment
+    hc = HostRailController()
     st = PowerPlaneState.nominal()
     import dataclasses
     st2 = dataclasses.replace(st, v_io=jnp.float32(0.85))
-    _, us_host = timed(lambda: hc.apply(st2), repeats=1)
+    _, us_host = timed(lambda: hc.actuate(st2), repeats=1)
     rows.append(row("ours.host_controller_actuation", us_host,
                     f"simulated_pmbus_latency={hc.actuation_seconds*1e3:.2f}ms "
                     f"(ms-scale, matches paper §VII-C)"))

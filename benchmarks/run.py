@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.latency_impact",        # Fig 15
     "benchmarks.power_reduction",       # Fig 16 / Table XII
     "benchmarks.ecollectives_frontier",  # beyond-paper (DESIGN.md §2.2)
+    "benchmarks.fleet_frontier",        # beyond-paper: fleet size x policy
     "benchmarks.roofline_table",        # deliverable (g)
 ]
 

@@ -8,8 +8,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.core import PowerManager, settling_time
+from repro.core.control_plane import HostRailController
 from repro.core.power_manager import Opcode
-from repro.core.power_plane import HostPowerController, PowerPlaneState
+from repro.core.power_plane import PowerPlaneState
 from repro.core.rails import KC705_RAIL_MAP
 
 # --- 1. KC705: set VCCBRAM to 0.9 V (the paper's §IV-E example) -----------
@@ -34,12 +35,12 @@ print(f"opcode 0x5 GET_VOLTAGE(VCCBRAM) -> {r.value:.4f} V "
       f"in {r.elapsed_s*1e3:.2f} ms")
 
 # --- 4. the same stack driving TPU logical rails ---------------------------
-hc = HostPowerController()
+hc = HostRailController()   # SW-path analogue of the unified control plane
 import dataclasses
 import jax.numpy as jnp
 want = dataclasses.replace(PowerPlaneState.nominal(),
                            v_io=jnp.float32(0.80))   # undervolt ICI SerDes
-achieved = hc.apply(want)
+achieved = hc.actuate(want)
 print(f"TPU VDD_IO 0.95->0.80V via PMBus: achieved {float(achieved.v_io):.3f} V, "
       f"actuation cost {hc.actuation_seconds*1e3:.2f} ms "
       f"({hc.pm.bus.transaction_count} transactions)")

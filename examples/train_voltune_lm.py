@@ -15,8 +15,9 @@ import shutil
 import jax
 
 from repro.configs.base import ModelConfig
+from repro.core.control_plane import HostRailController
 from repro.core.policy import PhaseAware, StaticNominal
-from repro.core.power_plane import HostPowerController, StepProfile
+from repro.core.power_plane import StepProfile
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import registry
 from repro.optim import adamw
@@ -74,10 +75,12 @@ else:
 
 shutil.rmtree(args.ckpt_dir, ignore_errors=True)
 data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0))
-hc = HostPowerController()
+# SW-path analogue: actuate the in-graph policy's decisions through the
+# simulated PMBus stack (achieved voltages are written back into the plane)
+hc = HostRailController()
 tcfg = TrainerConfig(
     total_steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir,
-    async_ckpt=True, host_policy=None, host_controller=hc,
+    async_ckpt=True, controller=hc,
     faults=FaultConfig(fail_prob=0.004, straggler_prob=0.02,
                        straggler_factor=6.0, grace=1.5, seed=7))
 trainer = Trainer(train_step, data, tcfg,

@@ -7,17 +7,26 @@ See DESIGN.md §2 for the mapping."""
 from repro.core.codecs import (
     linear11_decode, linear11_encode, linear16_decode, linear16_encode,
 )
+from repro.core.control_plane import (
+    HostDecisionController, HostPowerController, HostRailController,
+    InGraphRailController, RailController, as_controller,
+)
+from repro.core.fleet import FleetPowerManager
 from repro.core.power_manager import ControlPath, Opcode, PowerManager, Thresholds
 from repro.core.power_plane import (
-    HostPowerController, PowerPlaneState, StepProfile, account_step,
+    PowerPlaneState, StepProfile, account_step, account_step_fleet,
+    fleet_summary,
 )
 from repro.core.rails import KC705_RAIL_MAP, TPU_V5E_RAIL_MAP, RailMap
 from repro.core.settling import settling_time
 from repro.core.transceiver import GtxLinkModel
 
 __all__ = [
-    "ControlPath", "GtxLinkModel", "HostPowerController", "KC705_RAIL_MAP",
-    "Opcode", "PowerManager", "PowerPlaneState", "RailMap", "StepProfile",
-    "TPU_V5E_RAIL_MAP", "Thresholds", "account_step", "linear11_decode",
+    "ControlPath", "FleetPowerManager", "GtxLinkModel",
+    "HostDecisionController", "HostPowerController", "HostRailController",
+    "InGraphRailController", "KC705_RAIL_MAP", "Opcode",
+    "PowerManager", "PowerPlaneState", "RailController", "RailMap",
+    "StepProfile", "TPU_V5E_RAIL_MAP", "Thresholds", "account_step",
+    "account_step_fleet", "as_controller", "fleet_summary", "linear11_decode",
     "linear11_encode", "linear16_decode", "linear16_encode", "settling_time",
 ]

@@ -1,0 +1,267 @@
+"""The unified rail control plane (paper §III): one `RailController`
+interface serving both of VolTune's control paths.
+
+The paper's architectural claim is that a single controller design covers a
+deterministic hardware path and a flexible software path. This module is that
+claim in code: every consumer (trainer, serve engine, benchmarks) actuates
+rails exclusively through `RailController.control_step(plane, telemetry)`,
+and the two implementations differ only in *where* the decision runs and
+*what* the actuation costs:
+
+  * `InGraphRailController` (HW-path analogue): the policy is pure jnp and is
+    compiled into the jitted step — deterministic, zero host round-trip, and
+    the decided operating point takes effect immediately (the RTL FSM
+    analogue). Scalar states control one chip; `[n_chips]`-batched states
+    control a fleet via `Policy.update_fleet` (vmap + optional fleet-level
+    reductions such as worst-chip BER gating).
+
+  * `HostRailController` (SW-path analogue): the policy runs host-side
+    between steps and every actuation is pushed through the simulated
+    PMBus/regulator stack — per-board `PowerManager`s over the
+    event-scheduled multi-segment `FleetPowerManager` bus — paying the
+    paper-characterized millisecond-scale command-sequence + settling cost,
+    with achieved voltages (clamp + LINEAR16 quantization + settling band)
+    written back into the state.
+
+Both controllers run the *same policy logic*, so on the same telemetry
+stream they produce the same rail trajectory up to actuation quantization —
+the two-paths-one-behavior property pinned by tests/test_control_plane.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fleet import FleetPowerManager
+from repro.core.hwspec import V5E, ChipSpec
+from repro.core.power_manager import ControlPath
+from repro.core.power_plane import PowerPlaneState
+from repro.core.rails import TPU_V5E_RAIL_MAP
+
+Telemetry = dict[str, Any]
+
+# TPU logical rails in PowerPlaneState field order.
+RAIL_LANES = {"VDD_CORE": 0, "VDD_HBM": 1, "VDD_IO": 2}
+_LANE_FIELDS = {"VDD_CORE": "v_core", "VDD_HBM": "v_hbm", "VDD_IO": "v_io"}
+
+
+@dataclasses.dataclass
+class ControlPlaneStats:
+    """What a control path cost, in the units the paper reports (§V-F):
+    number of actuations and simulated control-path seconds."""
+    decisions: int = 0
+    actuations: int = 0              # rail writes that completed on a bus
+    failed_actuations: int = 0       # rejected writes (e.g. outside envelope)
+    actuation_seconds: float = 0.0   # fleet-time spent actuating (max-over-segments)
+    serialized_seconds: float = 0.0  # single-shared-bus equivalent (sum)
+
+
+@runtime_checkable
+class RailController(Protocol):
+    """The one actuation interface. `control_step` takes the current rail
+    state and the latest telemetry, runs the policy, actuates, and returns
+    the achieved state; `stats` reports what the control path cost."""
+
+    name: str
+
+    def control_step(self, plane: PowerPlaneState,
+                     telemetry: Telemetry) -> PowerPlaneState: ...
+
+    def stats(self) -> ControlPlaneStats: ...
+
+
+def as_controller(policy_or_controller: Any, *,
+                  host: bool = False) -> "RailController | None":
+    """Normalize a config knob: an existing controller passes through; None
+    stays None; a bare Policy is wrapped for the requesting path —
+    `host=False` (in-graph slots) -> InGraphRailController,
+    `host=True` (between-steps slots) -> HostDecisionController, so
+    `Policy.update_host` runs where the SW-path analogue is expected."""
+    if policy_or_controller is None:
+        return None
+    if hasattr(policy_or_controller, "control_step"):
+        return policy_or_controller
+    if host:
+        return HostDecisionController(policy_or_controller)
+    return InGraphRailController(policy_or_controller)
+
+
+# ---------------------------------------------------------------------------
+# HW-path analogue: in-graph, deterministic, fleet-vectorized
+# ---------------------------------------------------------------------------
+
+class InGraphRailController:
+    """Pure-jnp controller compiled into the jitted step (paper §III-B).
+
+    Actuation is the identity: in the HW path the decided operating point is
+    applied deterministically before the next step, with no bus transaction
+    on the modelled timeline (its cost is pinned separately by the Table
+    VII/IX overhead benchmarks)."""
+
+    def __init__(self, policy: Any, name: str | None = None):
+        if policy is None:
+            raise ValueError("InGraphRailController needs a policy")
+        self.policy = policy
+        self.name = name or f"in-graph[{getattr(policy, 'name', 'policy')}]"
+
+    def control_step(self, plane: PowerPlaneState,
+                     telemetry: Telemetry) -> PowerPlaneState:
+        if jnp.ndim(plane.v_core) >= 1:
+            return self.policy.update_fleet(plane, telemetry)
+        return self.policy.update_jax(plane, telemetry)
+
+    def stats(self) -> ControlPlaneStats:
+        # decisions happen inside the compiled step; host-side cost is zero
+        return ControlPlaneStats()
+
+
+# ---------------------------------------------------------------------------
+# SW-path analogue: host-side decisions, PMBus-actuated over the fleet bus
+# ---------------------------------------------------------------------------
+
+class HostDecisionController:
+    """Decide-only host controller: runs `Policy.update_host` between steps
+    with no bus actuation — for studying SW-path decision logic without
+    paying (or modelling) PMBus latency. Pair with HostRailController when
+    actuation cost matters."""
+
+    def __init__(self, policy: Any):
+        if policy is None:
+            raise ValueError("HostDecisionController needs a policy")
+        self.policy = policy
+        self.name = f"host-decide[{getattr(policy, 'name', 'policy')}]"
+        self.decisions = 0
+
+    def control_step(self, plane: PowerPlaneState,
+                     telemetry: Telemetry) -> PowerPlaneState:
+        self.decisions += 1
+        if jnp.ndim(plane.v_core) >= 1:
+            return self.policy.update_fleet(plane, telemetry)
+        return self.policy.update_host(plane, telemetry)
+
+    def stats(self) -> ControlPlaneStats:
+        return ControlPlaneStats(decisions=self.decisions)
+
+class HostRailController:
+    """Host controller driving 1..N boards through the event-scheduled
+    multi-segment PMBus model (paper §III-C analogue at fleet scale).
+
+    With `policy=None` it is pure actuation (push whatever the state asks
+    for); with a policy it is decide-then-actuate. Scalar states drive board
+    0; `[n_chips]` states drive one board per chip concurrently in simulated
+    time."""
+
+    def __init__(
+        self,
+        policy: Any = None,
+        *,
+        n_chips: int = 1,
+        path: ControlPath | str = ControlPath.SOFTWARE,
+        clock_hz: int = 400_000,
+        spec: ChipSpec = V5E,
+        settle_band_frac: float = 0.01,
+        fleet: FleetPowerManager | None = None,
+        seed: int = 0,
+    ):
+        self.policy = policy
+        self.spec = spec
+        self.settle_band_frac = settle_band_frac
+        self.fleet = fleet if fleet is not None else FleetPowerManager(
+            n_chips, TPU_V5E_RAIL_MAP, path=path, clock_hz=clock_hz, seed=seed)
+        self.name = (f"host[{getattr(policy, 'name', 'actuate-only')}]"
+                     f"x{self.fleet.n_boards}")
+        self.decisions = 0
+        self.last_report = None   # FleetActuationReport of the latest round
+
+    # -- decide ---------------------------------------------------------------
+    def decide(self, plane: PowerPlaneState,
+               telemetry: Telemetry) -> PowerPlaneState:
+        if self.policy is None:
+            return plane
+        if jnp.ndim(plane.v_core) >= 1:
+            return self.policy.update_fleet(plane, telemetry)
+        return self.policy.update_host(plane, telemetry)
+
+    # -- actuate --------------------------------------------------------------
+    def actuate(self, plane: PowerPlaneState) -> PowerPlaneState:
+        """Push the state's rail voltages through PMBus on every board;
+        returns the state with voltages replaced by what the regulators
+        actually achieved (clamp + LINEAR16 quantization + settling)."""
+        batched = jnp.ndim(plane.v_core) >= 1
+        want = {name: np.atleast_1d(np.asarray(jax.device_get(
+                    getattr(plane, field)), dtype=np.float64))
+                for name, field in _LANE_FIELDS.items()}
+        n = want["VDD_CORE"].shape[0]
+        if n != self.fleet.n_boards:
+            raise ValueError(
+                f"state has {n} chip(s) but the fleet bus has "
+                f"{self.fleet.n_boards} board(s)")
+        setpoints = [{RAIL_LANES[name]: float(want[name][i])
+                      for name in RAIL_LANES} for i in range(n)]
+        achieved, self.last_report = self.fleet.apply_setpoints(
+            setpoints, settle_band_frac=self.settle_band_frac)
+        got = {name: np.array([achieved[i][lane] for i in range(n)],
+                              dtype=np.float32)
+               for name, lane in RAIL_LANES.items()}
+        if not batched:
+            return dataclasses.replace(
+                plane,
+                v_core=jnp.float32(got["VDD_CORE"][0]),
+                v_hbm=jnp.float32(got["VDD_HBM"][0]),
+                v_io=jnp.float32(got["VDD_IO"][0]))
+        return dataclasses.replace(
+            plane,
+            v_core=jnp.asarray(got["VDD_CORE"]),
+            v_hbm=jnp.asarray(got["VDD_HBM"]),
+            v_io=jnp.asarray(got["VDD_IO"]))
+
+    # old single-board HostPowerController spelling
+    apply = actuate
+
+    def control_step(self, plane: PowerPlaneState,
+                     telemetry: Telemetry) -> PowerPlaneState:
+        self.decisions += 1
+        return self.actuate(self.decide(plane, telemetry))
+
+    # -- observability --------------------------------------------------------
+    @property
+    def pm(self):
+        """Board 0's PowerManager (single-board back-compat)."""
+        return self.fleet.segments[0].pm
+
+    @property
+    def actuations(self) -> int:
+        return self.fleet.lane_writes
+
+    @property
+    def actuation_seconds(self) -> float:
+        return self.fleet.actuation_seconds
+
+    def readback(self, board: int = 0) -> dict[str, float]:
+        """PMBus-sampled (READ_VOUT) rail voltages of one board."""
+        pm = self.fleet.segments[board].pm
+        return {name: pm.get_voltage(lane)
+                for name, lane in RAIL_LANES.items()}
+
+    def stats(self) -> ControlPlaneStats:
+        return ControlPlaneStats(
+            decisions=self.decisions,
+            actuations=self.fleet.lane_writes,
+            failed_actuations=self.fleet.failed_writes,
+            actuation_seconds=self.fleet.actuation_seconds,
+            serialized_seconds=self.fleet.serialized_seconds)
+
+
+class HostPowerController(HostRailController):
+    """Back-compat shim: the pre-control-plane single-board actuator
+    (`apply(state)`), now a thin alias over HostRailController."""
+
+    def __init__(self, path: ControlPath | str = ControlPath.SOFTWARE,
+                 clock_hz: int = 400_000, spec: ChipSpec = V5E):
+        super().__init__(None, n_chips=1, path=path, clock_hz=clock_hz,
+                         spec=spec)

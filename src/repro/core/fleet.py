@@ -1,0 +1,233 @@
+"""Fleet-scale PMBus: N boards, each with its own serialized bus segment,
+sharing one fleet timeline through an event queue.
+
+The single-board model (pmbus.PmBus) serializes every transaction on one
+global clock, so actuating a fleet of N chips would cost N x the single-board
+latency in simulated time — physically wrong (each board has its own two-wire
+bus) and computationally hopeless for 1000-chip sweeps. Here each board is a
+`BusSegment`: a full PowerManager stack (UCD9248 model + regulator dynamics +
+per-path controller overheads) on its *own local clock*. Fleet-level
+operations schedule per-segment work as events on the shared timeline
+(pmbus.EventQueue), let every segment run ahead independently, then advance
+fleet time to the max over segments — fleet actuations overlap in simulated
+time exactly as N independent buses would.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.pmbus import EventQueue, SimClock
+from repro.core.power_manager import ControlPath, PowerManager
+from repro.core.rails import TPU_V5E_RAIL_MAP, RailMap
+
+
+@dataclasses.dataclass
+class FleetActuationReport:
+    """Timing + outcome of one fleet-wide actuation round."""
+    boards_touched: int
+    lane_writes: int            # command sequences that completed on a bus
+    elapsed_s: float            # fleet-time cost (max over segments)
+    serialized_s: float         # what one shared bus would have cost (sum)
+    failed_writes: int = 0      # rejected requests (e.g. outside envelope)
+    errors: tuple[str, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        return self.failed_writes == 0
+
+    @property
+    def overlap_speedup(self) -> float:
+        return self.serialized_s / self.elapsed_s if self.elapsed_s > 0 else 1.0
+
+
+class BusSegment:
+    """One board's serialized PMBus + regulators on a local timeline.
+
+    The local clock may run ahead of fleet time while an actuation is in
+    flight; `catch_up` models the segment sitting idle until fleet time
+    passes it again."""
+
+    def __init__(self, board_id: int, pm: PowerManager):
+        self.board_id = board_id
+        self.pm = pm
+        self.busy_seconds = 0.0
+
+    @property
+    def local_now(self) -> float:
+        return self.pm.clock.now
+
+    def catch_up(self, t: float) -> None:
+        self.pm.clock.advance_to(t)
+
+    def set_voltage_settled(self, lane: int, volts: float,
+                            settle_band_frac: float = 0.01
+                            ) -> tuple[float, str | None]:
+        """Full voltage-update workflow + wait for regulator settling on this
+        segment's local clock; returns (achieved rail voltage, error) where
+        error is None on success and the rejection reason otherwise."""
+        t0 = self.pm.clock.now
+        res = self.pm.set_voltage(lane, volts)
+        if res.ok:
+            ch = self.pm.channels[lane]
+            self.pm.clock.advance(
+                ch.settle_time_to_band(abs(volts) * settle_band_frac))
+        self.busy_seconds += self.pm.clock.now - t0
+        return self.pm.rail_voltage_now(lane), (None if res.ok else res.error)
+
+    def rail_voltage(self, lane: int) -> float:
+        return self.pm.rail_voltage_now(lane)
+
+
+class FleetPowerManager:
+    """Event-scheduled multi-segment bus: one PowerManager per board, one
+    shared fleet clock, actuation rounds that cost max-over-segments.
+
+    `apply_setpoints` is the fleet analogue of the old single-board
+    HostPowerController.apply: push per-chip rail setpoints, pay the
+    characterized PMBus + settling cost *concurrently across boards*, and
+    read back what each regulator actually achieved."""
+
+    def __init__(
+        self,
+        n_boards: int,
+        rail_map: RailMap = TPU_V5E_RAIL_MAP,
+        *,
+        path: ControlPath | str = ControlPath.SOFTWARE,
+        clock_hz: int = 400_000,
+        seed: int = 0,
+        loads: dict[str, Callable[[float, float], float]] | None = None,
+    ):
+        if n_boards < 1:
+            raise ValueError(f"n_boards must be >= 1, got {n_boards}")
+        self.rail_map = rail_map
+        self.clock = SimClock()            # fleet (global) time
+        self.events = EventQueue()
+        self.segments = [
+            BusSegment(i, PowerManager(rail_map, path=path, clock_hz=clock_hz,
+                                       loads=loads, seed=seed * 8191 + i))
+            for i in range(n_boards)
+        ]
+        self.actuation_rounds = 0
+        self.actuation_seconds = 0.0       # fleet-time total
+        self.serialized_seconds = 0.0      # sum-over-segments total
+        self.lane_writes = 0
+        self.failed_writes = 0
+
+    @property
+    def n_boards(self) -> int:
+        return len(self.segments)
+
+    # -- timeline management ---------------------------------------------------
+    def _barrier(self) -> float:
+        """Drain due events and advance fleet time to the max segment time."""
+        t = max((s.local_now for s in self.segments), default=self.clock.now)
+        t = max(t, self.clock.now)
+        self.events.run_until(t)
+        return self.clock.advance_to(t)
+
+    def sync(self) -> None:
+        """Bring every idle segment up to fleet time."""
+        for s in self.segments:
+            s.catch_up(self.clock.now)
+
+    def idle(self, dt: float) -> None:
+        """Let simulated fleet time pass with no bus traffic (e.g. the
+        training step between host-path control rounds)."""
+        if dt < 0:
+            raise ValueError("time cannot go backwards")
+        self.clock.advance(dt)
+        self.events.run_until(self.clock.now)
+        self.sync()
+
+    # -- fleet actuation --------------------------------------------------------
+    def apply_setpoints(
+        self,
+        setpoints: Sequence[dict[int, float]],
+        *,
+        settle_band_frac: float = 0.01,
+        deadband_v: float = 1e-4,
+    ) -> tuple[list[dict[int, float]], FleetActuationReport]:
+        """Push per-board {lane: volts} setpoints through every segment.
+
+        Per board: skip lanes already within `deadband_v` of the request;
+        otherwise run the full Fig-5 command sequence + settling on that
+        board's local clock. All touched boards proceed concurrently in
+        simulated time; fleet time advances by the slowest board's cost.
+        Returns (per-board achieved {lane: volts}, timing report)."""
+        if len(setpoints) != self.n_boards:
+            raise ValueError(
+                f"expected {self.n_boards} setpoint dicts, got {len(setpoints)}")
+        self.sync()
+        t0 = self.clock.now
+        achieved: list[dict[int, float]] = [dict() for _ in self.segments]
+        touched = 0
+        writes = 0
+        errors: list[str] = []
+
+        def make_actuation(seg: BusSegment, wanted: dict[int, float]):
+            def fire(t_fire: float, seg=seg, wanted=wanted):
+                nonlocal writes
+                seg.catch_up(t_fire)
+                for lane, volts in sorted(wanted.items()):
+                    if abs(seg.rail_voltage(lane) - volts) > deadband_v:
+                        v, err = seg.set_voltage_settled(
+                            lane, volts, settle_band_frac)
+                        achieved[seg.board_id][lane] = v
+                        if err is None:
+                            writes += 1
+                        else:
+                            errors.append(
+                                f"board {seg.board_id} lane {lane}: {err}")
+                    else:
+                        achieved[seg.board_id][lane] = seg.rail_voltage(lane)
+            return fire
+
+        for seg, wanted in zip(self.segments, setpoints):
+            if not wanted:
+                continue
+            need = any(abs(seg.rail_voltage(l) - v) > deadband_v
+                       for l, v in wanted.items())
+            if need:
+                touched += 1
+            # schedule even deadband-only boards so readback is time-consistent
+            self.events.schedule(t0, make_actuation(seg, dict(wanted)))
+
+        self.events.run_until(t0)          # fire this round's actuations
+        self._barrier()
+        elapsed = self.clock.now - t0
+        serialized = sum(s.local_now - t0 for s in self.segments
+                         if s.local_now > t0)
+        self.actuation_rounds += 1
+        self.actuation_seconds += elapsed
+        self.serialized_seconds += serialized
+        self.lane_writes += writes
+        self.failed_writes += len(errors)
+        return achieved, FleetActuationReport(touched, writes, elapsed,
+                                              serialized, len(errors),
+                                              tuple(errors))
+
+    # -- telemetry --------------------------------------------------------------
+    def readback(self, lanes: Iterable[int] | None = None) -> np.ndarray:
+        """Instantaneous true rail voltages, [n_boards, n_lanes] (oscilloscope
+        view; PMBus-sampled telemetry goes through each segment's PowerManager)."""
+        lanes = list(lanes) if lanes is not None else self.rail_map.lanes()
+        self.sync()
+        return np.array([[s.rail_voltage(l) for l in lanes]
+                         for s in self.segments])
+
+    def stats(self) -> dict[str, float]:
+        return {
+            "boards": self.n_boards,
+            "actuation_rounds": self.actuation_rounds,
+            "actuation_s": self.actuation_seconds,
+            "serialized_s": self.serialized_seconds,
+            "lane_writes": self.lane_writes,
+            "failed_writes": self.failed_writes,
+            "events_processed": self.events.processed,
+            "fleet_time_s": self.clock.now,
+            "transactions": sum(s.pm.bus.transaction_count for s in self.segments),
+        }

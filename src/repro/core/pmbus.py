@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import heapq
 from typing import Callable
 
 from repro.core import codecs
@@ -111,6 +112,68 @@ class SimClock:
             raise ValueError("time cannot go backwards")
         self._t += dt
         return self._t
+
+    def advance_to(self, t: float) -> float:
+        """Advance to absolute time `t` (no-op if already past it)."""
+        if t > self._t:
+            self._t = t
+        return self._t
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    """One scheduled callback on a simulated timeline. Ordering is
+    (time, seq) so simultaneous events fire in scheduling order."""
+    t: float
+    seq: int
+    fn: Callable[[float], None] = dataclasses.field(compare=False)
+
+
+class EventQueue:
+    """Discrete-event scheduler over simulated time.
+
+    The fleet bus model (fleet.py) uses this to let N per-board bus segments
+    make progress concurrently in simulated time: work on each segment is
+    scheduled as events on the shared fleet timeline and drained in global
+    time order, instead of serializing the whole world through one PmBus."""
+
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = 0
+        self.processed = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def schedule(self, t: float, fn: Callable[[float], None]) -> Event:
+        ev = Event(t, self._seq, fn)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def next_time(self) -> float | None:
+        return self._heap[0].t if self._heap else None
+
+    def run_until(self, t: float) -> int:
+        """Pop and run every event with fire time <= t, in (time, seq) order.
+        Returns the number of events processed. Events may schedule further
+        events; those are honored in the same drain if they land <= t."""
+        n = 0
+        while self._heap and self._heap[0].t <= t:
+            ev = heapq.heappop(self._heap)
+            ev.fn(ev.t)
+            n += 1
+        self.processed += n
+        return n
+
+    def run_all(self) -> int:
+        n = 0
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            ev.fn(ev.t)
+            n += 1
+        self.processed += n
+        return n
 
 
 # ---------------------------------------------------------------------------

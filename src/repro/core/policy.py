@@ -8,7 +8,10 @@ the paper's control paths:
   * `update_jax(state, telemetry) -> state` — pure jnp, compiled into the
     step (in-graph / HW-path analogue);
   * `update_host(state, telemetry) -> state` — plain Python between steps
-    (host / SW-path analogue), to be pushed through HostPowerController.
+    (host / SW-path analogue), pushed through control_plane.HostRailController;
+
+plus `update_fleet(state, telemetry) -> state` for `[n_chips]`-batched fleet
+states (per-chip vmap with optional fleet-level reductions).
 
 Telemetry is a dict with (at least) the keys produced by
 power_plane.account_step plus 'grad_error' (the gradient-domain BER) when
@@ -36,6 +39,15 @@ class Policy:
     def update_host(self, state: PowerPlaneState, telemetry) -> PowerPlaneState:
         # default: same decision logic, evaluated host-side between steps
         return self.update_jax(state, telemetry)
+
+    def update_fleet(self, state: PowerPlaneState, telemetry) -> PowerPlaneState:
+        """Per-chip decision vectorized over a `[n_chips]`-batched state via
+        `jax.vmap`. Scalar telemetry entries broadcast to the fleet; policies
+        with fleet-level reductions (e.g. worst-chip gating) override this."""
+        n = state.v_core.shape[0]
+        telem = {k: jnp.broadcast_to(jnp.asarray(v), (n,))
+                 if jnp.ndim(v) == 0 else v for k, v in telemetry.items()}
+        return jax.vmap(self.update_jax)(state, telem)
 
 
 @dataclasses.dataclass
@@ -140,5 +152,36 @@ class ClosedLoop(Policy):
         return dataclasses.replace(state, v_io=v_io, comp_level=lvl.astype(jnp.int32))
 
 
+@dataclasses.dataclass
+class WorstChipGate(Policy):
+    """Fleet-level reduction wrapper: every chip's decision is gated on the
+    *worst* chip's error telemetry (the fleet version of the paper's bounded-
+    BER rule — a link is only as safe as its worst lane). With per-chip
+    margins this is the conservative fleet policy: no chip undervolts past
+    what the worst chip's measured error allows."""
+    inner: Policy = dataclasses.field(default_factory=lambda: BERBounded())
+    reduce_keys: tuple[str, ...] = ("grad_error",)
+    name: str = "worst-chip"
+
+    def __post_init__(self):
+        self.name = f"worst-chip[{self.inner.name}]"
+
+    def update_jax(self, state, telemetry):
+        # scalar state: one chip IS the worst chip
+        return self.inner.update_jax(state, telemetry)
+
+    def update_host(self, state, telemetry):
+        return self.inner.update_host(state, telemetry)
+
+    def update_fleet(self, state, telemetry):
+        telem = dict(telemetry)
+        for k in self.reduce_keys:
+            if k in telem and jnp.ndim(telem[k]) >= 1:
+                telem[k] = jnp.broadcast_to(jnp.max(telem[k]),
+                                            telem[k].shape)
+        return self.inner.update_fleet(state, telem)
+
+
 POLICIES = {p.name: p for p in
-            (StaticNominal(), BERBounded(), PhaseAware(), ClosedLoop())}
+            (StaticNominal(), BERBounded(), PhaseAware(), ClosedLoop(),
+             WorstChipGate(BERBounded()))}

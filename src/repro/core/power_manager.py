@@ -163,6 +163,13 @@ class PowerManager:
         return self._issue(Transaction(Primitive.READ_WORD, rail.pmbus_address, cmd),
                            is_read=True)
 
+    # Opcodes whose conversion path consumes `value` (Table III); a missing
+    # value must come back as a structured error, not a TypeError mid-sequence.
+    _VALUE_REQUIRED = frozenset({
+        Opcode.SET_UNDER_VOLTAGE, Opcode.SET_POWER_GOOD_ON,
+        Opcode.SET_POWER_GOOD_OFF, Opcode.SET_VOLTAGE,
+    })
+
     # -- the opcode interface (Table III) -------------------------------------
     def execute(self, opcode: Opcode | int, lane: int = 0,
                 value: float | None = None) -> RequestResult:
@@ -171,6 +178,13 @@ class PowerManager:
         comps: list[Completion] = []
         out_value: float | None = None
         err: str | None = None
+
+        if opcode in self._VALUE_REQUIRED and value is None:
+            self.status_fault = True
+            res = RequestResult(False, opcode, lane, None, (), t0, t0,
+                                f"opcode {opcode.name} requires a value")
+            self.request_log.append(res)
+            return res
 
         if opcode == Opcode.CLEAR_STATUS:
             # Controller-internal reset only — no PMBus transaction (Table III).
@@ -216,12 +230,16 @@ class PowerManager:
         Expands to PAGE + 4 Write Words + VOUT_COMMAND = 6 PMBus transactions
         when the lane changed, 5 otherwise."""
         rail = self.rail_map.by_lane(lane)
-        if not (rail.v_min <= volts <= rail.v_max):
-            # Mechanism-level envelope check; policy owns the smart limits.
+        # Mechanism-level envelope check; policy owns the smart limits. The
+        # epsilon admits float32-rounded policy outputs sitting exactly on the
+        # envelope edge (e.g. f32(0.65) < 0.65), which are then clamped in.
+        eps = 1e-6
+        if not (rail.v_min - eps <= volts <= rail.v_max + eps):
             return RequestResult(False, Opcode.SET_VOLTAGE, lane, volts,
                                  t_issue=self.clock.now, t_done=self.clock.now,
                                  error=f"{volts} V outside [{rail.v_min}, {rail.v_max}] "
                                        f"for {rail.name}")
+        volts = min(max(volts, rail.v_min), rail.v_max)
         th = thresholds or Thresholds()
         t0 = self.clock.now
         r1 = self.execute(Opcode.SET_UNDER_VOLTAGE, lane, volts * th.uv_warn)
@@ -269,7 +287,13 @@ class PowerManager:
         res = self.set_voltage(lane, target_v)
         if not res.ok:
             raise RuntimeError(f"set_voltage failed: {res.error}")
-        ts, vs = self.sample_trace(lane, duration_s - (self.clock.now - t0))
+        remaining_s = duration_s - (self.clock.now - t0)
+        if remaining_s <= 0.0:
+            # Slow configurations (SW path / 100 kHz) can spend the whole
+            # window on the command sequence itself; an empty trace yields a
+            # NaN latency rather than a silently-bogus settling estimate.
+            remaining_s = 0.0
+        ts, vs = self.sample_trace(lane, remaining_s)
         return TransitionTrace(lane=lane, v_from=v_from, v_target=target_v,
                                t_request=t0, times=ts - t0, volts=vs,
                                command_time_s=res.elapsed_s)
@@ -302,6 +326,9 @@ class TransitionTrace:
         index measured on the sampled trace, offset by the first-sample time
         (samples only begin once the command sequence left the bus)."""
         from repro.core.settling import settling_time
+        if self.times.size == 0:
+            # command sequence consumed the whole measurement window
+            return float("nan")
         res = settling_time(self.times, self.volts, n=n, band_pct=band_pct)
         if not res.settled:
             return float("nan")

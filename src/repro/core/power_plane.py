@@ -27,8 +27,6 @@ import jax.numpy as jnp
 
 from repro.core import ecollectives
 from repro.core.hwspec import V5E, ChipSpec
-from repro.core.power_manager import ControlPath, PowerManager
-from repro.core.rails import TPU_V5E_RAIL_MAP
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -36,13 +34,17 @@ from repro.core.rails import TPU_V5E_RAIL_MAP
          meta_fields=[])
 @dataclasses.dataclass
 class PowerPlaneState:
-    """Per-step rail state (replicated across the mesh; SPMD-identical)."""
-    v_core: jnp.ndarray    # f32 []
-    v_hbm: jnp.ndarray     # f32 []
-    v_io: jnp.ndarray      # f32 []
-    comp_level: jnp.ndarray  # i32 [] — ecollectives compression level
-    energy_j: jnp.ndarray  # f32 [] — accumulated chip energy
-    step: jnp.ndarray      # i32 []
+    """Rail state. Scalar fields model one chip (replicated across the mesh;
+    SPMD-identical); `[n_chips]`-shaped fields model a fleet with per-chip
+    operating points — every accounting/policy function below is elementwise
+    jnp, so the same code path serves both via `jax.vmap` (see
+    `account_step_fleet` and control_plane.InGraphRailController)."""
+    v_core: jnp.ndarray    # f32 [] or [n_chips]
+    v_hbm: jnp.ndarray     # f32 [] or [n_chips]
+    v_io: jnp.ndarray      # f32 [] or [n_chips]
+    comp_level: jnp.ndarray  # i32 [] or [n_chips] — ecollectives compression level
+    energy_j: jnp.ndarray  # f32 [] or [n_chips] — accumulated chip energy
+    step: jnp.ndarray      # i32 [] or [n_chips]
 
     @staticmethod
     def nominal(spec: ChipSpec = V5E) -> "PowerPlaneState":
@@ -54,6 +56,36 @@ class PowerPlaneState:
             energy_j=jnp.float32(0.0),
             step=jnp.int32(0),
         )
+
+    @staticmethod
+    def fleet(n_chips: int, spec: ChipSpec = V5E) -> "PowerPlaneState":
+        """Batched state for an `n_chips` fleet, all chips at nominal."""
+        ones = jnp.ones((n_chips,), jnp.float32)
+        return PowerPlaneState(
+            v_core=ones * spec.nominal_v_core,
+            v_hbm=ones * spec.nominal_v_hbm,
+            v_io=ones * spec.nominal_v_io,
+            comp_level=jnp.full((n_chips,), ecollectives.LEVEL_LOSSLESS,
+                                jnp.int32),
+            energy_j=jnp.zeros((n_chips,), jnp.float32),
+            step=jnp.zeros((n_chips,), jnp.int32),
+        )
+
+    @property
+    def is_fleet(self) -> bool:
+        return jnp.ndim(self.v_core) >= 1
+
+    @property
+    def n_chips(self) -> int:
+        return int(self.v_core.shape[0]) if self.is_fleet else 1
+
+    def chip(self, i: int) -> "PowerPlaneState":
+        """Scalar view of chip `i` of a fleet state."""
+        if not self.is_fleet:
+            if i != 0:
+                raise IndexError("scalar state has exactly one chip")
+            return self
+        return jax.tree_util.tree_map(lambda x: x[i], self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,52 +179,36 @@ def account_step(profile: StepProfile, state: PowerPlaneState,
 
 
 # ---------------------------------------------------------------------------
-# Host controller (SW-path analogue): actuates via simulated PMBus
+# Fleet accounting: the same elementwise math vectorized over [n_chips]
 # ---------------------------------------------------------------------------
 
-class HostPowerController:
-    """Python-side controller that drives the TPU logical rails through the
-    same PowerManager/PMBus stack as the KC705 (paper §III-C analogue).
+def account_step_fleet(profile: StepProfile, state: PowerPlaneState,
+                       spec: ChipSpec = V5E, overlap: float = 1.0
+                       ) -> tuple[PowerPlaneState, dict[str, jnp.ndarray]]:
+    """`account_step` vmapped over a `[n_chips]`-batched state: every chip is
+    accounted at its own operating point; metrics come back `[n_chips]`."""
+    return jax.vmap(lambda s: account_step(profile, s, spec, overlap))(state)
 
-    Every actuation pays the characterized PMBus cost: the returned
-    `actuation_latency_s` is the simulated control-path latency (command
-    sequence + regulator settling), and transactions are logged."""
 
-    LANES = {"VDD_CORE": 0, "VDD_HBM": 1, "VDD_IO": 2}
+def fleet_summary(state: PowerPlaneState) -> dict[str, jnp.ndarray]:
+    """Fleet-level reductions of a batched state (worst/best chip + totals).
+    The hot-path [n_chips, n_fields] telemetry reduction lives in
+    repro.kernels.ops.fleet_reduce; this is the convenience view of the
+    state itself."""
+    if not state.is_fleet:
+        raise ValueError("fleet_summary needs a batched ([n_chips]) state")
+    return {
+        "v_core_min": jnp.min(state.v_core), "v_core_max": jnp.max(state.v_core),
+        "v_io_min": jnp.min(state.v_io), "v_io_max": jnp.max(state.v_io),
+        "energy_total_j": jnp.sum(state.energy_j),
+        "comp_level_min": jnp.min(state.comp_level),
+    }
 
-    def __init__(self, path: ControlPath | str = ControlPath.SOFTWARE,
-                 clock_hz: int = 400_000, spec: ChipSpec = V5E):
-        self.spec = spec
-        self.pm = PowerManager(TPU_V5E_RAIL_MAP, path=path, clock_hz=clock_hz)
-        self.actuations = 0
-        self.actuation_seconds = 0.0
 
-    def apply(self, state: PowerPlaneState) -> PowerPlaneState:
-        """Push the requested rail voltages through PMBus; returns the state
-        with voltages replaced by what the regulators actually achieved
-        (clamp + LINEAR16 quantization + settling)."""
-        wanted = {"VDD_CORE": float(state.v_core), "VDD_HBM": float(state.v_hbm),
-                  "VDD_IO": float(state.v_io)}
-        t0 = self.pm.clock.now
-        achieved = {}
-        for name, volts in wanted.items():
-            lane = self.LANES[name]
-            cur = self.pm.rail_voltage_now(lane)
-            if abs(cur - volts) > 1e-4:
-                res = self.pm.set_voltage(lane, volts)
-                if res.ok:
-                    # wait out regulator settling (1% band)
-                    ch = self.pm.channels[lane]
-                    self.pm.clock.advance(ch.settle_time_to_band(volts * 0.01))
-                self.actuations += 1
-            achieved[name] = self.pm.rail_voltage_now(lane)
-        self.actuation_seconds += self.pm.clock.now - t0
-        return dataclasses.replace(
-            state,
-            v_core=jnp.float32(achieved["VDD_CORE"]),
-            v_hbm=jnp.float32(achieved["VDD_HBM"]),
-            v_io=jnp.float32(achieved["VDD_IO"]),
-        )
-
-    def readback(self) -> dict[str, float]:
-        return {name: self.pm.get_voltage(lane) for name, lane in self.LANES.items()}
+# The host controller (SW-path analogue) moved into the unified control plane;
+# keep the historical import path working lazily to avoid a circular import.
+def __getattr__(name: str):
+    if name == "HostPowerController":
+        from repro.core.control_plane import HostPowerController
+        return HostPowerController
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -152,3 +152,18 @@ def quantize_int8(x, *, block: int = 256):
         from repro.kernels import quant_codec as qc
         return qc.quantize_int8(x, block=block, interpret=(mode == "interpret"))
     return ref.quantize_int8_reference(x, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Fleet telemetry reduction (fleet control plane hot path)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def fleet_reduce(x):
+    """x [n_chips, n_fields] -> (max, min, sum) over chips, each [n_fields].
+    One streaming pass on TPU (fleet_telemetry.py); XLA reference elsewhere."""
+    mode = _pallas_mode()
+    if mode != "off":
+        from repro.kernels import fleet_telemetry as ft
+        return ft.fleet_reduce(x, interpret=(mode == "interpret"))
+    return ref.fleet_reduce_reference(x)

@@ -147,3 +147,13 @@ def quantize_int8_reference(x, block: int = 256):
     scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fleet telemetry reduction oracle (fleet control plane)
+# ---------------------------------------------------------------------------
+
+def fleet_reduce_reference(x):
+    """x [n_chips, n_fields] -> (max, min, sum), each [n_fields] f32."""
+    xf = x.astype(jnp.float32)
+    return jnp.max(xf, axis=0), jnp.min(xf, axis=0), jnp.sum(xf, axis=0)

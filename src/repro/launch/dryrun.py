@@ -305,6 +305,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        # older jax returns one dict per device program
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_info = {

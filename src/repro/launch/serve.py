@@ -11,6 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.control_plane import HostRailController, InGraphRailController
 from repro.core.policy import POLICIES
 from repro.core.power_plane import StepProfile
 from repro.models import registry
@@ -25,6 +26,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--policy", choices=list(POLICIES), default="phase-aware")
+    ap.add_argument("--control-path", choices=("in-graph", "host"),
+                    default="in-graph")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny or True)
@@ -35,13 +38,17 @@ def main():
     params = api.init(jax.random.PRNGKey(0))
     n = sum(p.size for p in jax.tree_util.tree_leaves(params))
 
+    policy = POLICIES[args.policy]
+    controller = (InGraphRailController(policy)
+                  if args.control_path == "in-graph"
+                  else HostRailController(policy))
     engine = ServeEngine(
         cfg, params, max_len=args.prompt_len + args.max_new + 8,
         batch_size=args.batch,
         prefill_profile=StepProfile(2.0 * n * args.batch * args.prompt_len,
                                     2.0 * n, 0.0),
         decode_profile=StepProfile(2.0 * n * args.batch, 2.0 * n, 0.0),
-        policy=POLICIES[args.policy])
+        controller=controller)
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, max_new_tokens=args.max_new)

@@ -15,8 +15,9 @@ import shutil
 import jax
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.control_plane import HostRailController
 from repro.core.policy import POLICIES
-from repro.core.power_plane import HostPowerController, StepProfile
+from repro.core.power_plane import StepProfile
 from repro.data.pipeline import DataConfig, SyntheticLM, stub_frontend_inputs
 from repro.models import registry
 from repro.optim import adamw
@@ -37,6 +38,11 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--policy", choices=list(POLICIES), default="phase-aware")
+    ap.add_argument("--control-path", choices=("in-graph", "host"),
+                    default="in-graph",
+                    help="in-graph = HW-path analogue (policy compiled into "
+                         "the step); host = SW-path analogue (policy between "
+                         "steps, actuated through simulated PMBus)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
@@ -62,9 +68,11 @@ def main():
     sched = lambda s: wsd(s, peak_lr=3e-4, warmup_steps=10,
                           stable_steps=int(args.steps * 0.7),
                           decay_steps=int(args.steps * 0.2))
+    policy = POLICIES[args.policy]
+    in_graph = args.control_path == "in-graph"
     step = jit_train_step(make_train_step(
         lambda p, b: api.loss_fn(p, b), opt_cfg, sched, profile,
-        StepConfig(policy=POLICIES[args.policy])), donate=False)
+        StepConfig(policy=policy if in_graph else None)), donate=False)
 
     class _Data(SyntheticLM):
         def jax_batch(self, s, extra=None):
@@ -74,9 +82,10 @@ def main():
     data = _Data(DataConfig(cfg.vocab_size, args.seq, args.batch))
     if not args.resume:
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    controller = None if in_graph else HostRailController(policy)
     trainer = Trainer(step, data, TrainerConfig(
         total_steps=args.steps, ckpt_every=max(10, args.steps // 5),
-        ckpt_dir=args.ckpt_dir, host_controller=HostPowerController()),
+        ckpt_dir=args.ckpt_dir, controller=controller),
         {"params": params, "opt": opt, "plane": plane, "ef": ef})
     if args.resume and trainer.maybe_restore():
         print(f"resumed from step {trainer.start_step}")

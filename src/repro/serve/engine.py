@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.control_plane import as_controller
 from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
 from repro.models import registry
 
@@ -34,14 +35,19 @@ class ServeEngine:
                  batch_size: int,
                  prefill_profile: StepProfile | None = None,
                  decode_profile: StepProfile | None = None,
-                 policy=None):
+                 controller=None, policy=None):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg)
         self.max_len = max_len
         self.batch_size = batch_size
         self.plane = PowerPlaneState.nominal()
-        self.policy = policy
+        # single actuation path: a RailController (a bare policy is wrapped
+        # into the in-graph controller for back-compat)
+        if controller is not None and policy is not None:
+            raise ValueError("pass either controller= or policy=, not both")
+        self.controller = as_controller(controller if controller is not None
+                                        else policy)
         self.prefill_profile = prefill_profile or StepProfile(1e9, 1e9, 0.0)
         self.decode_profile = decode_profile or StepProfile(1e8, 1e9, 0.0)
         self.stats = ServeStats()
@@ -57,8 +63,8 @@ class ServeEngine:
             self.plane, m = account_step(profile, self.plane)
             self.stats.energy_j += float(m["energy_step_j"])
             self.stats.model_time_s += float(m["t_step_s"])
-            if self.policy is not None:
-                self.plane = self.policy.update_jax(self.plane, m)
+            if self.controller is not None:
+                self.plane = self.controller.control_step(self.plane, m)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  eos_id: int | None = None) -> np.ndarray:

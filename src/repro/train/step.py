@@ -5,8 +5,9 @@ link), AdamW update, and the power plane woven through the step.
 Two control paths, mirroring the paper (DESIGN.md §2.2):
   * in-graph controller: policy.update_jax composed INTO the jitted step
     (HW path analogue — deterministic, no host round trip);
-  * host controller: the trainer calls policy.update_host between steps and
-    actuates through the PMBus-simulated HostPowerController (SW analogue).
+  * host controller: the trainer runs a control_plane.HostRailController
+    between steps, actuating through the PMBus-simulated fleet bus (SW
+    analogue). Both paths implement control_plane.RailController.
 """
 
 from __future__ import annotations
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ecollectives
+from repro.core.control_plane import as_controller
 from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
 from repro.optim import adamw
 
@@ -29,7 +31,7 @@ class StepConfig:
     microbatches: int = 1
     grad_sync: str = "auto"          # auto | ef_int8 | ef_int8_topk
     k_fraction: float = 0.25
-    policy: Any = None               # in-graph policy or None
+    policy: Any = None               # in-graph policy/RailController or None
     dp_axes: tuple[str, ...] = ("data",)  # manual axes for ef sync
 
 
@@ -68,6 +70,9 @@ def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
                     step_cfg: StepConfig):
     """Returns train_step(params, opt_state, plane, ef_resid, batch) ->
     (params', opt_state', plane', ef_resid', metrics)."""
+    # HW-path analogue: the in-graph controller is compiled INTO the step,
+    # behind the same RailController interface the host path uses.
+    controller = as_controller(step_cfg.policy)
 
     def train_step(params, opt_state, plane: PowerPlaneState, ef_resid, batch):
         loss, metrics, grads = _accumulate_grads(
@@ -95,8 +100,8 @@ def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
 
         plane, power_metrics = account_step(profile, plane)
         telemetry = {**power_metrics, "grad_error": grad_error}
-        if step_cfg.policy is not None:
-            plane = step_cfg.policy.update_jax(plane, telemetry)
+        if controller is not None:
+            plane = controller.control_step(plane, telemetry)
 
         out_metrics = {"loss": loss, **metrics, **opt_metrics, **telemetry}
         return params, opt_state, plane, ef_resid, out_metrics
@@ -120,8 +125,13 @@ def shard_map_ef_step(train_step, mesh, dp_axes=("data",)):
     def mapped(params, opt_state, plane, ef_resid, batch):
         return train_step(params, opt_state, plane, ef_resid, batch)
 
-    return jax.shard_map(
-        mapped, mesh=mesh,
-        in_specs=(rep, rep, rep, rep, batch_spec),
-        out_specs=(rep, rep, rep, rep, rep),
-        axis_names=set(dp_axes), check_vma=False)
+    in_specs = (rep, rep, rep, rep, batch_spec)
+    out_specs = (rep, rep, rep, rep, rep)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(mapped, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(dp_axes),
+                             check_vma=False)
+    # jax < 0.5: shard_map lives in jax.experimental (check_rep, no axis_names)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(mapped, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

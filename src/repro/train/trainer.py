@@ -18,7 +18,8 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
-from repro.core.power_plane import HostPowerController, PowerPlaneState
+from repro.core.control_plane import RailController, as_controller
+from repro.core.power_plane import PowerPlaneState
 from repro.core.telemetry import TelemetryLog
 from repro.core import ecollectives
 from repro.checkpoint.ckpt import CheckpointManager
@@ -43,9 +44,15 @@ class TrainerConfig:
     ckpt_every: int = 50
     ckpt_dir: str = "/tmp/repro_ckpt"
     async_ckpt: bool = True
-    host_policy: Any = None          # host-path (SW analogue) policy or None
-    host_controller: HostPowerController | None = None
+    # Host-path (SW analogue) control plane: a RailController, or a bare
+    # Policy (wrapped so update_host runs between steps, decide-only; pass a
+    # HostRailController to also pay PMBus actuation). The in-graph (HW
+    # analogue) path is configured on the step (train.step.StepConfig.policy).
+    controller: RailController | Any = None
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+
+    def __post_init__(self):
+        self.controller = as_controller(self.controller, host=True)
 
 
 class Trainer:
@@ -133,12 +140,10 @@ class Trainer:
 
             self.state.update(params=params, opt=opt, plane=plane, ef=ef)
 
-            # host-path control (SW analogue): decide + actuate via PMBus
-            if cfg.host_policy is not None:
-                new_plane = cfg.host_policy.update_host(plane, metrics)
-                if cfg.host_controller is not None:
-                    new_plane = cfg.host_controller.apply(new_plane)
-                self.state["plane"] = new_plane
+            # host-path control (SW analogue): one control_step through the
+            # unified rail control plane (decide + PMBus-actuate)
+            if cfg.controller is not None:
+                self.state["plane"] = cfg.controller.control_step(plane, metrics)
 
             self.log.append_from(step, metrics["loss"], metrics,
                                  self.state["plane"])
@@ -150,15 +155,15 @@ class Trainer:
     # -- reporting -------------------------------------------------------------
     def summary(self) -> dict[str, Any]:
         t = self.log.totals()
+        ctrl = (self.cfg.controller.stats() if self.cfg.controller is not None
+                else None)
         return {
             **t,
             "restarts": self.restarts,
             "straggler_events": self.straggler_events,
             "ckpt_writes": self.ckpt_writes,
-            "host_actuations": (self.cfg.host_controller.actuations
-                                if self.cfg.host_controller else 0),
-            "host_actuation_s": (self.cfg.host_controller.actuation_seconds
-                                 if self.cfg.host_controller else 0.0),
+            "host_actuations": ctrl.actuations if ctrl else 0,
+            "host_actuation_s": ctrl.actuation_seconds if ctrl else 0.0,
             "mean_wall_step_s": float(np.mean(self._step_times))
             if self._step_times else 0.0,
         }

@@ -1,8 +1,10 @@
 """LINEAR16/LINEAR11 codec tests (paper §IV-B) — exact formats + hypothesis
 round-trip properties."""
 
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import codecs

@@ -2,11 +2,13 @@
 contraction (the property that makes the bounded-error region usable),
 wire-cost accounting, and hypothesis properties of the codec."""
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import ecollectives as ec

@@ -1,11 +1,13 @@
 """Head-padding planner: invariants (hypothesis) + numeric exactness of the
 padded attention vs an unpadded reference."""
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.models import common

@@ -11,8 +11,9 @@ import pytest
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get_config
+from repro.core.control_plane import HostRailController
 from repro.core.policy import BERBounded, PhaseAware, StaticNominal
-from repro.core.power_plane import HostPowerController, PowerPlaneState, StepProfile
+from repro.core.power_plane import PowerPlaneState, StepProfile
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import registry
 from repro.optim import adamw
@@ -125,14 +126,16 @@ def test_phase_aware_policy_saves_energy(tmp_path):
 
 
 def test_host_controller_pays_pmbus_latency(tmp_path):
-    hc = HostPowerController()
+    hc = HostRailController(PhaseAware())
     tr = _setup(tmp_path, steps=6, policy=None)
     tr.cfg = TrainerConfig(
         total_steps=6, ckpt_every=10, ckpt_dir=str(tmp_path),
-        async_ckpt=False, host_policy=PhaseAware(), host_controller=hc)
+        async_ckpt=False, controller=hc)
     tr.run()
     assert hc.actuations >= 1
     assert hc.actuation_seconds > 0   # ms-scale PMBus cost was accounted
+    st = hc.stats()
+    assert st.decisions == 6 and st.actuation_seconds == hc.actuation_seconds
     # achieved voltages respect the rail envelopes
     v = hc.readback()
     from repro.core.rails import TPU_V5E_RAIL_MAP as rm
