@@ -3,11 +3,20 @@
 The multi-FPGA related work (Salamat et al.; Khaleghi et al.) shows the
 interesting regime is *fleets* of devices with per-device margins. This sweep
 runs the whole control plane at fleet scale: per-chip batched
-`PowerPlaneState` advanced by a vmapped in-graph controller over a scan of
-steps (per-chip gradient-error telemetry with chip-to-chip process spread),
+`PowerPlaneState` seeded from a `FleetSpec` (per-chip process-varied nominal
+voltages, leakage, and BER-curve offsets — hwspec.py, not a telemetry-side
+hack), advanced by a vmapped in-graph controller over a scan of steps,
 fleet-level reductions through the kernels.ops.fleet_reduce hot path, and one
 host-path actuation round through the event-scheduled multi-segment PMBus bus
 to price what deploying the decided operating points costs in fleet time.
+
+Two rollout paths per the paper's control-path split:
+  * in-graph (HW analogue): the whole rollout compiles into one scan —
+    scales to 1024 chips;
+  * host (SW analogue, `_host_rollout`): decisions between steps, actuated
+    through PMBus with Table VI READ_VOUT polling interleaved; the control
+    period is chosen from the *measured* actuation latency so control costs
+    at most `DUTY` of the timeline (paper §VII-C latency/energy tradeoff).
 
 Reported per (fleet size, policy): energy saving vs static-nominal margins,
 worst-chip error vs the bound, and the bus actuation overlap speedup
@@ -16,6 +25,7 @@ worst-chip error vs the bound, and the bus actuation overlap speedup
 
 from __future__ import annotations
 
+import math
 import time
 
 import jax
@@ -24,50 +34,66 @@ import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.control_plane import HostRailController, InGraphRailController
-from repro.core.fleet import FleetPowerManager
+from repro.core.hwspec import FleetSpec
 from repro.core.policy import (BERBounded, ClosedLoop, StaticNominal,
                                WorstChipGate)
-from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
+from repro.core.power_plane import (PowerPlaneState, StepProfile,
+                                    account_step_fleet, step_time_s)
 from repro.kernels import ops
 
 PROFILE = StepProfile(flops_per_chip=2e12, hbm_bytes_per_chip=8e9,
                       ici_bytes_per_chip=4e9, grad_bytes_per_chip=3e9)
 ERROR_BOUND = 5e-3
 STEPS = 200
+FLEET_SEED = 17
 
-FLEET_SIZES = (64, 256)
+FLEET_SIZES = (64, 256, 1024)
+HOST_FLEET_SIZES = (64,)      # SW path: every board is a python PMBus stack
+HOST_ROUNDS = 12
+DUTY = 0.10                   # control may occupy <= 10% of the timeline
+
 POLICIES = (StaticNominal(), BERBounded(), ClosedLoop(),
             WorstChipGate(ClosedLoop()))
 
 
+def _grad_error(plane, fs_io_nom, sens, key, n_chips):
+    """Per-chip measured gradient-domain error: each chip's BER-curve offset
+    (FleetSpec.error_sensitivity) x its own VDD_IO undervolt margin."""
+    margin = jnp.maximum(0.0, fs_io_nom - plane.v_io) / fs_io_nom
+    noise = 1.0 + 0.1 * jax.random.normal(key, (n_chips,))
+    return ERROR_BOUND * sens * noise * (0.2 + 12.0 * margin)
+
+
 # jit caches on function identity, so the compiled rollout is memoized per
-# (fleet size, policy) — timed()'s warmup then genuinely warms the cache.
+# (fleet size, policy, steps) — timed()'s warmup then genuinely warms the
+# cache.
 _ROLLOUT_CACHE: dict = {}
 
 
-def _rollout_fn(n_chips: int, policy):
-    key = (n_chips, policy.name)
+def _rollout_fn(n_chips: int, policy, steps: int):
+    key = (n_chips, policy.name, steps)
     if key in _ROLLOUT_CACHE:
         return _ROLLOUT_CACHE[key]
     ctrl = InGraphRailController(policy)
-    # per-chip error sensitivity: worst chip ~2.2x the median
-    spread = 1.0 + 1.2 * jax.random.uniform(jax.random.PRNGKey(17), (n_chips,))
+    fs = FleetSpec.sample(n_chips, seed=FLEET_SEED)
+    v_nom_core = jnp.asarray(fs.v_core_nominal)
+    v_nom_hbm = jnp.asarray(fs.v_hbm_nominal)
+    v_nom_io = jnp.asarray(fs.v_io_nominal)
+    sens = jnp.asarray(fs.error_sensitivity)
 
-    def round_fn(plane, key):
-        plane, metrics = jax.vmap(lambda s: account_step(PROFILE, s))(plane)
-        # measured gradient error grows as VDD_IO digs below nominal
-        margin = jnp.maximum(0.0, 0.95 - plane.v_io) / 0.95
-        noise = 1.0 + 0.1 * jax.random.normal(key, (n_chips,))
-        err = ERROR_BOUND * spread * noise * (0.2 + 12.0 * margin)
-        telemetry = {**metrics, "grad_error": err}
+    def round_fn(plane, k):
+        plane, metrics = account_step_fleet(PROFILE, plane, fs)
+        err = _grad_error(plane, v_nom_io, sens, k, n_chips)
+        telemetry = {**metrics, "grad_error": err, "v_nom_core": v_nom_core,
+                     "v_nom_hbm": v_nom_hbm, "v_nom_io": v_nom_io}
         plane = ctrl.control_step(plane, telemetry)
         out = {"power_w": metrics["power_w"], "grad_error": err}
         return plane, out
 
     @jax.jit
     def rollout():
-        keys = jax.random.split(jax.random.PRNGKey(3), STEPS)
-        plane = PowerPlaneState.fleet(n_chips)
+        keys = jax.random.split(jax.random.PRNGKey(3), steps)
+        plane = PowerPlaneState.from_fleet(fs)
         plane, hist = jax.lax.scan(round_fn, plane, keys)
         return plane, hist
 
@@ -75,23 +101,73 @@ def _rollout_fn(n_chips: int, policy):
     return rollout
 
 
-def _fleet_rollout(n_chips: int, policy
+def _fleet_rollout(n_chips: int, policy, steps: int = STEPS
                    ) -> "tuple[PowerPlaneState, dict[str, jnp.ndarray]]":
-    """STEPS control rounds of a fleet under one in-graph controller,
-    compiled as a single scan; per-chip grad-error telemetry with a fixed
-    chip-to-chip spread (process variation analogue)."""
-    plane, hist = _rollout_fn(n_chips, policy)()
+    """`steps` control rounds of a fleet under one in-graph controller,
+    compiled as a single scan, with FleetSpec per-chip process variation."""
+    plane, hist = _rollout_fn(n_chips, policy, steps)()
     jax.block_until_ready(plane.energy_j)
     return plane, hist
 
 
-def run():
+def _host_rollout(n_chips: int, policy, rounds: int = HOST_ROUNDS,
+                  duty: float = DUTY):
+    """Host-path fleet rollout with an actuation-latency-aware control
+    period (paper §VII-C): measure what one fleet actuation round costs on
+    the event-scheduled bus, then space control rounds so actuation occupies
+    at most `duty` of the fleet timeline. Table VI READ_VOUT polling runs
+    interleaved on every segment throughout."""
+    fs = FleetSpec.sample(n_chips, seed=FLEET_SEED)
+    hc = HostRailController(policy, n_chips=n_chips)
+    hc.enable_polling()
+    plane = PowerPlaneState.from_fleet(fs)
+    v_nom_io = jnp.asarray(fs.v_io_nominal)
+    sens = jnp.asarray(fs.error_sensitivity)
+    t_step = float(jnp.mean(step_time_s(PROFILE, plane)))
+
+    account = jax.jit(lambda p: account_step_fleet(PROFILE, p, fs))
+    keys = jax.random.split(jax.random.PRNGKey(11), rounds)
+
+    # calibration: one actuation round prices the control path, then the
+    # control period is ceil(latency/duty) worth of train steps
+    hc.actuate(plane)
+    act_s = hc.last_report.elapsed_s if hc.last_report else 0.0
+    period_steps = max(1, math.ceil(act_s / max(duty * t_step, 1e-12)))
+
+    telem_keys = ("v_nom_core", "v_nom_hbm", "v_nom_io")
+    nominals = dict(zip(telem_keys, (jnp.asarray(fs.v_core_nominal),
+                                     jnp.asarray(fs.v_hbm_nominal), v_nom_io)))
+    for r in range(rounds):
+        for _ in range(period_steps):
+            plane, metrics = account(plane)
+        hc.fleet.idle(period_steps * t_step)   # polls fire through train time
+        err = _grad_error(plane, v_nom_io, sens, keys[r], n_chips)
+        plane = hc.control_step(plane, {**metrics, "grad_error": err,
+                                        **nominals})
+    st = hc.stats()
+    fleet_time = hc.fleet.clock.now
+    poll = hc.fleet.poll_stats
+    mean_poll_iv = float(np.nanmean([p.achieved_interval_s
+                                     for p in poll.values()])) if poll else 0.0
+    return plane, {
+        "period_steps": period_steps,
+        "actuation_duty": st.actuation_seconds / max(fleet_time, 1e-12),
+        "actuation_s": st.actuation_seconds,
+        "fleet_time_s": fleet_time,
+        "polls": st.polls,
+        "polls_deferred": st.polls_deferred,
+        "poll_interval_ms": mean_poll_iv * 1e3,
+    }
+
+
+def run(fleet_sizes=FLEET_SIZES, steps: int = STEPS,
+        host_fleet_sizes=HOST_FLEET_SIZES, host_rounds: int = HOST_ROUNDS):
     rows = []
     baseline_j: dict[int, float] = {}
-    for n in FLEET_SIZES:
+    for n in fleet_sizes:
         for policy in POLICIES:
-            (plane, hist), us = timed(lambda n=n, p=policy: _fleet_rollout(n, p),
-                                      repeats=1)
+            (plane, hist), us = timed(
+                lambda n=n, p=policy: _fleet_rollout(n, p, steps), repeats=1)
             # fleet telemetry reduction through the kernel hot path:
             # [n_chips, n_fields] -> per-field worst/best/total
             telem = jnp.stack([plane.energy_j, plane.v_io,
@@ -107,7 +183,7 @@ def run():
                 f"energy={total_j:.0f}J saving={100*saving:.1f}% "
                 f"v_io=[{float(t_min[1]):.3f},{float(t_max[1]):.3f}] "
                 f"worst_err={worst_err:.2e} (bound {ERROR_BOUND:.0e}) "
-                f"steps={STEPS}"))
+                f"steps={steps}"))
 
         # price ONE host-path deployment of the decided operating points
         # through the event-scheduled multi-segment bus (SW path, 400 kHz);
@@ -123,6 +199,21 @@ def run():
             f"serialized={rep.serialized_s*1e3:.1f}ms "
             f"overlap_speedup={rep.overlap_speedup:.0f}x "
             f"writes={rep.lane_writes}"))
+
+    # host-path (SW analogue) rollout: decisions between steps, PMBus
+    # actuation + Table VI polling on the fleet timeline, control period
+    # derived from measured actuation latency (§VII-C)
+    for n in host_fleet_sizes:
+        (plane, info), us = timed(
+            lambda n=n: _host_rollout(n, ClosedLoop(), rounds=host_rounds),
+            repeats=1)
+        rows.append(row(
+            f"fleet.{n}chips.host_rollout", us,
+            f"period={info['period_steps']}steps "
+            f"duty={100*info['actuation_duty']:.1f}% "
+            f"polls={info['polls']} deferred={info['polls_deferred']} "
+            f"poll_iv={info['poll_interval_ms']:.2f}ms "
+            f"v_io_mean={float(jnp.mean(plane.v_io)):.3f}"))
     return rows
 
 

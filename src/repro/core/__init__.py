@@ -11,7 +11,8 @@ from repro.core.control_plane import (
     HostDecisionController, HostPowerController, HostRailController,
     InGraphRailController, RailController, as_controller,
 )
-from repro.core.fleet import FleetPowerManager
+from repro.core.fleet import FleetPowerManager, SegmentPollStats
+from repro.core.hwspec import V5E, ChipSpec, FleetSpec
 from repro.core.power_manager import ControlPath, Opcode, PowerManager, Thresholds
 from repro.core.power_plane import (
     PowerPlaneState, StepProfile, account_step, account_step_fleet,
@@ -22,11 +23,12 @@ from repro.core.settling import settling_time
 from repro.core.transceiver import GtxLinkModel
 
 __all__ = [
-    "ControlPath", "FleetPowerManager", "GtxLinkModel",
-    "HostDecisionController", "HostPowerController", "HostRailController",
-    "InGraphRailController", "KC705_RAIL_MAP", "Opcode",
+    "ChipSpec", "ControlPath", "FleetPowerManager", "FleetSpec",
+    "GtxLinkModel", "HostDecisionController", "HostPowerController",
+    "HostRailController", "InGraphRailController", "KC705_RAIL_MAP", "Opcode",
     "PowerManager", "PowerPlaneState", "RailController", "RailMap",
-    "StepProfile", "TPU_V5E_RAIL_MAP", "Thresholds", "account_step",
-    "account_step_fleet", "as_controller", "fleet_summary", "linear11_decode",
-    "linear11_encode", "linear16_decode", "linear16_encode", "settling_time",
+    "SegmentPollStats", "StepProfile", "TPU_V5E_RAIL_MAP", "Thresholds",
+    "V5E", "account_step", "account_step_fleet", "as_controller",
+    "fleet_summary", "linear11_decode", "linear11_encode", "linear16_decode",
+    "linear16_encode", "settling_time",
 ]

@@ -59,6 +59,8 @@ class ControlPlaneStats:
     failed_actuations: int = 0       # rejected writes (e.g. outside envelope)
     actuation_seconds: float = 0.0   # fleet-time spent actuating (max-over-segments)
     serialized_seconds: float = 0.0  # single-shared-bus equivalent (sum)
+    polls: int = 0                   # periodic READ_VOUT rounds completed
+    polls_deferred: int = 0          # poll rounds that slipped (back-pressure)
 
 
 @runtime_checkable
@@ -248,13 +250,25 @@ class HostRailController:
         return {name: pm.get_voltage(lane)
                 for name, lane in RAIL_LANES.items()}
 
+    def enable_polling(self, interval_s: float | None = None,
+                       lanes=None) -> None:
+        """Start periodic READ_VOUT telemetry polling on every board's bus
+        segment (paper Table VI intervals by default), interleaved with this
+        controller's actuations on the fleet timeline. Polls fire as fleet
+        time advances — call `self.fleet.idle(dt)` between control rounds to
+        model the training time a real deployment would poll through."""
+        self.fleet.start_polling(interval_s, lanes)
+
     def stats(self) -> ControlPlaneStats:
         return ControlPlaneStats(
             decisions=self.decisions,
             actuations=self.fleet.lane_writes,
             failed_actuations=self.fleet.failed_writes,
             actuation_seconds=self.fleet.actuation_seconds,
-            serialized_seconds=self.fleet.serialized_seconds)
+            serialized_seconds=self.fleet.serialized_seconds,
+            polls=sum(st.polls for st in self.fleet.poll_stats.values()),
+            polls_deferred=sum(st.deferred
+                               for st in self.fleet.poll_stats.values()))
 
 
 class HostPowerController(HostRailController):

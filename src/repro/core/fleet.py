@@ -16,12 +16,13 @@ time exactly as N independent buses would.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
 from repro.core.pmbus import EventQueue, SimClock
-from repro.core.power_manager import ControlPath, PowerManager
+from repro.core.power_manager import ControlPath, Opcode, PowerManager
 from repro.core.rails import TPU_V5E_RAIL_MAP, RailMap
 
 
@@ -82,6 +83,39 @@ class BusSegment:
         return self.pm.rail_voltage_now(lane)
 
 
+@dataclasses.dataclass
+class SegmentPollStats:
+    """Outcome of one segment's periodic READ_VOUT telemetry polling.
+
+    `requested_interval_s` is what the operator asked for (defaults to the
+    segment's Table VI measurement interval x lanes); `achieved_interval_s`
+    is what the bus actually delivered. When a segment's poll rate exceeds
+    its serialized two-wire capacity — or actuation traffic occupies the bus
+    — polls slip (`deferred`) and the achieved interval degrades; polls are
+    *paced*, never queued into a backlog, and actuations are never dropped."""
+    board_id: int
+    requested_interval_s: float
+    polls: int = 0              # poll rounds completed
+    samples: int = 0            # successful per-lane READ_VOUT samples
+    deferred: int = 0           # rounds that slipped past their deadline
+    busy_s: float = 0.0         # bus time spent polling
+    _last_done: float = math.nan
+    _interval_sum_s: float = 0.0
+    _intervals: int = 0
+
+    @property
+    def achieved_interval_s(self) -> float:
+        return (self._interval_sum_s / self._intervals if self._intervals
+                else math.nan)
+
+    @property
+    def backpressure(self) -> float:
+        """achieved / requested interval; > 1 means the segment is
+        oversubscribed and polling degraded to what the bus can carry."""
+        a = self.achieved_interval_s
+        return a / self.requested_interval_s if not math.isnan(a) else 1.0
+
+
 class FleetPowerManager:
     """Event-scheduled multi-segment bus: one PowerManager per board, one
     shared fleet clock, actuation rounds that cost max-over-segments.
@@ -116,6 +150,11 @@ class FleetPowerManager:
         self.serialized_seconds = 0.0      # sum-over-segments total
         self.lane_writes = 0
         self.failed_writes = 0
+        # periodic READ_VOUT telemetry polling (paper Table VI intervals)
+        self._polling = False
+        self._poll_gen = 0   # invalidates stale periodic events on restart
+        self.poll_stats: dict[int, SegmentPollStats] = {}
+        self.last_poll: dict[int, dict[int, tuple[float, float]]] = {}
 
     @property
     def n_boards(self) -> int:
@@ -210,6 +249,92 @@ class FleetPowerManager:
                                               serialized, len(errors),
                                               tuple(errors))
 
+    # -- periodic telemetry polling ---------------------------------------------
+    def start_polling(self, interval_s: float | None = None,
+                      lanes: Iterable[int] | None = None) -> None:
+        """Start periodic per-segment READ_VOUT polling on the fleet
+        timeline, interleaved with actuations.
+
+        Every segment samples each polled lane through its own PowerManager
+        (paying the full Read Word + controller overhead of paper Table VI)
+        at the requested interval. `interval_s=None` asks for the fastest
+        the configuration supports: the segment's measurement interval times
+        the number of polled lanes. Polls fire whenever fleet time advances
+        (`idle`, actuation barriers), so telemetry and actuation traffic
+        share each segment's serialized bus.
+
+        Back-pressure: a poll that finds its bus still busy (actuation in
+        flight, or the previous poll still draining) slips to when the bus
+        frees up, and the *next* poll is scheduled from its completion — the
+        effective interval degrades to what the segment can carry instead of
+        building a backlog, and pending actuations are never dropped."""
+        if self._polling:
+            raise RuntimeError("polling already active; stop_polling() first")
+        lanes = list(lanes) if lanes is not None else self.rail_map.lanes()
+        if not lanes:
+            raise ValueError("need at least one lane to poll")
+        self._polling = True
+        self._poll_gen += 1
+        self.poll_stats = {}
+        self.last_poll = {s.board_id: {} for s in self.segments}
+        for seg in self.segments:
+            req = (interval_s if interval_s is not None
+                   else seg.pm.measurement_interval_s() * len(lanes))
+            if req <= 0:
+                raise ValueError(f"poll interval must be > 0, got {req}")
+            st = SegmentPollStats(seg.board_id, req)
+            self.poll_stats[seg.board_id] = st
+            self.events.schedule_periodic(
+                self.clock.now + req, self._make_poll(seg, st, lanes))
+
+    def stop_polling(self) -> None:
+        """Stop polling; in-flight periodic events unschedule themselves on
+        their next firing."""
+        self._polling = False
+
+    def _make_poll(self, seg: BusSegment, st: SegmentPollStats,
+                   lanes: list[int]):
+        gen = self._poll_gen
+        def poll(t_fire: float) -> float | None:
+            # gen check kills events of a stopped run even if polling has
+            # been restarted since (else a stop/start revives the old
+            # periodic events and the segment polls at double rate)
+            if not self._polling or gen != self._poll_gen:
+                return None
+            start = max(t_fire, seg.local_now)
+            slipped = start - t_fire > 1e-12
+            seg.catch_up(start)
+            for lane in lanes:
+                res = seg.pm.execute(Opcode.GET_VOLTAGE, lane)
+                if res.ok:
+                    self.last_poll[seg.board_id][lane] = (res.t_done, res.value)
+                    st.samples += 1
+            done = seg.local_now
+            st.polls += 1
+            st.busy_s += done - start
+            if slipped or done > t_fire + st.requested_interval_s:
+                st.deferred += 1
+            if not math.isnan(st._last_done):
+                st._interval_sum_s += done - st._last_done
+                st._intervals += 1
+            st._last_done = done
+            # degrade, don't backlog: next poll no earlier than completion
+            return max(t_fire + st.requested_interval_s, done)
+        return poll
+
+    def poll_readback(self, lanes: Iterable[int] | None = None) -> np.ndarray:
+        """Latest PMBus-*sampled* rail voltages, [n_boards, n_lanes] (NaN
+        where a lane was never polled) — the telemetry-path counterpart of
+        `readback`'s oscilloscope view."""
+        lanes = list(lanes) if lanes is not None else self.rail_map.lanes()
+        out = np.full((self.n_boards, len(lanes)), np.nan)
+        for s in self.segments:
+            got = self.last_poll.get(s.board_id, {})
+            for j, lane in enumerate(lanes):
+                if lane in got:
+                    out[s.board_id, j] = got[lane][1]
+        return out
+
     # -- telemetry --------------------------------------------------------------
     def readback(self, lanes: Iterable[int] | None = None) -> np.ndarray:
         """Instantaneous true rail voltages, [n_boards, n_lanes] (oscilloscope
@@ -230,4 +355,8 @@ class FleetPowerManager:
             "events_processed": self.events.processed,
             "fleet_time_s": self.clock.now,
             "transactions": sum(s.pm.bus.transaction_count for s in self.segments),
+            "polls": sum(st.polls for st in self.poll_stats.values()),
+            "poll_samples": sum(st.samples for st in self.poll_stats.values()),
+            "polls_deferred": sum(st.deferred
+                                  for st in self.poll_stats.values()),
         }

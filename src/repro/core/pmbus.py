@@ -154,6 +154,23 @@ class EventQueue:
     def next_time(self) -> float | None:
         return self._heap[0].t if self._heap else None
 
+    def schedule_periodic(self, t0: float,
+                          fn: Callable[[float], float | None]) -> Event:
+        """Self-rescheduling event: `fn(t_fire)` returns the *absolute* time
+        of its next firing, or None to stop. The callback choosing its own
+        next time (rather than a fixed period) is what lets periodic
+        telemetry polling degrade gracefully under back-pressure instead of
+        accumulating an unbounded backlog of overdue polls (fleet.py)."""
+        def wrapper(t_fire: float) -> None:
+            nxt = fn(t_fire)
+            if nxt is None:
+                return
+            if nxt <= t_fire:
+                raise ValueError(
+                    f"periodic event must advance: next={nxt} <= t={t_fire}")
+            self.schedule(nxt, wrapper)
+        return self.schedule(t0, wrapper)
+
     def run_until(self, t: float) -> int:
         """Pop and run every event with fire time <= t, in (time, seq) order.
         Returns the number of events processed. Events may schedule further

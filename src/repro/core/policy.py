@@ -15,7 +15,12 @@ states (per-chip vmap with optional fleet-level reductions).
 
 Telemetry is a dict with (at least) the keys produced by
 power_plane.account_step plus 'grad_error' (the gradient-domain BER) when
-error-bounded collectives are active.
+error-bounded collectives are active. Fleet-native consumers (the fleet
+train step, fleet_frontier) additionally provide per-chip nominal voltages
+('v_nom_core'/'v_nom_hbm'/'v_nom_io', from hwspec.FleetSpec): policies
+anchor their decisions to *that chip's* nominal point instead of the shared
+spec scalar, so process variation flows through every operating-point
+decision. Absent those keys, the spec scalars apply (scalar path unchanged).
 """
 
 from __future__ import annotations
@@ -28,6 +33,13 @@ import jax.numpy as jnp
 from repro.core import ecollectives
 from repro.core.hwspec import V5E, ChipSpec
 from repro.core.power_plane import PowerPlaneState
+
+
+def _nom(telemetry, key: str, fallback: float):
+    """Per-chip nominal voltage from telemetry (fleet path) or the spec
+    scalar (scalar path)."""
+    v = telemetry.get(key)
+    return jnp.float32(fallback) if v is None else jnp.asarray(v, jnp.float32)
 
 
 class Policy:
@@ -60,9 +72,9 @@ class StaticNominal(Policy):
     def update_jax(self, state, telemetry):
         return dataclasses.replace(
             state,
-            v_core=jnp.float32(self.spec.nominal_v_core),
-            v_hbm=jnp.float32(self.spec.nominal_v_hbm),
-            v_io=jnp.float32(self.spec.nominal_v_io),
+            v_core=_nom(telemetry, "v_nom_core", self.spec.nominal_v_core),
+            v_hbm=_nom(telemetry, "v_nom_hbm", self.spec.nominal_v_hbm),
+            v_io=_nom(telemetry, "v_nom_io", self.spec.nominal_v_io),
             comp_level=jnp.int32(ecollectives.LEVEL_LOSSLESS),
         )
 
@@ -86,9 +98,11 @@ class BERBounded(Policy):
         lvl = jnp.where(err < 0.5 * self.error_bound,
                         jnp.minimum(lvl + 1, ecollectives.LEVEL_INT8_TOPK), lvl)
         lvl = jnp.where(err > self.error_bound, jnp.maximum(lvl - 1, 0), lvl)
+        v_nom_io = _nom(telemetry, "v_nom_io", self.spec.nominal_v_io)
         v_io = jnp.where(lvl > 0,
-                         jnp.float32(max(self.v_io_floor, self.spec.nominal_v_io * 0.9)),
-                         jnp.float32(self.spec.nominal_v_io))
+                         jnp.maximum(jnp.float32(self.v_io_floor),
+                                     v_nom_io * 0.9),
+                         v_nom_io)
         return dataclasses.replace(state, comp_level=lvl.astype(jnp.int32),
                                    v_io=v_io)
 
@@ -115,14 +129,18 @@ class PhaseAware(Policy):
             # dominant term; clamp to the rail's platform safety envelope
             # (paper §VII-B: per-rail envelopes are platform-defined).
             s = jnp.clip(t_mine / target, 0.0, 1.0)
-            return jnp.maximum(jnp.float32(v_nom) * s, jnp.float32(v_min))
+            return jnp.maximum(jnp.asarray(v_nom, jnp.float32) * s,
+                               jnp.float32(v_min))
 
         from repro.core.rails import TPU_V5E_RAIL_MAP as rm
         return dataclasses.replace(
             state,
-            v_core=scaled(self.spec.nominal_v_core, rm.by_name("VDD_CORE").v_min, t_comp),
-            v_hbm=scaled(self.spec.nominal_v_hbm, rm.by_name("VDD_HBM").v_min, t_mem),
-            v_io=scaled(self.spec.nominal_v_io, rm.by_name("VDD_IO").v_min, t_coll),
+            v_core=scaled(_nom(telemetry, "v_nom_core", self.spec.nominal_v_core),
+                          rm.by_name("VDD_CORE").v_min, t_comp),
+            v_hbm=scaled(_nom(telemetry, "v_nom_hbm", self.spec.nominal_v_hbm),
+                         rm.by_name("VDD_HBM").v_min, t_mem),
+            v_io=scaled(_nom(telemetry, "v_nom_io", self.spec.nominal_v_io),
+                        rm.by_name("VDD_IO").v_min, t_coll),
         )
 
 
@@ -144,7 +162,7 @@ class ClosedLoop(Policy):
         ok = err <= self.error_bound
         v_down = jnp.maximum(state.v_io - self.step_v, self.v_io_floor)
         v_up = jnp.minimum(state.v_io * self.backoff,
-                           jnp.float32(self.spec.nominal_v_io))
+                           _nom(telemetry, "v_nom_io", self.spec.nominal_v_io))
         v_io = jnp.where(ok, v_down, v_up)
         lvl = jnp.where(ok, jnp.minimum(state.comp_level + 1,
                                         ecollectives.LEVEL_INT8),

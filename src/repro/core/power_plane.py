@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ecollectives
-from repro.core.hwspec import V5E, ChipSpec
+from repro.core.hwspec import V5E, ChipSpec, FleetSpec
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -58,8 +58,16 @@ class PowerPlaneState:
         )
 
     @staticmethod
-    def fleet(n_chips: int, spec: ChipSpec = V5E) -> "PowerPlaneState":
-        """Batched state for an `n_chips` fleet, all chips at nominal."""
+    def fleet(n_chips: int,
+              spec: "ChipSpec | FleetSpec" = V5E) -> "PowerPlaneState":
+        """Batched state for an `n_chips` fleet. With a plain `ChipSpec`
+        every chip starts at the shared nominal point; with a `FleetSpec`
+        each chip starts at its *own* process-varied nominal voltages."""
+        if isinstance(spec, FleetSpec):
+            if spec.n_chips != n_chips:
+                raise ValueError(f"FleetSpec has {spec.n_chips} chips, "
+                                 f"asked for {n_chips}")
+            return PowerPlaneState.from_fleet(spec)
         ones = jnp.ones((n_chips,), jnp.float32)
         return PowerPlaneState(
             v_core=ones * spec.nominal_v_core,
@@ -69,6 +77,19 @@ class PowerPlaneState:
                                 jnp.int32),
             energy_j=jnp.zeros((n_chips,), jnp.float32),
             step=jnp.zeros((n_chips,), jnp.int32),
+        )
+
+    @staticmethod
+    def from_fleet(fleet: FleetSpec) -> "PowerPlaneState":
+        """Fleet state with every chip at its own per-chip nominal point."""
+        n = fleet.n_chips
+        return PowerPlaneState(
+            v_core=jnp.asarray(fleet.v_core_nominal, jnp.float32),
+            v_hbm=jnp.asarray(fleet.v_hbm_nominal, jnp.float32),
+            v_io=jnp.asarray(fleet.v_io_nominal, jnp.float32),
+            comp_level=jnp.full((n,), ecollectives.LEVEL_LOSSLESS, jnp.int32),
+            energy_j=jnp.zeros((n,), jnp.float32),
+            step=jnp.zeros((n,), jnp.int32),
         )
 
     @property
@@ -105,16 +126,31 @@ class StepProfile:
 # Step time + power as differentiable-free jnp (usable in-graph)
 # ---------------------------------------------------------------------------
 
-def _freq_scale(v: jnp.ndarray, v_nom: float) -> jnp.ndarray:
+def _freq_scale(v: jnp.ndarray, v_nom) -> jnp.ndarray:
     return jnp.maximum(0.4, v / v_nom)
 
 
+def _nominals(spec: ChipSpec, variation: dict | None):
+    """(v_core_nom, v_hbm_nom, v_io_nom, leak_scale) — spec scalars, or the
+    per-chip values of a FleetSpec.variation() row. A chip whose nominal sits
+    above the spec's is a *weak* chip: at the same absolute voltage it runs
+    slower and its leakage multiplier burns more static power."""
+    if variation is None:
+        return (jnp.float32(spec.nominal_v_core),
+                jnp.float32(spec.nominal_v_hbm),
+                jnp.float32(spec.nominal_v_io), jnp.float32(1.0))
+    return (variation["v_core_nom"], variation["v_hbm_nom"],
+            variation["v_io_nom"], variation["leak_scale"])
+
+
 def step_terms(profile: StepProfile, state: PowerPlaneState,
-               spec: ChipSpec = V5E, k_fraction: float = 0.25):
+               spec: ChipSpec = V5E, k_fraction: float = 0.25,
+               variation: dict | None = None):
     """Three roofline terms (seconds) under the current rail state."""
-    f_core = _freq_scale(state.v_core, spec.nominal_v_core)
-    f_hbm = _freq_scale(state.v_hbm, spec.nominal_v_hbm)
-    f_io = _freq_scale(state.v_io, spec.nominal_v_io)
+    v_core_nom, v_hbm_nom, v_io_nom, _ = _nominals(spec, variation)
+    f_core = _freq_scale(state.v_core, v_core_nom)
+    f_hbm = _freq_scale(state.v_hbm, v_hbm_nom)
+    f_io = _freq_scale(state.v_io, v_io_nom)
 
     # compression rescales only the gradient-sync share of ICI traffic
     lossless = ecollectives.wire_cost(ecollectives.LEVEL_LOSSLESS).bytes_per_element
@@ -135,38 +171,47 @@ def step_terms(profile: StepProfile, state: PowerPlaneState,
 
 
 def step_time_s(profile: StepProfile, state: PowerPlaneState,
-                spec: ChipSpec = V5E, overlap: float = 1.0) -> jnp.ndarray:
+                spec: ChipSpec = V5E, overlap: float = 1.0,
+                variation: dict | None = None) -> jnp.ndarray:
     """Step wall time: max of the three terms under perfect overlap
     (overlap=1.0), or their weighted blend toward the sum when overlap<1."""
-    t_comp, t_mem, t_coll = step_terms(profile, state, spec)
+    t_comp, t_mem, t_coll = step_terms(profile, state, spec,
+                                       variation=variation)
     t_max = jnp.maximum(t_comp, jnp.maximum(t_mem, t_coll))
     t_sum = t_comp + t_mem + t_coll
     return overlap * t_max + (1.0 - overlap) * t_sum
 
 
 def chip_power_w_jnp(state: PowerPlaneState, util_mxu, util_hbm, util_ici,
-                     spec: ChipSpec = V5E) -> jnp.ndarray:
-    sv_core = state.v_core / spec.nominal_v_core
-    sv_hbm = state.v_hbm / spec.nominal_v_hbm
-    sv_io = state.v_io / spec.nominal_v_io
+                     spec: ChipSpec = V5E,
+                     variation: dict | None = None) -> jnp.ndarray:
+    v_core_nom, v_hbm_nom, v_io_nom, leak = _nominals(spec, variation)
+    sv_core = state.v_core / v_core_nom
+    sv_hbm = state.v_hbm / v_hbm_nom
+    sv_io = state.v_io / v_io_nom
     p_core = (spec.p_core_dynamic_w * util_mxu * sv_core**3
-              + spec.p_core_static_w * sv_core**2)
+              + spec.p_core_static_w * leak * sv_core**2)
     p_hbm = spec.p_hbm_w * (0.3 + 0.7 * util_hbm) * sv_hbm**2
     p_ici = spec.p_ici_w * (0.15 + 0.85 * util_ici) * sv_io**2
     return p_core + p_hbm + p_ici + spec.p_other_w
 
 
 def account_step(profile: StepProfile, state: PowerPlaneState,
-                 spec: ChipSpec = V5E, overlap: float = 1.0
+                 spec: ChipSpec = V5E, overlap: float = 1.0,
+                 variation: dict | None = None
                  ) -> tuple[PowerPlaneState, dict[str, jnp.ndarray]]:
     """Advance the energy accumulator by one step; returns (state', metrics).
-    Pure jnp — runs inside the jitted step (in-graph controller path)."""
-    t_comp, t_mem, t_coll = step_terms(profile, state, spec)
-    t_step = step_time_s(profile, state, spec, overlap)
+    Pure jnp — runs inside the jitted step (in-graph controller path).
+    `variation` carries one chip's process-variation row (per-chip nominal
+    voltages + leakage multiplier) when accounting a FleetSpec fleet."""
+    t_comp, t_mem, t_coll = step_terms(profile, state, spec,
+                                       variation=variation)
+    t_step = step_time_s(profile, state, spec, overlap, variation=variation)
     util_mxu = t_comp / t_step
     util_hbm = t_mem / t_step
     util_ici = t_coll / t_step
-    p = chip_power_w_jnp(state, util_mxu, util_hbm, util_ici, spec)
+    p = chip_power_w_jnp(state, util_mxu, util_hbm, util_ici, spec,
+                         variation=variation)
     e = p * t_step
     new = dataclasses.replace(state, energy_j=state.energy_j + e,
                               step=state.step + 1)
@@ -183,10 +228,21 @@ def account_step(profile: StepProfile, state: PowerPlaneState,
 # ---------------------------------------------------------------------------
 
 def account_step_fleet(profile: StepProfile, state: PowerPlaneState,
-                       spec: ChipSpec = V5E, overlap: float = 1.0
+                       spec: "ChipSpec | FleetSpec" = V5E,
+                       overlap: float = 1.0
                        ) -> tuple[PowerPlaneState, dict[str, jnp.ndarray]]:
     """`account_step` vmapped over a `[n_chips]`-batched state: every chip is
-    accounted at its own operating point; metrics come back `[n_chips]`."""
+    accounted at its own operating point; metrics come back `[n_chips]`.
+    With a `FleetSpec` each chip is additionally accounted at its *own*
+    process-varied nominals (per-chip DVFS curve + leakage)."""
+    if isinstance(spec, FleetSpec):
+        if spec.n_chips != state.n_chips:
+            raise ValueError(f"FleetSpec has {spec.n_chips} chips but the "
+                             f"state has {state.n_chips}")
+        var = {k: jnp.asarray(v) for k, v in spec.variation().items()}
+        return jax.vmap(
+            lambda s, v: account_step(profile, s, spec.base, overlap,
+                                      variation=v))(state, var)
     return jax.vmap(lambda s: account_step(profile, s, spec, overlap))(state)
 
 

@@ -1,6 +1,17 @@
 """Telemetry plumbing: per-step records (the READ_VOUT/READ_IOUT analogue of
 the training system) and a host-side ring log used by host controllers,
-benchmarks and the trainer."""
+benchmarks and the trainer.
+
+Scalar→fleet convention (docs/fleet.md): every metric is either a scalar
+(one chip / SPMD-replicated) or a `[n_chips]` array (per-chip fleet state).
+`append_from` accepts both: scalars record as before; `[n_chips]` arrays
+record the full per-chip vector in `StepRecord.per_chip` plus fleet
+reductions (worst/best/mean/p95) in `StepRecord.fleet`, with the legacy
+scalar field holding the fleet mean so downstream consumers (`totals`,
+benchmark report code) keep working unchanged. Keys prefixed `fleet/` are
+in-graph reductions computed by the fleet train step through the Pallas
+`ops.fleet_reduce` hot path and land in `StepRecord.fleet` verbatim.
+"""
 
 from __future__ import annotations
 
@@ -11,6 +22,9 @@ from typing import Any
 
 import jax
 import numpy as np
+
+# metrics with first-class StepRecord fields
+_CORE_KEYS = ("grad_error", "t_step_s", "power_w", "energy_step_j")
 
 
 @dataclasses.dataclass
@@ -25,7 +39,11 @@ class StepRecord:
     v_core: float
     v_hbm: float
     v_io: float
+    n_chips: int = 1
     extras: dict[str, float] = dataclasses.field(default_factory=dict)
+    # fleet-shaped state only: per-chip vectors + host-side reductions
+    per_chip: dict[str, list[float]] = dataclasses.field(default_factory=dict)
+    fleet: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class TelemetryLog:
@@ -35,30 +53,96 @@ class TelemetryLog:
         self.records: collections.deque[StepRecord] = collections.deque(maxlen=capacity)
 
     def append_from(self, step: int, loss, metrics: dict[str, Any], state) -> StepRecord:
-        get = lambda x: float(jax.device_get(x))
+        per_chip: dict[str, list[float]] = {}
+        fleet: dict[str, float] = {}
+
+        # one host round-trip for everything this record needs (append_from
+        # is on the trainer hot loop; per-key device_get syncs add up)
+        loss, metrics, state_v = jax.device_get(
+            (loss, dict(metrics),
+             {f: getattr(state, f)
+              for f in ("v_core", "v_hbm", "v_io", "comp_level")}))
+
+        v_core_a = np.asarray(state_v["v_core"])
+        n_chips = int(v_core_a.shape[0]) if v_core_a.ndim else 1
+
+        def record(key: str, x) -> float | None:
+            """Scalar -> float. [n_chips] -> per-chip list + max/min/mean/p95
+            reductions, returning the fleet mean as the scalar view. The
+            suffixes are direction-neutral on purpose — which extreme is the
+            *worst* chip depends on the metric (max power, but MIN voltage);
+            directional `_worst` keys come from the fleet step's in-graph
+            reductions. Arrays that are not `[n_chips]`-shaped are not
+            per-chip telemetry -> None (the scalar-or-fleet convention)."""
+            a = np.asarray(x)
+            if a.ndim == 0:
+                return float(a)
+            if a.ndim == 1 and a.shape[0] == n_chips:
+                af = a.astype(np.float64)
+                per_chip[key] = [float(v) for v in af]
+                fleet[f"{key}_max"] = float(af.max())
+                fleet[f"{key}_min"] = float(af.min())
+                fleet[f"{key}_mean"] = float(af.mean())
+                fleet[f"{key}_p95"] = float(np.percentile(af, 95.0))
+                return float(af.mean())
+            return None
+
+        core = {k: record(k, metrics.get(k, 0.0)) or 0.0 for k in _CORE_KEYS}
+        rails = {f: record(f, state_v[f]) or 0.0
+                 for f in ("v_core", "v_hbm", "v_io")}
+        comp = np.asarray(state_v["comp_level"])
+        if comp.ndim:
+            per_chip["comp_level"] = [float(c) for c in comp]
+            comp_level = int(comp.min())   # fleet view: most conservative chip
+        else:
+            comp_level = int(comp)
+
+        extras: dict[str, float] = {}
+        for k, v in metrics.items():
+            if k in _CORE_KEYS or k == "loss":
+                continue
+            if k.startswith("fleet/"):
+                fleet[k.split("/", 1)[1]] = float(np.asarray(v))
+                continue
+            s = record(k, v)
+            if s is not None and k not in per_chip:
+                extras[k] = s
+
         rec = StepRecord(
             step=step,
-            loss=get(loss),
-            grad_error=get(metrics.get("grad_error", 0.0)),
-            t_step_s=get(metrics.get("t_step_s", 0.0)),
-            power_w=get(metrics.get("power_w", 0.0)),
-            energy_step_j=get(metrics.get("energy_step_j", 0.0)),
-            comp_level=int(jax.device_get(state.comp_level)),
-            v_core=get(state.v_core), v_hbm=get(state.v_hbm), v_io=get(state.v_io),
-            extras={k: get(v) for k, v in metrics.items()
-                    if k not in ("grad_error", "t_step_s", "power_w", "energy_step_j")
-                    and np.ndim(jax.device_get(v)) == 0},
+            loss=float(np.mean(np.asarray(loss))),
+            grad_error=core["grad_error"],
+            t_step_s=core["t_step_s"],
+            power_w=core["power_w"],
+            energy_step_j=core["energy_step_j"],
+            comp_level=comp_level,
+            v_core=rails["v_core"], v_hbm=rails["v_hbm"], v_io=rails["v_io"],
+            n_chips=n_chips,
+            extras=extras, per_chip=per_chip, fleet=fleet,
         )
         self.records.append(rec)
         return rec
 
     def totals(self) -> dict[str, float]:
         if not self.records:
-            return {"steps": 0, "energy_j": 0.0, "mean_power_w": 0.0, "time_s": 0.0}
+            return {"steps": 0, "energy_j": 0.0, "mean_power_w": 0.0,
+                    "time_s": 0.0, "fleet_energy_j": 0.0}
+        # scalar fields are per-chip means, so these are per-chip totals;
+        # fleet_energy_j is the whole fleet's energy (mean x n_chips).
         e = sum(r.energy_step_j for r in self.records)
         t = sum(r.t_step_s for r in self.records)
+        ef = sum(r.energy_step_j * r.n_chips for r in self.records)
         return {"steps": len(self.records), "energy_j": e,
-                "mean_power_w": e / max(t, 1e-12), "time_s": t}
+                "mean_power_w": e / max(t, 1e-12), "time_s": t,
+                "fleet_energy_j": ef}
+
+    def per_chip_series(self, key: str) -> np.ndarray:
+        """[steps, n_chips] history of one per-chip metric (records lacking
+        the key are skipped)."""
+        rows = [r.per_chip[key] for r in self.records if key in r.per_chip]
+        if not rows:
+            raise KeyError(f"no per-chip telemetry recorded for {key!r}")
+        return np.asarray(rows)
 
     def dump_jsonl(self, path: str) -> None:
         with open(path, "w") as f:

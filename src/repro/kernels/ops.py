@@ -167,3 +167,44 @@ def fleet_reduce(x):
         from repro.kernels import fleet_telemetry as ft
         return ft.fleet_reduce(x, interpret=(mode == "interpret"))
     return ref.fleet_reduce_reference(x)
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-portable shard_map (jax >= 0.5 top-level vs experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def sharded_fleet_reduce(x, *, mesh=None, axis_name: str = "chips",
+                         use_shard_map: bool | None = None):
+    """`fleet_reduce` for a fleet axis sharded across real devices.
+
+    When `mesh` spans more than one device (the fleet axis is physically
+    distributed), each device reduces its local `[n_chips/n_dev, n_fields]`
+    shard through the Pallas/XLA `fleet_reduce` hot path, then the partials
+    combine in-graph via `pmax`/`pmin`/`psum` inside `shard_map` — the
+    worst-chip reduction never gathers per-chip telemetry onto one device.
+    On a single-device (CPU) mesh, or with `mesh=None`, it falls back to the
+    plain vmap-path `fleet_reduce`. `use_shard_map` overrides the guard
+    (tests exercise the collective path on a 1-device mesh)."""
+    if use_shard_map is None:
+        use_shard_map = mesh is not None and mesh.devices.size > 1
+    if not use_shard_map:
+        return fleet_reduce(x)
+    if mesh is None:
+        raise ValueError("sharded_fleet_reduce needs a mesh for shard_map")
+    if axis_name not in mesh.axis_names:
+        raise ValueError(f"mesh has axes {mesh.axis_names}, not {axis_name!r}")
+    from jax.sharding import PartitionSpec as P
+
+    def local(xs):
+        mx, mn, sm = fleet_reduce(xs)
+        return (jax.lax.pmax(mx, axis_name), jax.lax.pmin(mn, axis_name),
+                jax.lax.psum(sm, axis_name))
+
+    return _shard_map(local, mesh, in_specs=(P(axis_name),),
+                      out_specs=(P(), P(), P()))(x)

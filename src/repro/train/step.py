@@ -22,7 +22,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import ecollectives
 from repro.core.control_plane import as_controller
-from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
+from repro.core.hwspec import FleetSpec
+from repro.core.power_plane import (PowerPlaneState, StepProfile, account_step,
+                                    account_step_fleet)
+from repro.kernels import ops
 from repro.optim import adamw
 
 
@@ -33,6 +36,33 @@ class StepConfig:
     k_fraction: float = 0.25
     policy: Any = None               # in-graph policy/RailController or None
     dp_axes: tuple[str, ...] = ("data",)  # manual axes for ef sync
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetStepConfig:
+    """Fleet-native extension of StepConfig: one jitted step drives a
+    `[n_chips]` power plane whose chips carry per-chip process variation
+    (`FleetSpec`), with in-graph per-chip straggler/fault injection coupled
+    to each chip's voltage margin. At `FleetSpec.uniform(1)` the fleet step
+    is numerically equivalent to the scalar step as long as the
+    margin-coupled error feedback is inactive — uncompressed grad sync or
+    `error_gain=0` (pinned by tests/test_fleet_native.py). With ef_int8*
+    sync AND a nonzero `error_gain`, the fleet step intentionally models
+    margin-amplified measured error that the scalar step cannot, so the
+    trajectories diverge once a policy undervolts VDD_IO."""
+    spec: FleetSpec
+    # per-chip measured-error telemetry: how fast a chip's gradient-domain
+    # error grows as it digs below its own nominal VDD_IO, scaled by the
+    # chip's BER-curve offset (FleetSpec.error_sensitivity)
+    error_gain: float = 12.0
+    link_ber_floor: float = 0.0      # intrinsic link error floor (no compression)
+    telemetry_noise: float = 0.0     # relative noise on measured error
+    # per-chip stragglers: base per-step probability, amplified by the chip's
+    # VDD_CORE undervolt margin — weak chips at fleet setpoints straggle first
+    straggler_prob: float = 0.0
+    straggler_factor: float = 4.0
+    straggler_margin_gain: float = 8.0
+    seed: int = 0
 
 
 def _accumulate_grads(loss_fn, params, batch, microbatches: int):
@@ -65,6 +95,37 @@ def _accumulate_grads(loss_fn, params, batch, microbatches: int):
     return loss_sum * inv, metrics, grads
 
 
+def _grads_and_update(loss_fn, opt_cfg, schedule_fn, step_cfg,
+                      params, opt_state, ef_resid, batch):
+    """The model side of a train step, shared by the scalar and fleet step
+    factories: microbatched grads, optional error-feedback compressed sync,
+    AdamW update. Returns (params', opt_state', ef_resid', loss, metrics,
+    opt_metrics, grad_error)."""
+    loss, metrics, grads = _accumulate_grads(
+        loss_fn, params, batch, step_cfg.microbatches)
+
+    grad_error = jnp.zeros((), jnp.float32)
+    if step_cfg.grad_sync.startswith("ef_int8"):
+        # error-feedback compression BEFORE the cross-replica reduction
+        level = (ecollectives.LEVEL_INT8_TOPK
+                 if step_cfg.grad_sync == "ef_int8_topk"
+                 else ecollectives.LEVEL_INT8)
+        raw = grads
+        grads, ef_resid = ecollectives.ef_compress(
+            grads, ef_resid, level, step_cfg.k_fraction)
+        grad_error = ecollectives.compression_error_norm(raw, grads)
+        axis = step_cfg.dp_axes[0]
+        grads = ecollectives.reduce_gradients(
+            grads, axis, level=ecollectives.LEVEL_INT8
+            if level >= ecollectives.LEVEL_INT8 else 0)
+        loss = jax.lax.pmean(loss, axis)
+
+    lr = schedule_fn(opt_state["step"])
+    params, opt_state, opt_metrics = adamw.apply_updates(
+        params, grads, opt_state, lr, opt_cfg)
+    return params, opt_state, ef_resid, loss, metrics, opt_metrics, grad_error
+
+
 def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
                     schedule_fn: Callable, profile: StepProfile,
                     step_cfg: StepConfig):
@@ -75,28 +136,10 @@ def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
     controller = as_controller(step_cfg.policy)
 
     def train_step(params, opt_state, plane: PowerPlaneState, ef_resid, batch):
-        loss, metrics, grads = _accumulate_grads(
-            loss_fn, params, batch, step_cfg.microbatches)
-
-        grad_error = jnp.zeros((), jnp.float32)
-        if step_cfg.grad_sync.startswith("ef_int8"):
-            # error-feedback compression BEFORE the cross-replica reduction
-            level = (ecollectives.LEVEL_INT8_TOPK
-                     if step_cfg.grad_sync == "ef_int8_topk"
-                     else ecollectives.LEVEL_INT8)
-            raw = grads
-            grads, ef_resid = ecollectives.ef_compress(
-                grads, ef_resid, level, step_cfg.k_fraction)
-            grad_error = ecollectives.compression_error_norm(raw, grads)
-            axis = step_cfg.dp_axes[0]
-            grads = ecollectives.reduce_gradients(
-                grads, axis, level=ecollectives.LEVEL_INT8
-                if level >= ecollectives.LEVEL_INT8 else 0)
-            loss = jax.lax.pmean(loss, axis)
-
-        lr = schedule_fn(opt_state["step"])
-        params, opt_state, opt_metrics = adamw.apply_updates(
-            params, grads, opt_state, lr, opt_cfg)
+        (params, opt_state, ef_resid, loss, metrics, opt_metrics,
+         grad_error) = _grads_and_update(loss_fn, opt_cfg, schedule_fn,
+                                         step_cfg, params, opt_state,
+                                         ef_resid, batch)
 
         plane, power_metrics = account_step(profile, plane)
         telemetry = {**power_metrics, "grad_error": grad_error}
@@ -104,6 +147,98 @@ def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
             plane = controller.control_step(plane, telemetry)
 
         out_metrics = {"loss": loss, **metrics, **opt_metrics, **telemetry}
+        return params, opt_state, plane, ef_resid, out_metrics
+
+    return train_step
+
+
+def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
+                          schedule_fn: Callable, profile: StepProfile,
+                          step_cfg: StepConfig, fleet_cfg: FleetStepConfig):
+    """Fleet-native train step: same model/optimizer math as the scalar
+    step, but the power plane is `[n_chips]` with per-chip process
+    variation, per-chip margin-coupled fault/straggler injection, and fleet
+    reductions (worst/mean/p95) computed in-graph through the Pallas
+    `ops.fleet_reduce` hot path.
+
+    The model itself is SPMD-replicated (every chip computes the same
+    grads); what varies per chip is the *power/telemetry* world: measured
+    gradient-domain error scales with the chip's BER-curve offset and its
+    VDD_IO undervolt margin, and stragglers fire preferentially on chips
+    whose VDD_CORE margin is thinnest. Per-step randomness derives from
+    `fold_in(seed, plane.step)` so the trainer's call signature — and
+    checkpoint/restart determinism — are unchanged."""
+    controller = as_controller(step_cfg.policy)
+    fs = fleet_cfg.spec
+    n = fs.n_chips
+    v_nom_core = jnp.asarray(fs.v_core_nominal, jnp.float32)
+    v_nom_hbm = jnp.asarray(fs.v_hbm_nominal, jnp.float32)
+    v_nom_io = jnp.asarray(fs.v_io_nominal, jnp.float32)
+    sens = jnp.asarray(fs.error_sensitivity, jnp.float32)
+
+    def train_step(params, opt_state, plane: PowerPlaneState, ef_resid, batch):
+        (params, opt_state, ef_resid, loss, metrics, opt_metrics,
+         grad_error) = _grads_and_update(loss_fn, opt_cfg, schedule_fn,
+                                         step_cfg, params, opt_state,
+                                         ef_resid, batch)
+
+        plane, power_metrics = account_step_fleet(profile, plane, fs)
+        key = jax.random.fold_in(jax.random.PRNGKey(fleet_cfg.seed),
+                                 plane.step[0])
+        k_err, k_straggle = jax.random.split(key)
+
+        # per-chip measured error: the shared compression error (plus any
+        # intrinsic link floor) seen through each chip's own BER curve —
+        # offset by process variation, amplified by ITS undervolt margin
+        margin_io = jnp.maximum(0.0, v_nom_io - plane.v_io) / v_nom_io
+        noise = 1.0 + fleet_cfg.telemetry_noise * jax.random.normal(
+            k_err, (n,))
+        err = ((grad_error + fleet_cfg.link_ber_floor) * sens * noise
+               * (1.0 + fleet_cfg.error_gain * margin_io))
+
+        # per-chip stragglers: thin VDD_CORE margin -> higher odds
+        margin_core = jnp.maximum(0.0, v_nom_core - plane.v_core) / v_nom_core
+        p_straggle = jnp.clip(
+            fleet_cfg.straggler_prob
+            * (1.0 + fleet_cfg.straggler_margin_gain * margin_core), 0.0, 1.0)
+        straggle = jax.random.uniform(k_straggle, (n,)) < p_straggle
+        t_chip = power_metrics["t_step_s"] * jnp.where(
+            straggle, fleet_cfg.straggler_factor, 1.0)
+
+        telemetry = {**power_metrics, "grad_error": err, "t_chip_s": t_chip,
+                     "v_nom_core": v_nom_core, "v_nom_hbm": v_nom_hbm,
+                     "v_nom_io": v_nom_io}
+        if controller is not None:
+            plane = controller.control_step(plane, telemetry)
+
+        # fleet reductions through the Pallas telemetry-reduction hot path:
+        # [n_chips, n_fields] -> per-field worst/mean (+ p95 where it gates)
+        stacked = jnp.stack([power_metrics["power_w"], t_chip, err,
+                             power_metrics["energy_step_j"], plane.v_io],
+                            axis=1)
+        mx, mn, sm = ops.fleet_reduce(stacked)
+        fleet_metrics = {}
+        # for these, the worst chip is the max; for a voltage rail it is the
+        # MIN (thinnest margin), so v_io gets min/mean instead
+        for i, name in enumerate(("power_w", "t_chip_s", "grad_error",
+                                  "energy_step_j")):
+            fleet_metrics[f"fleet/{name}_worst"] = mx[i]
+            fleet_metrics[f"fleet/{name}_mean"] = sm[i] / n
+        fleet_metrics["fleet/v_io_min"] = mn[4]
+        fleet_metrics["fleet/v_io_mean"] = sm[4] / n
+        # a synchronous fleet steps at its slowest chip
+        fleet_metrics["fleet/t_fleet_s"] = mx[1]
+        fleet_metrics["fleet/t_chip_p95_s"] = jnp.percentile(t_chip, 95.0)
+        fleet_metrics["fleet/grad_error_p95"] = jnp.percentile(err, 95.0)
+        fleet_metrics["fleet/straggler_frac"] = jnp.mean(
+            straggle.astype(jnp.float32))
+
+        # v_nom_* are static per-run FleetSpec constants — policy inputs,
+        # not telemetry worth logging every step
+        logged = {k: v for k, v in telemetry.items()
+                  if not k.startswith("v_nom_")}
+        out_metrics = {"loss": loss, **metrics, **opt_metrics, **logged,
+                       **fleet_metrics}
         return params, opt_state, plane, ef_resid, out_metrics
 
     return train_step
@@ -127,11 +262,5 @@ def shard_map_ef_step(train_step, mesh, dp_axes=("data",)):
 
     in_specs = (rep, rep, rep, rep, batch_spec)
     out_specs = (rep, rep, rep, rep, rep)
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(mapped, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names=set(dp_axes),
-                             check_vma=False)
-    # jax < 0.5: shard_map lives in jax.experimental (check_rep, no axis_names)
-    from jax.experimental.shard_map import shard_map as _shard_map
-    return _shard_map(mapped, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_rep=False)
+    # version shim shared with the sharded fleet reduction (ops._shard_map)
+    return ops._shard_map(mapped, mesh, in_specs, out_specs)

@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.core.control_plane import RailController, as_controller
+from repro.core.hwspec import FleetSpec
 from repro.core.power_plane import PowerPlaneState
 from repro.core.telemetry import TelemetryLog
 from repro.core import ecollectives
@@ -157,7 +158,7 @@ class Trainer:
         t = self.log.totals()
         ctrl = (self.cfg.controller.stats() if self.cfg.controller is not None
                 else None)
-        return {
+        out = {
             **t,
             "restarts": self.restarts,
             "straggler_events": self.straggler_events,
@@ -167,8 +168,19 @@ class Trainer:
             "mean_wall_step_s": float(np.mean(self._step_times))
             if self._step_times else 0.0,
         }
+        if self.log.records:
+            last = self.log.records[-1]
+            out["n_chips"] = last.n_chips
+            if last.fleet:   # fleet run: surface the gating worst-chip view
+                out["fleet_last"] = dict(last.fleet)
+        return out
 
 
-def initial_plane_and_ef(params) -> tuple[PowerPlaneState, Any]:
-    return (PowerPlaneState.nominal(),
-            ecollectives.zeros_like_residuals(params))
+def initial_plane_and_ef(params, fleet: FleetSpec | None = None
+                         ) -> tuple[PowerPlaneState, Any]:
+    """Initial (plane, error-feedback residuals). With a `FleetSpec`, the
+    plane is `[n_chips]` with every chip at its own process-varied nominal
+    point (pair with train.step.make_fleet_train_step)."""
+    plane = (PowerPlaneState.from_fleet(fleet) if fleet is not None
+             else PowerPlaneState.nominal())
+    return plane, ecollectives.zeros_like_residuals(params)

@@ -1,0 +1,365 @@
+"""Fleet-native stack tests: FleetSpec determinism and variation-aware
+accounting, array-aware TelemetryLog (the scalar-only coercion regression),
+scalar-vs-fleet trainer equivalence at n_chips=1, fleet-trainer e2e with
+per-chip records and worst-chip gating, READ_VOUT polling back-pressure on
+the fleet bus, the sharded worst-chip reduction, and a fleet_frontier smoke
+run (the per-PR fleet regression gate)."""
+
+import dataclasses
+import math
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.fleet import FleetPowerManager
+from repro.core.hwspec import V5E, FleetSpec
+from repro.core.policy import BERBounded, ClosedLoop, WorstChipGate
+from repro.core.power_plane import (PowerPlaneState, StepProfile, account_step,
+                                    account_step_fleet)
+from repro.core.telemetry import TelemetryLog
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.kernels import ops
+from repro.models import registry
+from repro.optim import adamw
+from repro.optim.schedule import wsd
+from repro.train.step import (FleetStepConfig, StepConfig, jit_train_step,
+                              make_fleet_train_step, make_train_step)
+from repro.train.trainer import Trainer, TrainerConfig, initial_plane_and_ef
+
+CFG = get_config("minicpm_2b", tiny=True)
+PROFILE = StepProfile(flops_per_chip=5e9, hbm_bytes_per_chip=5e8,
+                      ici_bytes_per_chip=2e8, grad_bytes_per_chip=1.8e8)
+
+
+# -- FleetSpec -----------------------------------------------------------------
+
+def test_fleet_spec_deterministic_and_seeded():
+    a = FleetSpec.sample(64, seed=5)
+    b = FleetSpec.sample(64, seed=5)
+    for f in ("v_core_nominal", "v_hbm_nominal", "v_io_nominal",
+              "leakage_scale", "error_sensitivity"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    c = FleetSpec.sample(64, seed=6)
+    assert not np.array_equal(a.v_core_nominal, c.v_core_nominal)
+    assert a.n_chips == 64
+    # spread is real but bounded (±3σ truncation keeps chips in-envelope)
+    assert np.std(a.v_core_nominal) > 0
+    assert np.all(np.abs(a.v_core_nominal / V5E.nominal_v_core - 1) < 0.04)
+    assert np.all(a.error_sensitivity >= 1.0)
+
+
+def test_fleet_spec_uniform_is_zero_spread():
+    fs = FleetSpec.uniform(4)
+    np.testing.assert_array_equal(
+        fs.v_core_nominal, np.full(4, np.float32(V5E.nominal_v_core)))
+    np.testing.assert_array_equal(fs.leakage_scale, np.ones(4, np.float32))
+    chip = fs.chip(2)
+    assert chip.nominal_v_core == pytest.approx(V5E.nominal_v_core)
+    assert chip.p_core_static_w == pytest.approx(V5E.p_core_static_w)
+
+
+def test_fleet_accounting_uses_per_chip_variation():
+    fs = FleetSpec.sample(8, seed=9)
+    state = PowerPlaneState.from_fleet(fs)
+    out, metrics = account_step_fleet(PROFILE, state, fs)
+    # batched == per-chip scalar accounting with that chip's variation row
+    var = fs.variation()
+    for i in range(8):
+        row = {k: jnp.asarray(v[i]) for k, v in var.items()}
+        chip_out, m = account_step(PROFILE, state.chip(i), fs.base,
+                                   variation=row)
+        np.testing.assert_allclose(np.asarray(out.energy_j)[i],
+                                   float(chip_out.energy_j), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(metrics["power_w"])[i],
+                                   float(m["power_w"]), rtol=1e-6)
+    # every chip starts at its own nominal -> frequency scale 1 for all, so
+    # step time is identical but leaky chips burn more static power
+    t = np.asarray(metrics["t_step_s"])
+    np.testing.assert_allclose(t, t[0], rtol=1e-6)
+    p = np.asarray(metrics["power_w"])
+    order_leak = np.argsort(fs.leakage_scale)
+    assert p[order_leak[-1]] > p[order_leak[0]]
+
+    # size mismatch is a structured error
+    with pytest.raises(ValueError, match="chips"):
+        account_step_fleet(PROFILE, PowerPlaneState.fleet(4), fs)
+
+
+# -- TelemetryLog: fleet-shaped metrics (regression) ---------------------------
+
+def test_telemetry_append_fleet_arrays_no_longer_raises():
+    """[n_chips] metrics used to die in float(jax.device_get(...)); now they
+    record per-chip vectors + worst/mean/p95 reductions."""
+    log = TelemetryLog()
+    n = 6
+    plane = dataclasses.replace(
+        PowerPlaneState.fleet(n),
+        v_io=jnp.linspace(0.80, 0.95, n, dtype=jnp.float32))
+    metrics = {"power_w": jnp.linspace(100.0, 150.0, n),
+               "t_step_s": jnp.full((n,), 2e-3),
+               "energy_step_j": jnp.linspace(0.2, 0.3, n),
+               "grad_error": jnp.zeros((n,)),
+               "fleet/t_fleet_s": jnp.float32(2e-3),
+               "scalar_extra": jnp.float32(7.0)}
+    rec = log.append_from(3, jnp.float32(1.5), metrics, plane)
+    assert rec.n_chips == n
+    assert rec.power_w == pytest.approx(125.0)          # fleet mean view
+    assert rec.per_chip["power_w"] == pytest.approx(
+        list(np.linspace(100.0, 150.0, n)))
+    assert rec.fleet["power_w_max"] == pytest.approx(150.0)
+    assert rec.fleet["power_w_p95"] == pytest.approx(
+        np.percentile(np.linspace(100.0, 150.0, n), 95))
+    assert rec.fleet["v_io_min"] == pytest.approx(0.80)  # the gating chip
+    assert rec.fleet["t_fleet_s"] == pytest.approx(2e-3)  # in-graph reduction
+    assert rec.per_chip["v_io"][0] == pytest.approx(0.80)
+    assert rec.extras["scalar_extra"] == pytest.approx(7.0)
+    assert log.per_chip_series("power_w").shape == (1, n)
+    # totals: per-chip means plus whole-fleet energy
+    t = log.totals()
+    assert t["energy_j"] == pytest.approx(0.25)
+    assert t["fleet_energy_j"] == pytest.approx(0.25 * n)
+
+
+def test_telemetry_scalar_path_unchanged():
+    log = TelemetryLog()
+    rec = log.append_from(0, jnp.float32(2.0),
+                          {"power_w": jnp.float32(120.0),
+                           "t_step_s": jnp.float32(1e-3),
+                           "energy_step_j": jnp.float32(0.12),
+                           "grad_error": jnp.float32(0.0)},
+                          PowerPlaneState.nominal())
+    assert rec.n_chips == 1 and rec.per_chip == {} and rec.fleet == {}
+    assert rec.power_w == pytest.approx(120.0)
+    assert rec.comp_level == 0
+
+
+# -- fleet trainer -------------------------------------------------------------
+
+def _setup(tmp_path, steps=8, policy=None, fleet_cfg=None, seed=0):
+    """Scalar trainer, or fleet trainer when `fleet_cfg` is given."""
+    api = registry.build(CFG, remat="none")
+    params = api.init(jax.random.PRNGKey(seed))
+    opt_cfg = adamw.AdamWConfig(grad_clip_norm=1.0)
+    opt = adamw.init_state(params, opt_cfg)
+    sched = lambda s: wsd(s, peak_lr=1e-3, warmup_steps=2, stable_steps=50,
+                          decay_steps=50)
+    step_cfg = StepConfig(microbatches=1, grad_sync="auto", policy=policy)
+    if fleet_cfg is None:
+        plane, ef = initial_plane_and_ef(params)
+        raw = make_train_step(lambda p, b: api.loss_fn(p, b), opt_cfg, sched,
+                              PROFILE, step_cfg)
+    else:
+        plane, ef = initial_plane_and_ef(params, fleet=fleet_cfg.spec)
+        raw = make_fleet_train_step(lambda p, b: api.loss_fn(p, b), opt_cfg,
+                                    sched, PROFILE, step_cfg, fleet_cfg)
+    step = jit_train_step(raw, donate=False)
+    data = SyntheticLM(DataConfig(vocab_size=CFG.vocab_size, seq_len=32,
+                                  global_batch=4, seed=seed))
+    tcfg = TrainerConfig(total_steps=steps, ckpt_every=100,
+                         ckpt_dir=str(tmp_path), async_ckpt=False)
+    return Trainer(step, data, tcfg,
+                   {"params": params, "opt": opt, "plane": plane, "ef": ef})
+
+
+def test_fleet_step_n1_matches_scalar_trainer(tmp_path):
+    """A 1-chip zero-spread fleet step must reproduce the scalar trainer's
+    loss/energy trajectory to float32 tolerance (acceptance criterion)."""
+    t_scalar = _setup(tmp_path / "s", steps=10, policy=ClosedLoop(), seed=2)
+    t_scalar.run()
+    fleet_cfg = FleetStepConfig(spec=FleetSpec.uniform(1))
+    t_fleet = _setup(tmp_path / "f", steps=10, policy=ClosedLoop(),
+                     fleet_cfg=fleet_cfg, seed=2)
+    t_fleet.run()
+    ls = [r.loss for r in t_scalar.log.records]
+    lf = [r.loss for r in t_fleet.log.records]
+    np.testing.assert_allclose(lf, ls, rtol=2e-5)
+    es = [r.energy_step_j for r in t_scalar.log.records]
+    ef = [r.energy_step_j for r in t_fleet.log.records]
+    np.testing.assert_allclose(ef, es, rtol=2e-5)
+    vs = [r.v_io for r in t_scalar.log.records]
+    vf = [r.v_io for r in t_fleet.log.records]
+    np.testing.assert_allclose(vf, vs, atol=1e-6)
+    assert t_fleet.log.records[-1].n_chips == 1
+
+
+def test_fleet_trainer_e2e_worst_chip_gates_on_weakest_not_mean(tmp_path):
+    """4-chip fleet, one chip 6x more error-sensitive. The weak chip's
+    telemetry is over the BER bound while the fleet MEAN is comfortably
+    under the escalation threshold — a mean-gated fleet would compress, the
+    worst-chip gate must hold everyone at lossless."""
+    n, floor, bound = 4, 1e-3, 5e-3
+    fs = dataclasses.replace(
+        FleetSpec.uniform(n),
+        error_sensitivity=np.array([1.0, 1.0, 1.0, 6.0], np.float32))
+    mean_err = floor * float(np.mean(fs.error_sensitivity))
+    worst_err = floor * 6.0
+    assert mean_err < 0.5 * bound < bound < worst_err  # the discriminating regime
+
+    def run_with(policy, sub):
+        cfg = FleetStepConfig(spec=fs, link_ber_floor=floor)
+        tr = _setup(tmp_path / sub, steps=6, policy=policy, fleet_cfg=cfg)
+        tr.run()
+        return tr
+
+    gated = run_with(WorstChipGate(BERBounded(error_bound=bound)), "gate")
+    rec = gated.log.records[-1]
+    assert rec.n_chips == n
+    assert len(rec.per_chip["grad_error"]) == n          # per-chip records logged
+    assert rec.per_chip["comp_level"] == [0.0] * n       # nobody escalated
+    assert rec.fleet["grad_error_worst"] > bound         # the gate had cause
+
+    solo = run_with(BERBounded(error_bound=bound), "solo")
+    comp = solo.log.records[-1].per_chip["comp_level"]
+    assert comp[3] == 0.0                                # weak chip held back
+    assert all(c > 0 for c in comp[:3])                  # strong chips escalated
+    # trainer summary surfaces the fleet view
+    s = gated.summary()
+    assert s["n_chips"] == n and "grad_error_worst" in s["fleet_last"]
+
+
+def test_fleet_step_stragglers_couple_to_margin(tmp_path):
+    """Chips below their nominal VDD_CORE must straggle more often than
+    chips at nominal (margin-coupled fault injection)."""
+    n = 8
+    fs = FleetSpec.uniform(n)
+    cfg = FleetStepConfig(spec=fs, straggler_prob=0.15, straggler_factor=4.0,
+                          straggler_margin_gain=30.0, seed=3)
+    tr = _setup(tmp_path, steps=12, policy=None, fleet_cfg=cfg)
+    # undervolt half the fleet's cores
+    plane = tr.state["plane"]
+    v = np.full((n,), V5E.nominal_v_core, np.float32)
+    v[: n // 2] = 0.70
+    tr.state["plane"] = dataclasses.replace(plane, v_core=jnp.asarray(v))
+    tr.run()
+    t = tr.log.per_chip_series("t_chip_s")               # [steps, n]
+    straggles = (t > t.min() * 2.0).sum(axis=0)
+    assert straggles[: n // 2].sum() > straggles[n // 2:].sum()
+    # the synchronous-fleet step time is the max over chips
+    last = tr.log.records[-1]
+    assert last.fleet["t_fleet_s"] == pytest.approx(
+        max(last.per_chip["t_chip_s"]), rel=1e-6)
+
+
+# -- bus polling back-pressure -------------------------------------------------
+
+def test_polling_backpressure_degrades_interval_keeps_actuations():
+    """An oversubscribed segment paces its polls to bus capacity (never a
+    backlog), and pending actuations are never dropped."""
+    fpm = FleetPowerManager(2)
+    fpm.start_polling(interval_s=1e-4)      # << 3 lanes x SW read cost
+    fpm.idle(0.2)
+    st = fpm.poll_stats[0]
+    assert st.polls > 10
+    assert st.samples == st.polls * 3
+    min_cost = fpm.segments[0].pm.measurement_interval_s() * 3
+    assert st.achieved_interval_s >= min_cost * 0.99     # degraded to capacity
+    assert st.backpressure > 5.0                         # way over requested
+    assert st.deferred >= st.polls - 1
+    # actuations still complete mid-polling
+    achieved, rep = fpm.apply_setpoints([{2: 0.85}, {2: 0.85}])
+    assert rep.ok and rep.lane_writes == 2
+    assert achieved[0][2] == pytest.approx(0.85, abs=5e-3)
+    assert fpm.stats()["polls_deferred"] >= st.deferred
+
+
+def test_polling_feasible_interval_holds_and_samples_rails():
+    fpm = FleetPowerManager(2)
+    fpm.apply_setpoints([{2: 0.90}, {2: 0.80}])
+    fpm.start_polling(interval_s=10e-3)
+    fpm.idle(0.1)
+    for st in fpm.poll_stats.values():
+        assert st.deferred == 0
+        assert st.achieved_interval_s == pytest.approx(10e-3, rel=1e-6)
+        assert st.backpressure == pytest.approx(1.0, rel=1e-3)
+    v = fpm.poll_readback(lanes=[2])
+    np.testing.assert_allclose(v[:, 0], [0.90, 0.80], atol=5e-3)
+    with pytest.raises(RuntimeError, match="already active"):
+        fpm.start_polling()
+    fpm.stop_polling()
+    before = fpm.stats()["polls"]
+    fpm.idle(0.05)
+    assert fpm.stats()["polls"] == before                # polling stopped
+
+
+def test_polling_restart_does_not_revive_old_events():
+    """stop_polling + start_polling must not leave the first generation's
+    periodic events alive (double-rate ghost polling invisible in stats)."""
+    fpm = FleetPowerManager(1)
+    fpm.start_polling(interval_s=5e-3)
+    fpm.idle(0.05)
+    fpm.stop_polling()
+    fpm.start_polling(interval_s=5e-3)
+    fpm.idle(0.1)
+    txns = fpm.segments[0].pm.bus.transaction_count
+    # reference: one uninterrupted run over the same simulated window
+    ref = FleetPowerManager(1)
+    ref.start_polling(interval_s=5e-3)
+    ref.idle(0.15)
+    ref_txns = ref.segments[0].pm.bus.transaction_count
+    assert txns <= ref_txns + 12   # ± a couple of polls, not ~1.5x
+
+
+def test_default_poll_interval_is_table_vi():
+    """interval_s=None polls at the configuration's Table VI measurement
+    interval x lanes — SW/400kHz: 0.8 ms per lane."""
+    fpm = FleetPowerManager(1)
+    fpm.start_polling(lanes=[2])
+    fpm.idle(0.05)
+    st = fpm.poll_stats[0]
+    assert st.requested_interval_s == pytest.approx(0.8e-3, abs=0.02e-3)
+    assert st.achieved_interval_s == pytest.approx(st.requested_interval_s,
+                                                   rel=1e-3)
+
+
+# -- sharded worst-chip reduction ----------------------------------------------
+
+def test_sharded_fleet_reduce_matches_vmap_path():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 5)) * 3.0
+    rmx, rmn, rsm = ops.fleet_reduce(x)
+    # guarded fallback: no mesh / single-device mesh -> plain fleet_reduce
+    mx, mn, sm = ops.sharded_fleet_reduce(x)
+    np.testing.assert_allclose(mx, rmx, rtol=1e-6)
+    mesh = jax.make_mesh((1,), ("chips",))
+    mx, mn, sm = ops.sharded_fleet_reduce(x, mesh=mesh)
+    np.testing.assert_allclose(sm, rsm, rtol=1e-6)
+    # forced collective path: pmax/pmin/psum inside shard_map on the mesh
+    mx, mn, sm = ops.sharded_fleet_reduce(x, mesh=mesh, use_shard_map=True)
+    np.testing.assert_allclose(mx, rmx, rtol=1e-6)
+    np.testing.assert_allclose(mn, rmn, rtol=1e-6)
+    np.testing.assert_allclose(sm, rsm, rtol=1e-5)
+    with pytest.raises(ValueError, match="mesh"):
+        ops.sharded_fleet_reduce(x, mesh=None, use_shard_map=True)
+    with pytest.raises(ValueError, match="axes"):
+        ops.sharded_fleet_reduce(x, mesh=mesh, axis_name="nope",
+                                 use_shard_map=True)
+
+
+# -- fleet_frontier smoke (per-PR fleet regression gate) -----------------------
+
+def test_fleet_frontier_smoke_finite_and_monotone_bus_time():
+    from benchmarks import fleet_frontier
+
+    rows = fleet_frontier.run(fleet_sizes=(8, 64), steps=5,
+                              host_fleet_sizes=(8,), host_rounds=2)
+    by_name = {r["name"]: r for r in rows}
+    assert all(math.isfinite(r["us_per_call"]) for r in rows)
+    # every policy produced a finite energy at both fleet sizes
+    for n in (8, 64):
+        for pol in ("static-nominal", "ber-bounded", "closed-loop",
+                    "worst-chip[closed-loop]"):
+            d = by_name[f"fleet.{n}chips.{pol}"]["derived"]
+            e = float(re.search(r"energy=(\S+)J", d).group(1))
+            assert math.isfinite(e) and e > 0
+    # bus time scales monotonically with fleet size on the serialized
+    # (single shared bus) axis while overlapped fleet time stays flat
+    ser = {}
+    for n in (8, 64):
+        d = by_name[f"fleet.{n}chips.bus_actuation"]["derived"]
+        ser[n] = float(re.search(r"serialized=(\S+)ms", d).group(1))
+    assert ser[64] > ser[8]
+    host = by_name["fleet.8chips.host_rollout"]["derived"]
+    assert int(re.search(r"polls=(\d+)", host).group(1)) > 0
