@@ -10,13 +10,17 @@ fleet-level reductions through the kernels.ops.fleet_reduce hot path, and one
 host-path actuation round through the event-scheduled multi-segment PMBus bus
 to price what deploying the decided operating points costs in fleet time.
 
-Two rollout paths per the paper's control-path split:
+Two rollout paths per the paper's control-path split (both speak the
+decision-as-data API: TelemetryFrame observations in, RailRequests out,
+arbitration in control_plane):
   * in-graph (HW analogue): the whole rollout compiles into one scan —
     scales to 1024 chips;
-  * host (SW analogue, `_host_rollout`): decisions between steps, actuated
-    through PMBus with Table VI READ_VOUT polling interleaved; the control
-    period is chosen from the *measured* actuation latency so control costs
-    at most `DUTY` of the timeline (paper §VII-C latency/energy tradeoff).
+  * host (SW analogue, `_host_rollout`): decisions between steps from the
+    controller's *own* READ_VOUT polling telemetry (`decide_from="poll"` —
+    closed loop on sampled voltages, sampling age included), actuated
+    through PMBus with Table VI polling interleaved; the control period is
+    chosen from the *measured* actuation latency so control costs at most
+    `DUTY` of the timeline (paper §VII-C latency/energy tradeoff).
 
 Reported per (fleet size, policy): energy saving vs static-nominal margins,
 worst-chip error vs the bound, and the bus actuation overlap speedup
@@ -25,6 +29,7 @@ worst-chip error vs the bound, and the bus actuation overlap speedup
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 
@@ -38,7 +43,7 @@ from repro.core.hwspec import FleetSpec
 from repro.core.policy import (BERBounded, ClosedLoop, StaticNominal,
                                WorstChipGate)
 from repro.core.power_plane import (PowerPlaneState, StepProfile,
-                                    account_step_fleet, step_time_s)
+                                    account_fleet_and_observe, step_time_s)
 from repro.kernels import ops
 
 PROFILE = StepProfile(flops_per_chip=2e12, hbm_bytes_per_chip=8e9,
@@ -76,17 +81,16 @@ def _rollout_fn(n_chips: int, policy, steps: int):
         return _ROLLOUT_CACHE[key]
     ctrl = InGraphRailController(policy)
     fs = FleetSpec.sample(n_chips, seed=FLEET_SEED)
-    v_nom_core = jnp.asarray(fs.v_core_nominal)
-    v_nom_hbm = jnp.asarray(fs.v_hbm_nominal)
     v_nom_io = jnp.asarray(fs.v_io_nominal)
     sens = jnp.asarray(fs.error_sensitivity)
 
     def round_fn(plane, k):
-        plane, metrics = account_step_fleet(PROFILE, plane, fs)
+        # typed EXACT observation, anchored to the FleetSpec per-chip
+        # nominals; per-chip measured error overlaid before the decision
+        plane, frame, metrics = account_fleet_and_observe(PROFILE, plane, fs)
         err = _grad_error(plane, v_nom_io, sens, k, n_chips)
-        telemetry = {**metrics, "grad_error": err, "v_nom_core": v_nom_core,
-                     "v_nom_hbm": v_nom_hbm, "v_nom_io": v_nom_io}
-        plane = ctrl.control_step(plane, telemetry)
+        plane = ctrl.control_step(
+            plane, dataclasses.replace(frame, grad_error=err))
         out = {"power_w": metrics["power_w"], "grad_error": err}
         return plane, out
 
@@ -116,16 +120,20 @@ def _host_rollout(n_chips: int, policy, rounds: int = HOST_ROUNDS,
     period (paper §VII-C): measure what one fleet actuation round costs on
     the event-scheduled bus, then space control rounds so actuation occupies
     at most `duty` of the fleet timeline. Table VI READ_VOUT polling runs
-    interleaved on every segment throughout."""
+    interleaved on every segment throughout, and the controller *decides
+    from it* (`decide_from="poll"`): each round's rail observations are the
+    aged PMBus samples, not oracle state — the ROADMAP poll-driven closed
+    loop at fleet scale."""
     fs = FleetSpec.sample(n_chips, seed=FLEET_SEED)
-    hc = HostRailController(policy, n_chips=n_chips)
+    hc = HostRailController(policy, n_chips=n_chips, decide_from="poll")
     hc.enable_polling()
     plane = PowerPlaneState.from_fleet(fs)
     v_nom_io = jnp.asarray(fs.v_io_nominal)
     sens = jnp.asarray(fs.error_sensitivity)
     t_step = float(jnp.mean(step_time_s(PROFILE, plane)))
 
-    account = jax.jit(lambda p: account_step_fleet(PROFILE, p, fs))
+    account = jax.jit(
+        lambda p: account_fleet_and_observe(PROFILE, p, fs)[:2])
     keys = jax.random.split(jax.random.PRNGKey(11), rounds)
 
     # calibration: one actuation round prices the control path, then the
@@ -134,21 +142,20 @@ def _host_rollout(n_chips: int, policy, rounds: int = HOST_ROUNDS,
     act_s = hc.last_report.elapsed_s if hc.last_report else 0.0
     period_steps = max(1, math.ceil(act_s / max(duty * t_step, 1e-12)))
 
-    telem_keys = ("v_nom_core", "v_nom_hbm", "v_nom_io")
-    nominals = dict(zip(telem_keys, (jnp.asarray(fs.v_core_nominal),
-                                     jnp.asarray(fs.v_hbm_nominal), v_nom_io)))
     for r in range(rounds):
         for _ in range(period_steps):
-            plane, metrics = account(plane)
+            plane, frame = account(plane)
         hc.fleet.idle(period_steps * t_step)   # polls fire through train time
         err = _grad_error(plane, v_nom_io, sens, keys[r], n_chips)
-        plane = hc.control_step(plane, {**metrics, "grad_error": err,
-                                        **nominals})
+        plane = hc.control_step(
+            plane, dataclasses.replace(frame, grad_error=err))
     st = hc.stats()
     fleet_time = hc.fleet.clock.now
     poll = hc.fleet.poll_stats
     mean_poll_iv = float(np.nanmean([p.achieved_interval_s
                                      for p in poll.values()])) if poll else 0.0
+    age = (float(np.mean(np.asarray(hc.last_frame.age_s)))
+           if hc.last_frame is not None else 0.0)
     return plane, {
         "period_steps": period_steps,
         "actuation_duty": st.actuation_seconds / max(fleet_time, 1e-12),
@@ -157,6 +164,8 @@ def _host_rollout(n_chips: int, policy, rounds: int = HOST_ROUNDS,
         "polls": st.polls,
         "polls_deferred": st.polls_deferred,
         "poll_interval_ms": mean_poll_iv * 1e3,
+        "poll_decisions": st.poll_decisions,
+        "sample_age_ms": age * 1e3,
     }
 
 
@@ -213,6 +222,7 @@ def run(fleet_sizes=FLEET_SIZES, steps: int = STEPS,
             f"duty={100*info['actuation_duty']:.1f}% "
             f"polls={info['polls']} deferred={info['polls_deferred']} "
             f"poll_iv={info['poll_interval_ms']:.2f}ms "
+            f"sample_age={info['sample_age_ms']:.2f}ms "
             f"v_io_mean={float(jnp.mean(plane.v_io)):.3f}"))
     return rows
 

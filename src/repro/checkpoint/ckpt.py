@@ -1,8 +1,10 @@
 """Step-atomic checkpointing with elastic restore.
 
 Layout: <dir>/step_<N>/
-    manifest.msgpack   — leaf paths, shapes, dtypes, step, mesh metadata
-    arrays.npz         — one entry per leaf (path-keyed)
+    manifest.msgpack   — leaf paths, shapes, dtypes, step, mesh metadata,
+                         and (fleet runs) the FleetSpec provenance
+    arrays.npz         — one entry per leaf (path-keyed); fleet runs add a
+                         `fleet_spec::` group with the per-chip nominals
     .complete          — commit marker written LAST (atomicity: a partially
                          written checkpoint is never visible to restore)
 
@@ -11,6 +13,12 @@ Elastic restore: arrays are saved as full (unsharded) host arrays with their
 is active via parallel.sharding.param_pspecs — a 2x16x16 checkpoint restores
 onto 16x16 (or 1 device) unchanged. Background (async) save is supported for
 step-overlap; `wait()` joins the writer.
+
+Fleet elasticity: `save(..., fleet=FleetSpec)` records the fleet's seed and
+per-chip process-variation arrays next to the plane state; restoring onto a
+*different* fleet size goes through `remap_plane` — surviving chips keep
+their per-chip operating point/energy, new chips start at their own nominal
+— so the remapping is explicit, never a silent broadcast/truncation.
 """
 
 from __future__ import annotations
@@ -25,16 +33,71 @@ import jax
 import msgpack
 import numpy as np
 
+from repro.core.hwspec import FleetSpec
+
 _DTYPE_FIX = {"bfloat16": "bfloat16"}
+
+# FleetSpec per-chip arrays persisted under the `fleet_spec::` npz group
+_FLEET_FIELDS = ("v_core_nominal", "v_hbm_nominal", "v_io_nominal",
+                 "leakage_scale", "error_sensitivity")
+
+
+def remap_plane(plane, target: FleetSpec):
+    """Explicitly remap a restored plane onto a `target` fleet of a possibly
+    different size: chips 0..min(n_old, n_new)-1 keep their restored per-chip
+    state (operating point, accumulated energy, step counter); chips beyond
+    the restored fleet start at their *own* process-varied nominal point with
+    zero energy. A scalar plane is treated as a 1-chip fleet. Returns the
+    plane unchanged when the sizes already match."""
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    from repro.core.power_plane import PowerPlaneState
+
+    n_old = plane.n_chips
+    n_new = target.n_chips
+    if plane.is_fleet and n_old == n_new:
+        return plane
+    fresh = PowerPlaneState.from_fleet(target)
+    k = min(n_old, n_new)
+
+    def take(old, new):
+        old = jnp.atleast_1d(jnp.asarray(old))
+        return new.at[:k].set(old[:k].astype(new.dtype))
+
+    # joining chips adopt the fleet's step counter (a synchronous fleet
+    # steps together; per-step RNG derives from plane.step)
+    step = jnp.full((n_new,),
+                    jnp.max(jnp.atleast_1d(plane.step)), jnp.int32)
+    return _dc.replace(
+        fresh,
+        v_core=take(plane.v_core, fresh.v_core),
+        v_hbm=take(plane.v_hbm, fresh.v_hbm),
+        v_io=take(plane.v_io, fresh.v_io),
+        comp_level=take(plane.comp_level, fresh.comp_level),
+        energy_j=take(plane.energy_j, fresh.energy_j),
+        step=take(plane.step, step),
+    )
+
+
+def _path_key(k) -> str:
+    """One path entry -> stable string: DictKey.key, GetAttrKey.name
+    (registered dataclasses like PowerPlaneState), SequenceKey.idx. Falling
+    through to None would collapse distinct leaves onto one npz entry."""
+    for attr in ("key", "name", "idx"):
+        v = getattr(k, attr, None)
+        if v is not None:
+            return str(v)
+    return str(k)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
 
     def go(path, leaf):
-        keys = [str(getattr(k, "key", getattr(k, "idx", None)))
-                for k in path]
-        flat["/".join(keys)] = np.asarray(jax.device_get(leaf))
+        flat["/".join(_path_key(k) for k in path)] = np.asarray(
+            jax.device_get(leaf))
 
     jax.tree_util.tree_map_with_path(go, tree)
     return flat
@@ -42,10 +105,7 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 def _unflatten_into(tree_like, flat: dict[str, np.ndarray]):
     def go(path, leaf):
-        keys = [str(getattr(k, "key", getattr(k, "idx", None)))
-                for k in path]
-        arr = flat["/".join(keys)]
-        return arr
+        return flat["/".join(_path_key(k) for k in path)]
 
     return jax.tree_util.tree_map_with_path(go, tree_like)
 
@@ -61,19 +121,32 @@ class CheckpointManager:
         os.makedirs(self.directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, state: dict[str, Any]) -> str:
-        """state: dict of pytrees, e.g. {'params': ..., 'opt': ..., 'plane': ...}"""
+    def save(self, step: int, state: dict[str, Any],
+             fleet: FleetSpec | None = None) -> str:
+        """state: dict of pytrees, e.g. {'params': ..., 'opt': ..., 'plane': ...}.
+        `fleet` additionally records the FleetSpec (seed + per-chip nominal
+        arrays) the plane was seeded from, so an elastic restart onto a
+        different fleet size can remap per-chip state explicitly."""
         self.wait()
         path = os.path.join(self.directory, f"step_{step:08d}")
 
         host = {name: _flatten(tree) for name, tree in state.items()}
         bf16_mask = {name: {k: str(v.dtype) for k, v in flat.items()}
                      for name, flat in host.items()}
+        fleet_arrays = ({f: np.asarray(getattr(fleet, f))
+                         for f in _FLEET_FIELDS} if fleet is not None else None)
+        fleet_meta = ({"n_chips": fleet.n_chips, "seed": fleet.seed,
+                       "base": dataclasses.asdict(fleet.base)}
+                      if fleet is not None else None)
 
         def write():
             os.makedirs(path, exist_ok=True)
             arrays = {}
             manifest = {"step": step, "groups": {}, "time": time.time()}
+            if fleet_meta is not None:
+                manifest["fleet"] = fleet_meta
+                for f, v in fleet_arrays.items():
+                    arrays[f"fleet_spec::{f}"] = v
             for name, flat in host.items():
                 manifest["groups"][name] = {
                     k: {"shape": list(v.shape), "dtype": bf16_mask[name][k]}
@@ -122,6 +195,27 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         steps = self.list_steps()
         return steps[-1] if steps else None
+
+    def restore_fleet(self, step: int | None = None) -> FleetSpec | None:
+        """The FleetSpec a checkpoint was written under (None for scalar /
+        pre-fleet checkpoints): seed + the exact per-chip nominal arrays, so
+        a restart can compare it to its own fleet and `remap_plane`
+        explicitly when the sizes differ."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        meta = manifest.get("fleet")
+        if meta is None:
+            return None
+        from repro.core.hwspec import V5E, ChipSpec
+        base = (ChipSpec(**meta["base"]) if meta.get("base") else V5E)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrs = {f: z[f"fleet_spec::{f}"] for f in _FLEET_FIELDS}
+        return FleetSpec(base=base, seed=int(meta["seed"]), **arrs)
 
     def restore(self, state_like: dict[str, Any], step: int | None = None,
                 shardings: dict[str, Any] | None = None) -> tuple[int, dict]:

@@ -1,19 +1,18 @@
 """The unified rail control plane (paper §III): one `RailController`
 interface serving both of VolTune's control paths.
 
-The paper's architectural claim is that a single controller design covers a
-deterministic hardware path and a flexible software path. This module is that
-claim in code: every consumer (trainer, serve engine, benchmarks) actuates
-rails exclusively through `RailController.control_step(plane, telemetry)`,
-and the two implementations differ only in *where* the decision runs and
-*what* the actuation costs:
+Decision-as-data control API, stage 3 — arbitration + actuation
+(docs/control_api.md). Policies return declarative `RailRequest`s
+(policy.decide); this module is the single place where requests meet the
+hardware: `arbitrate` clamps/merges a request into the plane state under the
+per-rail safety envelopes (paper §VII-B), and the controllers actuate the
+arbitrated state:
 
-  * `InGraphRailController` (HW-path analogue): the policy is pure jnp and is
-    compiled into the jitted step — deterministic, zero host round-trip, and
-    the decided operating point takes effect immediately (the RTL FSM
-    analogue). Scalar states control one chip; `[n_chips]`-batched states
-    control a fleet via `Policy.update_fleet` (vmap + optional fleet-level
-    reductions such as worst-chip BER gating).
+  * `InGraphRailController` (HW-path analogue): observation → decision →
+    arbitration are pure jnp and compile into the jitted step — deterministic,
+    zero host round-trip, and the arbitrated operating point takes effect
+    immediately (the RTL FSM analogue). One elementwise decide() serves
+    scalar states and `[n_chips]` fleets.
 
   * `HostRailController` (SW-path analogue): the policy runs host-side
     between steps and every actuation is pushed through the simulated
@@ -21,11 +20,15 @@ and the two implementations differ only in *where* the decision runs and
     event-scheduled multi-segment `FleetPowerManager` bus — paying the
     paper-characterized millisecond-scale command-sequence + settling cost,
     with achieved voltages (clamp + LINEAR16 quantization + settling band)
-    written back into the state.
+    written back into the state. With `decide_from="poll"` it closes the
+    loop on its *own* READ_VOUT polling telemetry (`Provenance.POLLED`
+    frames with nonzero `age_s`) instead of trainer-supplied oracle state —
+    the paper's SW path acting on sampled readbacks, sampling delay included.
 
-Both controllers run the *same policy logic*, so on the same telemetry
-stream they produce the same rail trajectory up to actuation quantization —
-the two-paths-one-behavior property pinned by tests/test_control_plane.py.
+Both controllers run the *same* decide()+arbitrate() logic, so on the same
+telemetry stream they produce the same rail trajectory up to actuation
+quantization — the two-paths-one-behavior property pinned by
+tests/test_control_plane.py and tests/test_control_api.py.
 """
 
 from __future__ import annotations
@@ -37,17 +40,77 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ecollectives
 from repro.core.fleet import FleetPowerManager
 from repro.core.hwspec import V5E, ChipSpec
+from repro.core.policy import Policy, RailRequest, apply_request
 from repro.core.power_manager import ControlPath
 from repro.core.power_plane import PowerPlaneState
-from repro.core.rails import TPU_V5E_RAIL_MAP
+from repro.core.rails import TPU_V5E_RAIL_MAP, RailMap
+from repro.core.telemetry import Provenance, TelemetryFrame, as_frame
 
-Telemetry = dict[str, Any]
+# a controller accepts the typed observation or the legacy metrics dict
+Telemetry = TelemetryFrame | dict[str, Any]
 
 # TPU logical rails in PowerPlaneState field order.
 RAIL_LANES = {"VDD_CORE": 0, "VDD_HBM": 1, "VDD_IO": 2}
 _LANE_FIELDS = {"VDD_CORE": "v_core", "VDD_HBM": "v_hbm", "VDD_IO": "v_io"}
+
+
+# ---------------------------------------------------------------------------
+# Arbitration: requests meet the safety envelopes in exactly one place
+# ---------------------------------------------------------------------------
+
+def arbitrate(plane: PowerPlaneState, request: RailRequest,
+              rail_map: RailMap = TPU_V5E_RAIL_MAP) -> PowerPlaneState:
+    """Merge a `RailRequest` into the plane state under the per-rail safety
+    envelopes: None fields keep the current value, scalar fields broadcast
+    over a `[n_chips]` fleet, voltages clamp into [v_min, v_max] of their
+    rail, compression levels clamp into the codec range. Pure jnp —
+    identical under jit/vmap and on the host. The None-skip/broadcast merge
+    itself is `policy.apply_request` (one implementation); arbitration adds
+    only the clamping."""
+    def clamp(want, name):
+        if want is None:
+            return None
+        r = rail_map.by_name(name)
+        return jnp.clip(jnp.asarray(want, jnp.float32),
+                        jnp.float32(r.v_min), jnp.float32(r.v_max))
+
+    comp = request.comp_level
+    if comp is not None:
+        comp = jnp.clip(jnp.asarray(comp, jnp.int32),
+                        ecollectives.LEVEL_LOSSLESS,
+                        ecollectives.LEVEL_INT8_TOPK)
+
+    clamped = RailRequest(v_core=clamp(request.v_core, "VDD_CORE"),
+                          v_hbm=clamp(request.v_hbm, "VDD_HBM"),
+                          v_io=clamp(request.v_io, "VDD_IO"),
+                          comp_level=comp, reason=request.reason)
+    return apply_request(plane, clamped)
+
+
+def _has_decide(policy: Any) -> bool:
+    """True when the policy implements the decision-as-data API (its own
+    decide(), not the abstract base)."""
+    fn = getattr(type(policy), "decide", None)
+    return fn is not None and fn is not Policy.decide
+
+
+def _run_policy(policy: Any, plane: PowerPlaneState, frame: TelemetryFrame,
+                telemetry: Any, rail_map: RailMap, *,
+                host: bool) -> PowerPlaneState:
+    """decide() + arbitrate() for API-native policies; the pre-redesign
+    state-mutating `update_*` methods for legacy policies that never defined
+    decide() (kept working, unclamped, exactly as before)."""
+    if _has_decide(policy):
+        return arbitrate(plane, policy.decide(plane, frame), rail_map)
+    telem = telemetry if isinstance(telemetry, dict) else frame.to_dict()
+    if jnp.ndim(plane.v_core) >= 1:
+        return policy.update_fleet(plane, telem)
+    if host:
+        return policy.update_host(plane, telem)
+    return policy.update_jax(plane, telem)
 
 
 @dataclasses.dataclass
@@ -61,13 +124,15 @@ class ControlPlaneStats:
     serialized_seconds: float = 0.0  # single-shared-bus equivalent (sum)
     polls: int = 0                   # periodic READ_VOUT rounds completed
     polls_deferred: int = 0          # poll rounds that slipped (back-pressure)
+    poll_decisions: int = 0          # decisions made from POLLED frames
 
 
 @runtime_checkable
 class RailController(Protocol):
     """The one actuation interface. `control_step` takes the current rail
-    state and the latest telemetry, runs the policy, actuates, and returns
-    the achieved state; `stats` reports what the control path cost."""
+    state and the latest observation (TelemetryFrame, or a legacy metrics
+    dict), runs the policy, arbitrates, actuates, and returns the achieved
+    state; `stats` reports what the control path cost."""
 
     name: str
 
@@ -82,8 +147,8 @@ def as_controller(policy_or_controller: Any, *,
     """Normalize a config knob: an existing controller passes through; None
     stays None; a bare Policy is wrapped for the requesting path —
     `host=False` (in-graph slots) -> InGraphRailController,
-    `host=True` (between-steps slots) -> HostDecisionController, so
-    `Policy.update_host` runs where the SW-path analogue is expected."""
+    `host=True` (between-steps slots) -> HostDecisionController, so the
+    decision runs where the SW-path analogue is expected."""
     if policy_or_controller is None:
         return None
     if hasattr(policy_or_controller, "control_step"):
@@ -100,22 +165,24 @@ def as_controller(policy_or_controller: Any, *,
 class InGraphRailController:
     """Pure-jnp controller compiled into the jitted step (paper §III-B).
 
-    Actuation is the identity: in the HW path the decided operating point is
-    applied deterministically before the next step, with no bus transaction
-    on the modelled timeline (its cost is pinned separately by the Table
-    VII/IX overhead benchmarks)."""
+    Actuation is the identity: in the HW path the arbitrated operating point
+    is applied deterministically before the next step, with no bus
+    transaction on the modelled timeline (its cost is pinned separately by
+    the Table VII/IX overhead benchmarks)."""
 
-    def __init__(self, policy: Any, name: str | None = None):
+    def __init__(self, policy: Any, name: str | None = None,
+                 rail_map: RailMap = TPU_V5E_RAIL_MAP):
         if policy is None:
             raise ValueError("InGraphRailController needs a policy")
         self.policy = policy
+        self.rail_map = rail_map
         self.name = name or f"in-graph[{getattr(policy, 'name', 'policy')}]"
 
     def control_step(self, plane: PowerPlaneState,
                      telemetry: Telemetry) -> PowerPlaneState:
-        if jnp.ndim(plane.v_core) >= 1:
-            return self.policy.update_fleet(plane, telemetry)
-        return self.policy.update_jax(plane, telemetry)
+        frame = as_frame(telemetry, state=plane)
+        return _run_policy(self.policy, plane, frame, telemetry,
+                           self.rail_map, host=False)
 
     def stats(self) -> ControlPlaneStats:
         # decisions happen inside the compiled step; host-side cost is zero
@@ -127,27 +194,29 @@ class InGraphRailController:
 # ---------------------------------------------------------------------------
 
 class HostDecisionController:
-    """Decide-only host controller: runs `Policy.update_host` between steps
-    with no bus actuation — for studying SW-path decision logic without
-    paying (or modelling) PMBus latency. Pair with HostRailController when
-    actuation cost matters."""
+    """Decide-only host controller: runs the policy between steps with no
+    bus actuation — for studying SW-path decision logic without paying (or
+    modelling) PMBus latency. Pair with HostRailController when actuation
+    cost matters."""
 
-    def __init__(self, policy: Any):
+    def __init__(self, policy: Any, rail_map: RailMap = TPU_V5E_RAIL_MAP):
         if policy is None:
             raise ValueError("HostDecisionController needs a policy")
         self.policy = policy
+        self.rail_map = rail_map
         self.name = f"host-decide[{getattr(policy, 'name', 'policy')}]"
         self.decisions = 0
 
     def control_step(self, plane: PowerPlaneState,
                      telemetry: Telemetry) -> PowerPlaneState:
         self.decisions += 1
-        if jnp.ndim(plane.v_core) >= 1:
-            return self.policy.update_fleet(plane, telemetry)
-        return self.policy.update_host(plane, telemetry)
+        frame = as_frame(telemetry, state=plane)
+        return _run_policy(self.policy, plane, frame, telemetry,
+                           self.rail_map, host=True)
 
     def stats(self) -> ControlPlaneStats:
         return ControlPlaneStats(decisions=self.decisions)
+
 
 class HostRailController:
     """Host controller driving 1..N boards through the event-scheduled
@@ -156,7 +225,17 @@ class HostRailController:
     With `policy=None` it is pure actuation (push whatever the state asks
     for); with a policy it is decide-then-actuate. Scalar states drive board
     0; `[n_chips]` states drive one board per chip concurrently in simulated
-    time."""
+    time.
+
+    `decide_from` selects the observation source:
+      * "telemetry" (default): decide from the frame/dict the caller passes
+        (rail observations fall back to the oracle plane state — the
+        pre-redesign behavior);
+      * "poll": decide from this controller's own READ_VOUT polling loop —
+        sampled rail voltages with their per-chip staleness (`age_s`),
+        merged over the caller's non-electrical measurements (grad error,
+        roofline terms). Requires `enable_polling()`; chips never sampled
+        yet fall back to the plane value at age 0."""
 
     def __init__(
         self,
@@ -169,25 +248,80 @@ class HostRailController:
         settle_band_frac: float = 0.01,
         fleet: FleetPowerManager | None = None,
         seed: int = 0,
+        decide_from: str = "telemetry",
+        rail_map: RailMap = TPU_V5E_RAIL_MAP,
     ):
+        if decide_from not in ("telemetry", "poll"):
+            raise ValueError(f"decide_from must be 'telemetry' or 'poll', "
+                             f"got {decide_from!r}")
+        if (decide_from == "poll" and policy is not None
+                and not _has_decide(policy)):
+            # a legacy update_* policy reads rail voltages from the oracle
+            # state, so the polled frame would be silently ignored while
+            # stats reported poll-driven decisions
+            raise ValueError(
+                "decide_from='poll' needs a decide(state, frame) policy; "
+                f"{getattr(policy, 'name', type(policy).__name__)} only "
+                "implements the legacy update_* API")
         self.policy = policy
         self.spec = spec
         self.settle_band_frac = settle_band_frac
+        self.decide_from = decide_from
+        self.rail_map = rail_map
         self.fleet = fleet if fleet is not None else FleetPowerManager(
-            n_chips, TPU_V5E_RAIL_MAP, path=path, clock_hz=clock_hz, seed=seed)
+            n_chips, rail_map, path=path, clock_hz=clock_hz, seed=seed)
         self.name = (f"host[{getattr(policy, 'name', 'actuate-only')}]"
                      f"x{self.fleet.n_boards}")
         self.decisions = 0
+        self.poll_decisions = 0
         self.last_report = None   # FleetActuationReport of the latest round
+        self.last_frame: TelemetryFrame | None = None  # latest decision input
+
+    # -- observe --------------------------------------------------------------
+    def observed_frame(self, plane: PowerPlaneState,
+                       telemetry: Telemetry | None = None) -> TelemetryFrame:
+        """POLLED TelemetryFrame: the rail voltages this controller's polling
+        loop last *sampled* (LINEAR16-quantized READ_VOUT values, with their
+        fleet-clock staleness in `age_s`), merged over the caller-supplied
+        non-electrical measurements. Lanes never polled fall back to the
+        plane value at age 0."""
+        base = as_frame(telemetry if telemetry is not None else {})
+        sampled = self.fleet.poll_frame()
+        batched = jnp.ndim(plane.v_core) >= 1
+
+        def pick(field):
+            s = getattr(sampled, field)
+            want = np.asarray(s, np.float64)
+            have = ~np.isnan(want)
+            fallback = np.atleast_1d(np.asarray(
+                jax.device_get(getattr(plane, field)), np.float64))
+            fallback = np.broadcast_to(fallback, want.shape)
+            v = np.where(have, want, fallback).astype(np.float32)
+            return jnp.asarray(v if batched else v[0])
+
+        age = np.asarray(sampled.age_s, np.float64)
+        age = np.where(np.isnan(age), 0.0, age).astype(np.float32)
+        return dataclasses.replace(
+            base,
+            v_core=pick("v_core"), v_hbm=pick("v_hbm"), v_io=pick("v_io"),
+            age_s=jnp.asarray(age if batched else age[0]),
+            provenance=Provenance.POLLED)
 
     # -- decide ---------------------------------------------------------------
     def decide(self, plane: PowerPlaneState,
                telemetry: Telemetry) -> PowerPlaneState:
+        """Run the policy (no actuation): observation → request →
+        arbitration, returning the target state the bus would be asked for."""
         if self.policy is None:
             return plane
-        if jnp.ndim(plane.v_core) >= 1:
-            return self.policy.update_fleet(plane, telemetry)
-        return self.policy.update_host(plane, telemetry)
+        if self.decide_from == "poll":
+            frame = self.observed_frame(plane, telemetry)
+            self.poll_decisions += 1
+        else:
+            frame = as_frame(telemetry, state=plane)
+        self.last_frame = frame
+        return _run_policy(self.policy, plane, frame, telemetry,
+                           self.rail_map, host=True)
 
     # -- actuate --------------------------------------------------------------
     def actuate(self, plane: PowerPlaneState) -> PowerPlaneState:
@@ -268,7 +402,8 @@ class HostRailController:
             serialized_seconds=self.fleet.serialized_seconds,
             polls=sum(st.polls for st in self.fleet.poll_stats.values()),
             polls_deferred=sum(st.deferred
-                               for st in self.fleet.poll_stats.values()))
+                               for st in self.fleet.poll_stats.values()),
+            poll_decisions=self.poll_decisions)
 
 
 class HostPowerController(HostRailController):

@@ -326,14 +326,49 @@ class FleetPowerManager:
         """Latest PMBus-*sampled* rail voltages, [n_boards, n_lanes] (NaN
         where a lane was never polled) — the telemetry-path counterpart of
         `readback`'s oscilloscope view."""
+        return self.poll_observation(lanes)[0]
+
+    def poll_observation(self, lanes: Iterable[int] | None = None
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """(values, ages): the latest READ_VOUT sample of each lane and how
+        stale it is, both [n_boards, n_lanes] (NaN where never polled). Ages
+        are fleet-clock seconds since each sample completed on its segment's
+        bus — the sampling delay a poll-driven host policy decides under."""
         lanes = list(lanes) if lanes is not None else self.rail_map.lanes()
-        out = np.full((self.n_boards, len(lanes)), np.nan)
+        vals = np.full((self.n_boards, len(lanes)), np.nan)
+        ages = np.full((self.n_boards, len(lanes)), np.nan)
         for s in self.segments:
             got = self.last_poll.get(s.board_id, {})
             for j, lane in enumerate(lanes):
                 if lane in got:
-                    out[s.board_id, j] = got[lane][1]
-        return out
+                    t_done, v = got[lane]
+                    vals[s.board_id, j] = v
+                    ages[s.board_id, j] = self.clock.age(t_done)
+        return vals, ages
+
+    def poll_frame(self) -> "object":
+        """The latest polled observation as a typed `TelemetryFrame`
+        (Provenance.POLLED): per-board sampled rail voltages keyed by the
+        rail map's VDD_CORE/VDD_HBM/VDD_IO names, `age_s` = each board's
+        *stalest* sampled lane (a decision is only as fresh as its oldest
+        input). NaN where a lane was never polled — the consumer decides the
+        fallback (HostRailController uses the oracle plane value at age 0)."""
+        from repro.core.telemetry import Provenance, TelemetryFrame
+        fields = {"VDD_CORE": "v_core", "VDD_HBM": "v_hbm", "VDD_IO": "v_io"}
+        lanes, names = [], []
+        for rail in self.rail_map:
+            if rail.name in fields:
+                lanes.append(rail.lane)
+                names.append(fields[rail.name])
+        vals, ages = self.poll_observation(lanes)
+        kw = {name: vals[:, j].astype(np.float32)
+              for j, name in enumerate(names)}
+        # max over lanes, NaN-aware without the all-NaN-slice warning
+        masked = np.where(np.isnan(ages), -np.inf, ages)
+        age = masked.max(axis=1, initial=-np.inf)
+        age = np.where(np.isinf(age), np.nan, age)
+        return TelemetryFrame(age_s=age.astype(np.float32),
+                              provenance=Provenance.POLLED, **kw)
 
     # -- telemetry --------------------------------------------------------------
     def readback(self, lanes: Iterable[int] | None = None) -> np.ndarray:

@@ -119,6 +119,12 @@ class SimClock:
             self._t = t
         return self._t
 
+    def age(self, t: float) -> float:
+        """Seconds elapsed since timestamp `t` (clamped at 0 — a sample from
+        a segment clock that ran ahead of fleet time is 'fresh', not from
+        the future). Used to stamp staleness onto POLLED telemetry frames."""
+        return max(0.0, self._t - t)
+
 
 @dataclasses.dataclass(order=True)
 class Event:

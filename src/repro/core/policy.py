@@ -1,31 +1,38 @@
 """Voltage/compression selection policies (paper §VII-B: 'VolTune is designed
 as a control mechanism rather than as a fixed automatic optimizer').
 
-The mechanism layer (power_plane / power_manager / ecollectives) never decides
-operating points; these policies do. Each policy exists in two forms matching
-the paper's control paths:
+Decision-as-data control API, stage 2 — decision (docs/control_api.md). The
+mechanism layer (power_plane / power_manager / ecollectives) never decides
+operating points; these policies do, through one primary hook:
 
-  * `update_jax(state, telemetry) -> state` — pure jnp, compiled into the
-    step (in-graph / HW-path analogue);
-  * `update_host(state, telemetry) -> state` — plain Python between steps
-    (host / SW-path analogue), pushed through control_plane.HostRailController;
+    decide(state, frame) -> RailRequest
 
-plus `update_fleet(state, telemetry) -> state` for `[n_chips]`-batched fleet
-states (per-chip vmap with optional fleet-level reductions).
+A policy looks at a typed `telemetry.TelemetryFrame` observation (exact
+in-graph values or aged PMBus samples — the policy cannot tell except by
+checking `frame.provenance`/`frame.age_s`, which is the point) and returns a
+declarative `RailRequest`: the rail voltages / compression level it *wants*,
+per-chip or broadcast, with an optional `reason` code. It never mutates
+`PowerPlaneState`. Arbitration against the per-rail safety envelopes and
+actuation live in one place, `control_plane.arbitrate` — the same merge for
+the in-graph (HW-path) and host (SW-path) controllers.
 
-Telemetry is a dict with (at least) the keys produced by
-power_plane.account_step plus 'grad_error' (the gradient-domain BER) when
-error-bounded collectives are active. Fleet-native consumers (the fleet
-train step, fleet_frontier) additionally provide per-chip nominal voltages
-('v_nom_core'/'v_nom_hbm'/'v_nom_io', from hwspec.FleetSpec): policies
-anchor their decisions to *that chip's* nominal point instead of the shared
-spec scalar, so process variation flows through every operating-point
-decision. Absent those keys, the spec scalars apply (scalar path unchanged).
+Policies anchor to per-chip nominal voltages when the frame carries them
+(`frame.v_nom_*`, from hwspec.FleetSpec), so process variation flows through
+every operating-point decision; absent those, the spec scalars apply (scalar
+path unchanged). All decision arithmetic is elementwise jnp, so one decide()
+serves scalar states and `[n_chips]` fleets alike.
+
+The pre-redesign API — `update_jax/update_host/update_fleet(state, telemetry
+dict) -> state` — survives as thin deprecated shims over decide() (warning:
+`ControlAPIDeprecationWarning`, an error for in-repo callers via pytest).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -33,33 +40,133 @@ import jax.numpy as jnp
 from repro.core import ecollectives
 from repro.core.hwspec import V5E, ChipSpec
 from repro.core.power_plane import PowerPlaneState
+from repro.core.telemetry import TelemetryFrame
 
 
-def _nom(telemetry, key: str, fallback: float):
-    """Per-chip nominal voltage from telemetry (fleet path) or the spec
+class ControlAPIDeprecationWarning(DeprecationWarning):
+    """Raised by the legacy `Policy.update_*` shims. pytest.ini turns this
+    into an error so in-repo code cannot regress onto the dict interface."""
+
+
+def _warn_legacy(name: str) -> None:
+    warnings.warn(
+        f"Policy.{name}(state, telemetry_dict) is deprecated; implement/call "
+        f"decide(state, frame) -> RailRequest and actuate through a "
+        f"RailController (see docs/control_api.md)",
+        ControlAPIDeprecationWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# Decision as data
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["v_core", "v_hbm", "v_io", "comp_level"],
+         meta_fields=["reason"])
+@dataclasses.dataclass(frozen=True)
+class RailRequest:
+    """A declarative operating-point request. None fields mean 'leave this
+    rail alone'. Values may be scalar (broadcast over a fleet) or `[n_chips]`
+    (per-chip setpoints). `reason` is a static policy-assigned code for
+    logs/traces — not data, so it never forces a retrace."""
+    v_core: Any = None
+    v_hbm: Any = None
+    v_io: Any = None
+    comp_level: Any = None
+    reason: str = ""
+
+    def is_empty(self) -> bool:
+        return (self.v_core is None and self.v_hbm is None
+                and self.v_io is None and self.comp_level is None)
+
+
+def apply_request(state: PowerPlaneState, request: RailRequest
+                  ) -> PowerPlaneState:
+    """Raw merge of a request into a plane state — NO envelope clamping (that
+    is `control_plane.arbitrate`'s job). Scalar request fields broadcast over
+    a `[n_chips]` state. This is the legacy-shim semantics: exactly what the
+    old state-mutating `update_*` methods did."""
+    fleet_shape = (jnp.shape(state.v_core)
+                   if jnp.ndim(state.v_core) >= 1 else None)
+
+    def merge(cur, want, dtype):
+        if want is None:
+            return cur
+        v = jnp.asarray(want, dtype)
+        if fleet_shape is not None and jnp.ndim(v) == 0:
+            v = jnp.broadcast_to(v, fleet_shape)
+        return v
+
+    return dataclasses.replace(
+        state,
+        v_core=merge(state.v_core, request.v_core, jnp.float32),
+        v_hbm=merge(state.v_hbm, request.v_hbm, jnp.float32),
+        v_io=merge(state.v_io, request.v_io, jnp.float32),
+        comp_level=merge(state.comp_level, request.comp_level, jnp.int32),
+    )
+
+
+def _nom(anchor, fallback: float):
+    """Per-chip nominal voltage from the frame (fleet path) or the spec
     scalar (scalar path)."""
-    v = telemetry.get(key)
-    return jnp.float32(fallback) if v is None else jnp.asarray(v, jnp.float32)
+    return (jnp.float32(fallback) if anchor is None
+            else jnp.asarray(anchor, jnp.float32))
+
+
+def _obs(observed, state_value):
+    """A rail observation from the frame, falling back to the oracle state
+    when the frame carries none (pure-metrics legacy dicts)."""
+    return state_value if observed is None else observed
 
 
 class Policy:
     name = "base"
 
+    # -- the API --------------------------------------------------------------
+    def decide(self, state: PowerPlaneState,
+               frame: TelemetryFrame) -> RailRequest:
+        """Observation in, request out. Pure jnp — compiled into the step by
+        the in-graph controller, evaluated between steps by host ones."""
+        raise NotImplementedError(
+            f"{type(self).__name__} defines no decide(); implement it "
+            f"(the legacy update_* API is deprecated)")
+
+    def _decides(self) -> bool:
+        """True when this policy implements its own decide() (vs a legacy
+        subclass that only overrode the update_* methods)."""
+        return type(self).decide is not Policy.decide
+
+    # -- deprecated dict-interface shims --------------------------------------
+    # Pre-redesign base-class semantics are preserved for legacy subclasses
+    # that only override update_jax: update_host delegates to it, and
+    # update_fleet broadcasts + vmaps it — exactly the old defaults.
     def update_jax(self, state: PowerPlaneState, telemetry) -> PowerPlaneState:
-        raise NotImplementedError
+        _warn_legacy("update_jax")
+        frame = TelemetryFrame.from_dict(telemetry, state=state)
+        return apply_request(state, self.decide(state, frame))
 
     def update_host(self, state: PowerPlaneState, telemetry) -> PowerPlaneState:
-        # default: same decision logic, evaluated host-side between steps
-        return self.update_jax(state, telemetry)
+        _warn_legacy("update_host")
+        if not self._decides():
+            # old default: same decision logic, evaluated host-side
+            return self.update_jax(state, telemetry)
+        frame = TelemetryFrame.from_dict(telemetry, state=state)
+        return apply_request(state, self.decide(state, frame))
 
     def update_fleet(self, state: PowerPlaneState, telemetry) -> PowerPlaneState:
-        """Per-chip decision vectorized over a `[n_chips]`-batched state via
-        `jax.vmap`. Scalar telemetry entries broadcast to the fleet; policies
-        with fleet-level reductions (e.g. worst-chip gating) override this."""
+        _warn_legacy("update_fleet")
         n = state.v_core.shape[0]
         telem = {k: jnp.broadcast_to(jnp.asarray(v), (n,))
                  if jnp.ndim(v) == 0 else v for k, v in telemetry.items()}
-        return jax.vmap(self.update_jax)(state, telem)
+        if not self._decides():
+            # old default: per-chip vmap of the legacy scalar update
+            return jax.vmap(self.update_jax)(state, telem)
+
+        def per_chip(s, t):
+            return apply_request(
+                s, self.decide(s, TelemetryFrame.from_dict(t, state=s)))
+
+        return jax.vmap(per_chip)(state, telem)
 
 
 @dataclasses.dataclass
@@ -69,13 +176,13 @@ class StaticNominal(Policy):
     spec: ChipSpec = V5E
     name: str = "static-nominal"
 
-    def update_jax(self, state, telemetry):
-        return dataclasses.replace(
-            state,
-            v_core=_nom(telemetry, "v_nom_core", self.spec.nominal_v_core),
-            v_hbm=_nom(telemetry, "v_nom_hbm", self.spec.nominal_v_hbm),
-            v_io=_nom(telemetry, "v_nom_io", self.spec.nominal_v_io),
+    def decide(self, state, frame):
+        return RailRequest(
+            v_core=_nom(frame.v_nom_core, self.spec.nominal_v_core),
+            v_hbm=_nom(frame.v_nom_hbm, self.spec.nominal_v_hbm),
+            v_io=_nom(frame.v_nom_io, self.spec.nominal_v_io),
             comp_level=jnp.int32(ecollectives.LEVEL_LOSSLESS),
+            reason="static-nominal-margins",
         )
 
 
@@ -91,20 +198,20 @@ class BERBounded(Policy):
     spec: ChipSpec = V5E
     name: str = "ber-bounded"
 
-    def update_jax(self, state, telemetry):
-        err = telemetry.get("grad_error", jnp.float32(0.0))
+    def decide(self, state, frame):
+        err = frame.grad_error
         # hysteresis: escalate when comfortably under bound, retreat when over
         lvl = state.comp_level
         lvl = jnp.where(err < 0.5 * self.error_bound,
                         jnp.minimum(lvl + 1, ecollectives.LEVEL_INT8_TOPK), lvl)
         lvl = jnp.where(err > self.error_bound, jnp.maximum(lvl - 1, 0), lvl)
-        v_nom_io = _nom(telemetry, "v_nom_io", self.spec.nominal_v_io)
+        v_nom_io = _nom(frame.v_nom_io, self.spec.nominal_v_io)
         v_io = jnp.where(lvl > 0,
                          jnp.maximum(jnp.float32(self.v_io_floor),
                                      v_nom_io * 0.9),
                          v_nom_io)
-        return dataclasses.replace(state, comp_level=lvl.astype(jnp.int32),
-                                   v_io=v_io)
+        return RailRequest(v_io=v_io, comp_level=lvl.astype(jnp.int32),
+                           reason="ber-bounded-hysteresis")
 
 
 @dataclasses.dataclass
@@ -117,10 +224,10 @@ class PhaseAware(Policy):
     spec: ChipSpec = V5E
     name: str = "phase-aware"
 
-    def update_jax(self, state, telemetry):
-        t_comp = telemetry["t_comp_s"]
-        t_mem = telemetry["t_mem_s"]
-        t_coll = telemetry["t_coll_s"]
+    def decide(self, state, frame):
+        t_comp = frame.t_comp_s
+        t_mem = frame.t_mem_s
+        t_coll = frame.t_coll_s
         t_dom = jnp.maximum(t_comp, jnp.maximum(t_mem, t_coll))
         target = t_dom * (1.0 - self.margin)
 
@@ -133,14 +240,14 @@ class PhaseAware(Policy):
                                jnp.float32(v_min))
 
         from repro.core.rails import TPU_V5E_RAIL_MAP as rm
-        return dataclasses.replace(
-            state,
-            v_core=scaled(_nom(telemetry, "v_nom_core", self.spec.nominal_v_core),
+        return RailRequest(
+            v_core=scaled(_nom(frame.v_nom_core, self.spec.nominal_v_core),
                           rm.by_name("VDD_CORE").v_min, t_comp),
-            v_hbm=scaled(_nom(telemetry, "v_nom_hbm", self.spec.nominal_v_hbm),
+            v_hbm=scaled(_nom(frame.v_nom_hbm, self.spec.nominal_v_hbm),
                          rm.by_name("VDD_HBM").v_min, t_mem),
-            v_io=scaled(_nom(telemetry, "v_nom_io", self.spec.nominal_v_io),
+            v_io=scaled(_nom(frame.v_nom_io, self.spec.nominal_v_io),
                         rm.by_name("VDD_IO").v_min, t_coll),
+            reason="phase-slack",
         )
 
 
@@ -149,7 +256,12 @@ class ClosedLoop(Policy):
     """The paper's explicit future work (§VIII): feedback control on
     telemetry. A conservative integral controller that walks VDD_IO down
     while the gradient-error telemetry stays under the bound and backs off
-    multiplicatively on violation (AIMD — stable under noisy telemetry)."""
+    multiplicatively on violation (AIMD — stable under noisy telemetry).
+
+    Decides from the frame's *observed* VDD_IO — the exact in-graph value on
+    the HW path, the aged READ_VOUT sample on a poll-driven host controller
+    (`decide_from="poll"`) — so the SW loop genuinely closes on sampled
+    telemetry, sampling delay included."""
     error_bound: float = 5e-3
     step_v: float = 0.005
     backoff: float = 1.05
@@ -157,17 +269,19 @@ class ClosedLoop(Policy):
     spec: ChipSpec = V5E
     name: str = "closed-loop"
 
-    def update_jax(self, state, telemetry):
-        err = telemetry.get("grad_error", jnp.float32(0.0))
+    def decide(self, state, frame):
+        err = frame.grad_error
+        v_io_obs = _obs(frame.v_io, state.v_io)
         ok = err <= self.error_bound
-        v_down = jnp.maximum(state.v_io - self.step_v, self.v_io_floor)
-        v_up = jnp.minimum(state.v_io * self.backoff,
-                           _nom(telemetry, "v_nom_io", self.spec.nominal_v_io))
+        v_down = jnp.maximum(v_io_obs - self.step_v, self.v_io_floor)
+        v_up = jnp.minimum(v_io_obs * self.backoff,
+                           _nom(frame.v_nom_io, self.spec.nominal_v_io))
         v_io = jnp.where(ok, v_down, v_up)
         lvl = jnp.where(ok, jnp.minimum(state.comp_level + 1,
                                         ecollectives.LEVEL_INT8),
                         jnp.int32(ecollectives.LEVEL_LOSSLESS))
-        return dataclasses.replace(state, v_io=v_io, comp_level=lvl.astype(jnp.int32))
+        return RailRequest(v_io=v_io, comp_level=lvl.astype(jnp.int32),
+                           reason="aimd-feedback")
 
 
 @dataclasses.dataclass
@@ -184,20 +298,24 @@ class WorstChipGate(Policy):
     def __post_init__(self):
         self.name = f"worst-chip[{self.inner.name}]"
 
-    def update_jax(self, state, telemetry):
+    def decide(self, state, frame):
         # scalar state: one chip IS the worst chip
-        return self.inner.update_jax(state, telemetry)
-
-    def update_host(self, state, telemetry):
-        return self.inner.update_host(state, telemetry)
+        if jnp.ndim(state.v_core) >= 1:
+            frame = frame.reduce_worst(self.reduce_keys)
+        return self.inner.decide(state, frame)
 
     def update_fleet(self, state, telemetry):
+        # legacy shim kept override-for-override with the old API: reduce the
+        # dict, then delegate to the inner policy's (deprecated) fleet shim
+        _warn_legacy("update_fleet")
         telem = dict(telemetry)
         for k in self.reduce_keys:
             if k in telem and jnp.ndim(telem[k]) >= 1:
                 telem[k] = jnp.broadcast_to(jnp.max(telem[k]),
                                             telem[k].shape)
-        return self.inner.update_fleet(state, telem)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", ControlAPIDeprecationWarning)
+            return self.inner.update_fleet(state, telem)
 
 
 POLICIES = {p.name: p for p in

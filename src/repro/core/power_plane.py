@@ -246,6 +246,46 @@ def account_step_fleet(profile: StepProfile, state: PowerPlaneState,
     return jax.vmap(lambda s: account_step(profile, s, spec, overlap))(state)
 
 
+# ---------------------------------------------------------------------------
+# Typed observation builders (decision-as-data API, stage 1)
+# ---------------------------------------------------------------------------
+
+def account_and_observe(profile: StepProfile, state: PowerPlaneState,
+                        spec: ChipSpec = V5E, overlap: float = 1.0,
+                        variation: dict | None = None):
+    """`account_step` that additionally builds the typed EXACT observation:
+    returns (state', frame, metrics). The frame carries the oracle rail
+    voltages (age 0) plus the step's roofline/power measurements — what the
+    in-graph (HW-path) controller decides from."""
+    from repro.core.telemetry import TelemetryFrame
+    new, metrics = account_step(profile, state, spec, overlap,
+                                variation=variation)
+    nominals = None
+    if variation is not None:
+        nominals = {"v_nom_core": variation["v_core_nom"],
+                    "v_nom_hbm": variation["v_hbm_nom"],
+                    "v_nom_io": variation["v_io_nom"]}
+    frame = TelemetryFrame.from_account(new, metrics, nominals=nominals)
+    return new, frame, metrics
+
+
+def account_fleet_and_observe(profile: StepProfile, state: PowerPlaneState,
+                              spec: "ChipSpec | FleetSpec" = V5E,
+                              overlap: float = 1.0):
+    """`account_step_fleet` returning (state', frame, metrics): the EXACT
+    `[n_chips]` observation, anchored to each chip's process-varied nominal
+    voltages when `spec` is a `FleetSpec`."""
+    from repro.core.telemetry import TelemetryFrame
+    new, metrics = account_step_fleet(profile, state, spec, overlap)
+    nominals = None
+    if isinstance(spec, FleetSpec):
+        nominals = {"v_nom_core": spec.v_core_nominal,
+                    "v_nom_hbm": spec.v_hbm_nominal,
+                    "v_nom_io": spec.v_io_nominal}
+    frame = TelemetryFrame.from_account(new, metrics, nominals=nominals)
+    return new, frame, metrics
+
+
 def fleet_summary(state: PowerPlaneState) -> dict[str, jnp.ndarray]:
     """Fleet-level reductions of a batched state (worst/best chip + totals).
     The hot-path [n_chips, n_fields] telemetry reduction lives in

@@ -1,6 +1,23 @@
-"""Telemetry plumbing: per-step records (the READ_VOUT/READ_IOUT analogue of
-the training system) and a host-side ring log used by host controllers,
-benchmarks and the trainer.
+"""Telemetry plumbing: the typed per-step observation (`TelemetryFrame`),
+per-step records (the READ_VOUT/READ_IOUT analogue of the training system)
+and a host-side ring log used by host controllers, benchmarks and the
+trainer.
+
+Decision-as-data control API, stage 1 — observation (docs/control_api.md):
+a `TelemetryFrame` is what a policy is allowed to see. Every field is either
+a scalar (one chip / SPMD-replicated) or a `[n_chips]` array (per-chip fleet
+state), and the frame says where its rail voltages came from:
+
+  * `Provenance.EXACT`  — in-graph accounting values (the oracle state the
+    HW-path analogue acts on), `age_s == 0`;
+  * `Provenance.POLLED` — PMBus READ_VOUT samples off the fleet bus, with
+    `age_s` carrying how stale each chip's sample is in fleet-clock seconds
+    (the SW path closes its loop on *these*, sampling delay included).
+
+Frames are built by `power_plane.account_and_observe[_fleet]` (EXACT), by
+`fleet.FleetPowerManager.poll_frame` (POLLED), and by the back-compat
+`TelemetryFrame.from_dict` shim over the historical string-keyed metrics
+dict.
 
 Scalar→fleet convention (docs/fleet.md): every metric is either a scalar
 (one chip / SPMD-replicated) or a `[n_chips]` array (per-chip fleet state).
@@ -17,11 +34,175 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import json
+from functools import partial
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+class Provenance(enum.Enum):
+    """Where a frame's rail-voltage observations came from."""
+    EXACT = "exact"      # in-graph accounting state (oracle, age 0)
+    POLLED = "polled"    # PMBus READ_VOUT samples (quantized + aged)
+
+
+# metrics dict keys with first-class TelemetryFrame fields
+_FRAME_METRIC_KEYS = ("grad_error", "t_step_s", "t_comp_s", "t_mem_s",
+                      "t_coll_s", "power_w", "energy_step_j")
+_FRAME_RAIL_KEYS = ("v_core", "v_hbm", "v_io")
+_FRAME_NOM_KEYS = ("v_nom_core", "v_nom_hbm", "v_nom_io")
+
+
+def _zf32():
+    return jnp.float32(0.0)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["grad_error", "t_step_s", "t_comp_s", "t_mem_s",
+                      "t_coll_s", "power_w", "energy_step_j",
+                      "v_core", "v_hbm", "v_io",
+                      "v_nom_core", "v_nom_hbm", "v_nom_io",
+                      "age_s", "extras"],
+         meta_fields=["provenance"])
+@dataclasses.dataclass(frozen=True)
+class TelemetryFrame:
+    """One typed observation of a chip (or `[n_chips]` fleet): what a policy
+    decides from. Frozen pytree — jit/vmap/scan-safe.
+
+    Voltage observations (`v_core`/`v_hbm`/`v_io`) may be None when the
+    builder had no view of the rails (pure-metrics legacy dicts); policies
+    fall back to the plane state then. Nominal anchors (`v_nom_*`) are the
+    per-chip process-varied nominal voltages from `hwspec.FleetSpec`, or
+    None on the scalar path (policies fall back to their spec scalar).
+    `age_s` is how stale the voltage observations are — 0 for EXACT frames,
+    fleet-clock seconds since each chip's READ_VOUT sample for POLLED ones.
+    """
+    # step measurements (what the old metrics dict carried)
+    grad_error: Any = dataclasses.field(default_factory=_zf32)
+    t_step_s: Any = dataclasses.field(default_factory=_zf32)
+    t_comp_s: Any = dataclasses.field(default_factory=_zf32)
+    t_mem_s: Any = dataclasses.field(default_factory=_zf32)
+    t_coll_s: Any = dataclasses.field(default_factory=_zf32)
+    power_w: Any = dataclasses.field(default_factory=_zf32)
+    energy_step_j: Any = dataclasses.field(default_factory=_zf32)
+    # rail-voltage observations + provenance metadata
+    v_core: Any = None
+    v_hbm: Any = None
+    v_io: Any = None
+    v_nom_core: Any = None
+    v_nom_hbm: Any = None
+    v_nom_io: Any = None
+    age_s: Any = dataclasses.field(default_factory=_zf32)
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+    provenance: Provenance = Provenance.EXACT
+
+    # -- constructors ---------------------------------------------------------
+    @staticmethod
+    def from_dict(telemetry: dict[str, Any], *, state=None,
+                  age_s: Any = None,
+                  provenance: Provenance = Provenance.EXACT
+                  ) -> "TelemetryFrame":
+        """Back-compat shim: build a frame from the historical string-keyed
+        metrics dict. Known keys land in typed fields, everything else in
+        `extras`; rail-voltage observations come from `state` (the plane the
+        caller is controlling) so legacy dict-driven trajectories are
+        bit-identical to the old state-reading policies."""
+        t = dict(telemetry)
+        kw: dict[str, Any] = {}
+        for k in _FRAME_METRIC_KEYS:
+            v = t.pop(k, None)
+            if v is not None:
+                kw[k] = v
+        for k in _FRAME_NOM_KEYS:
+            v = t.pop(k, None)
+            if v is not None:
+                kw[k] = jnp.asarray(v, jnp.float32)
+        for k in _FRAME_RAIL_KEYS:
+            v = t.pop(k, None)
+            if v is not None:
+                kw[k] = jnp.asarray(v, jnp.float32)
+            elif state is not None:
+                kw[k] = getattr(state, k)
+        if age_s is not None:
+            kw["age_s"] = age_s
+        return TelemetryFrame(extras=t, provenance=provenance, **kw)
+
+    @staticmethod
+    def from_account(state, metrics: dict[str, Any], *,
+                     nominals: dict[str, Any] | None = None
+                     ) -> "TelemetryFrame":
+        """EXACT frame from an `account_step[_fleet]` result: voltages are
+        the oracle plane state, `age_s` is 0. `nominals` optionally carries
+        the per-chip `v_nom_*` anchors of a `FleetSpec`."""
+        kw = {k: metrics[k] for k in _FRAME_METRIC_KEYS if k in metrics}
+        if nominals:
+            for k in _FRAME_NOM_KEYS:
+                if k in nominals:
+                    kw[k] = jnp.asarray(nominals[k], jnp.float32)
+        extras = {k: v for k, v in metrics.items()
+                  if k not in _FRAME_METRIC_KEYS and k not in _FRAME_NOM_KEYS}
+        return TelemetryFrame(v_core=state.v_core, v_hbm=state.v_hbm,
+                              v_io=state.v_io, extras=extras,
+                              provenance=Provenance.EXACT, **kw)
+
+    # -- views ----------------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        """The legacy metrics-dict view (for legacy `update_*` policies and
+        logging). Non-None typed fields plus extras."""
+        out = dict(self.extras)
+        for k in _FRAME_METRIC_KEYS + _FRAME_NOM_KEYS + _FRAME_RAIL_KEYS:
+            v = getattr(self, k)
+            if v is not None:
+                out[k] = v
+        return out
+
+    def get(self, key: str, default: Any = None) -> Any:
+        """dict-style access over typed fields + extras (migration aid)."""
+        if key in self.extras:
+            return self.extras[key]
+        v = getattr(self, key, None)
+        return v if v is not None else default
+
+    def reduce_worst(self, keys: tuple[str, ...]) -> "TelemetryFrame":
+        """Broadcast the fleet-worst (max) value of each named observation to
+        every chip — the WorstChipGate reduction, now a frame transform."""
+        kw: dict[str, Any] = {}
+        extras = dict(self.extras)
+        for k in keys:
+            if k in extras:
+                v = extras[k]
+                if jnp.ndim(v) >= 1:
+                    extras[k] = jnp.broadcast_to(jnp.max(v), v.shape)
+                continue
+            v = getattr(self, k, None)
+            if v is not None and jnp.ndim(v) >= 1:
+                kw[k] = jnp.broadcast_to(jnp.max(v), v.shape)
+        return dataclasses.replace(self, extras=extras, **kw)
+
+
+def as_frame(telemetry, *, state=None) -> TelemetryFrame:
+    """Normalize a controller input: a TelemetryFrame passes through (rail
+    observations filled from `state` when the frame has none); a legacy dict
+    goes through `TelemetryFrame.from_dict`."""
+    if isinstance(telemetry, TelemetryFrame):
+        if state is not None and telemetry.v_core is None:
+            return dataclasses.replace(
+                telemetry, v_core=state.v_core, v_hbm=state.v_hbm,
+                v_io=state.v_io)
+        return telemetry
+    return TelemetryFrame.from_dict(telemetry, state=state)
+
+
+def scalar_view(x) -> float:
+    """Array-aware scalar reduction: a scalar metric passes through, a
+    `[n_chips]` metric reports the fleet mean (the same convention
+    `TelemetryLog.append_from` records)."""
+    a = np.asarray(jax.device_get(x), dtype=np.float64)
+    return float(a.mean()) if a.ndim else float(a)
 
 # metrics with first-class StepRecord fields
 _CORE_KEYS = ("grad_error", "t_step_s", "power_w", "energy_step_j")

@@ -12,7 +12,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core.control_plane import HostRailController, InGraphRailController
-from repro.core.policy import POLICIES
+from repro.core.hwspec import FleetSpec
+from repro.core.policy import POLICIES, WorstChipGate
 from repro.core.power_plane import StepProfile
 from repro.models import registry
 from repro.serve.engine import ServeEngine
@@ -28,6 +29,10 @@ def main():
     ap.add_argument("--policy", choices=list(POLICIES), default="phase-aware")
     ap.add_argument("--control-path", choices=("in-graph", "host"),
                     default="in-graph")
+    ap.add_argument("--fleet-chips", type=int, default=0,
+                    help="serve on an [n_chips] fleet plane with per-chip "
+                         "process variation (0 = scalar single-chip)")
+    ap.add_argument("--fleet-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny or True)
@@ -39,16 +44,22 @@ def main():
     n = sum(p.size for p in jax.tree_util.tree_leaves(params))
 
     policy = POLICIES[args.policy]
+    fleet = (FleetSpec.sample(args.fleet_chips, seed=args.fleet_seed)
+             if args.fleet_chips else None)
+    if fleet is not None:
+        # fleet serving: gate every chip's decision on the worst chip
+        policy = WorstChipGate(policy)
     controller = (InGraphRailController(policy)
                   if args.control_path == "in-graph"
-                  else HostRailController(policy))
+                  else HostRailController(policy,
+                                          n_chips=max(args.fleet_chips, 1)))
     engine = ServeEngine(
         cfg, params, max_len=args.prompt_len + args.max_new + 8,
         batch_size=args.batch,
         prefill_profile=StepProfile(2.0 * n * args.batch * args.prompt_len,
                                     2.0 * n, 0.0),
         decode_profile=StepProfile(2.0 * n * args.batch, 2.0 * n, 0.0),
-        controller=controller)
+        controller=controller, fleet=fleet)
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, max_new_tokens=args.max_new)

@@ -5,6 +5,14 @@ Serving is where the paper's "communication-light phases" argument (§I) bites
 hardest: decode is HBM-bound, so the PhaseAware policy undervolts VDD_CORE
 and VDD_IO during decode and restores them for prefill bursts — the serving
 analogue of the transceiver case study.
+
+Fleet serving (`fleet=` constructor arg): the engine drives a `[n_chips]`
+power plane seeded from a `hwspec.FleetSpec` — every decode/prefill step is
+accounted at each chip's own process-varied operating point, and a bare
+policy is wrapped in `WorstChipGate` so no chip undervolts past what the
+worst chip's telemetry allows (serving replicas step together; the fleet is
+only as fast and as safe as its weakest chip). Default is the original
+scalar single-chip behavior.
 """
 
 from __future__ import annotations
@@ -18,7 +26,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.control_plane import as_controller
-from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
+from repro.core.hwspec import FleetSpec
+from repro.core.policy import WorstChipGate
+from repro.core.power_plane import (PowerPlaneState, StepProfile,
+                                    account_and_observe,
+                                    account_fleet_and_observe)
+from repro.core.telemetry import scalar_view
 from repro.models import registry
 
 
@@ -26,8 +39,9 @@ from repro.models import registry
 class ServeStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
-    energy_j: float = 0.0
+    energy_j: float = 0.0          # per-chip (fleet mean) energy
     model_time_s: float = 0.0
+    fleet_energy_j: float = 0.0    # whole-fleet energy (mean x n_chips)
 
 
 class ServeEngine:
@@ -35,17 +49,25 @@ class ServeEngine:
                  batch_size: int,
                  prefill_profile: StepProfile | None = None,
                  decode_profile: StepProfile | None = None,
-                 controller=None, policy=None):
+                 controller=None, policy=None,
+                 fleet: FleetSpec | None = None):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg)
         self.max_len = max_len
         self.batch_size = batch_size
-        self.plane = PowerPlaneState.nominal()
+        self.fleet_spec = fleet
+        self.plane = (PowerPlaneState.from_fleet(fleet) if fleet is not None
+                      else PowerPlaneState.nominal())
         # single actuation path: a RailController (a bare policy is wrapped
-        # into the in-graph controller for back-compat)
+        # into the in-graph controller for back-compat; on a fleet plane a
+        # bare policy is additionally gated on the worst chip's telemetry)
         if controller is not None and policy is not None:
             raise ValueError("pass either controller= or policy=, not both")
+        if (fleet is not None and policy is not None
+                and not isinstance(policy, WorstChipGate)
+                and not hasattr(policy, "control_step")):
+            policy = WorstChipGate(policy)
         self.controller = as_controller(controller if controller is not None
                                         else policy)
         self.prefill_profile = prefill_profile or StepProfile(1e9, 1e9, 0.0)
@@ -58,13 +80,25 @@ class ServeEngine:
             lambda params, toks: self.api.prefill_fn(params, toks, max_len))
             if self.api.prefill_fn else None)
 
+    @property
+    def n_chips(self) -> int:
+        return self.plane.n_chips
+
     def _account(self, profile: StepProfile, n: int = 1):
         for _ in range(n):
-            self.plane, m = account_step(profile, self.plane)
-            self.stats.energy_j += float(m["energy_step_j"])
-            self.stats.model_time_s += float(m["t_step_s"])
+            if self.fleet_spec is not None:
+                self.plane, frame, m = account_fleet_and_observe(
+                    profile, self.plane, self.fleet_spec)
+            else:
+                self.plane, frame, m = account_and_observe(profile, self.plane)
+            # array-aware reductions (TelemetryLog's scalar-view convention):
+            # scalars pass through, [n_chips] metrics report the fleet mean
+            e = scalar_view(m["energy_step_j"])
+            self.stats.energy_j += e
+            self.stats.fleet_energy_j += e * self.n_chips
+            self.stats.model_time_s += scalar_view(m["t_step_s"])
             if self.controller is not None:
-                self.plane = self.controller.control_step(self.plane, m)
+                self.plane = self.controller.control_step(self.plane, frame)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  eos_id: int | None = None) -> np.ndarray:
@@ -100,12 +134,20 @@ class ServeEngine:
 
     def summary(self) -> dict[str, Any]:
         toks = max(self.stats.decode_tokens, 1)
-        return {
+        out = {
             "prefill_tokens": self.stats.prefill_tokens,
             "decode_tokens": self.stats.decode_tokens,
             "energy_j": self.stats.energy_j,
             "model_time_s": self.stats.model_time_s,
             "j_per_decoded_token": self.stats.energy_j / toks,
-            "v_core": float(self.plane.v_core),
-            "v_io": float(self.plane.v_io),
+            # array-aware: fleet planes report the mean operating point
+            "v_core": scalar_view(self.plane.v_core),
+            "v_io": scalar_view(self.plane.v_io),
+            "n_chips": self.n_chips,
         }
+        if self.plane.is_fleet:
+            out["fleet_energy_j"] = self.stats.fleet_energy_j
+            out["v_core_min"] = float(jnp.min(self.plane.v_core))
+            out["v_io_min"] = float(jnp.min(self.plane.v_io))
+            out["comp_level_min"] = int(jnp.min(self.plane.comp_level))
+        return out

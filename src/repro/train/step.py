@@ -3,11 +3,13 @@
 link), AdamW update, and the power plane woven through the step.
 
 Two control paths, mirroring the paper (DESIGN.md §2.2):
-  * in-graph controller: policy.update_jax composed INTO the jitted step
-    (HW path analogue — deterministic, no host round trip);
+  * in-graph controller: observation (TelemetryFrame) → policy.decide →
+    arbitrate composed INTO the jitted step (HW path analogue —
+    deterministic, no host round trip);
   * host controller: the trainer runs a control_plane.HostRailController
     between steps, actuating through the PMBus-simulated fleet bus (SW
-    analogue). Both paths implement control_plane.RailController.
+    analogue — optionally deciding from its own READ_VOUT polling,
+    `decide_from="poll"`). Both paths implement control_plane.RailController.
 """
 
 from __future__ import annotations
@@ -23,8 +25,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core import ecollectives
 from repro.core.control_plane import as_controller
 from repro.core.hwspec import FleetSpec
-from repro.core.power_plane import (PowerPlaneState, StepProfile, account_step,
-                                    account_step_fleet)
+from repro.core.power_plane import (PowerPlaneState, StepProfile,
+                                    account_and_observe,
+                                    account_fleet_and_observe)
 from repro.kernels import ops
 from repro.optim import adamw
 
@@ -141,11 +144,14 @@ def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
                                          step_cfg, params, opt_state,
                                          ef_resid, batch)
 
-        plane, power_metrics = account_step(profile, plane)
-        telemetry = {**power_metrics, "grad_error": grad_error}
+        # observation → decision → arbitration, all in-graph: the typed
+        # EXACT frame is what the controller's policy sees
+        plane, frame, power_metrics = account_and_observe(profile, plane)
+        frame = dataclasses.replace(frame, grad_error=grad_error)
         if controller is not None:
-            plane = controller.control_step(plane, telemetry)
+            plane = controller.control_step(plane, frame)
 
+        telemetry = {**power_metrics, "grad_error": grad_error}
         out_metrics = {"loss": loss, **metrics, **opt_metrics, **telemetry}
         return params, opt_state, plane, ef_resid, out_metrics
 
@@ -182,7 +188,8 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
                                          step_cfg, params, opt_state,
                                          ef_resid, batch)
 
-        plane, power_metrics = account_step_fleet(profile, plane, fs)
+        plane, frame, power_metrics = account_fleet_and_observe(
+            profile, plane, fs)
         key = jax.random.fold_in(jax.random.PRNGKey(fleet_cfg.seed),
                                  plane.step[0])
         k_err, k_straggle = jax.random.split(key)
@@ -205,11 +212,16 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
         t_chip = power_metrics["t_step_s"] * jnp.where(
             straggle, fleet_cfg.straggler_factor, 1.0)
 
+        # the frame is already anchored to the FleetSpec per-chip nominals;
+        # overlay the per-chip measured error + straggler-stretched times
+        frame = dataclasses.replace(
+            frame, grad_error=err,
+            extras={**frame.extras, "t_chip_s": t_chip})
         telemetry = {**power_metrics, "grad_error": err, "t_chip_s": t_chip,
                      "v_nom_core": v_nom_core, "v_nom_hbm": v_nom_hbm,
                      "v_nom_io": v_nom_io}
         if controller is not None:
-            plane = controller.control_step(plane, telemetry)
+            plane = controller.control_step(plane, frame)
 
         # fleet reductions through the Pallas telemetry-reduction hot path:
         # [n_chips, n_fields] -> per-field worst/mean (+ p95 where it gates)

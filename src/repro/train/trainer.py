@@ -23,7 +23,7 @@ from repro.core.hwspec import FleetSpec
 from repro.core.power_plane import PowerPlaneState
 from repro.core.telemetry import TelemetryLog
 from repro.core import ecollectives
-from repro.checkpoint.ckpt import CheckpointManager
+from repro.checkpoint.ckpt import CheckpointManager, remap_plane
 
 
 class SimulatedNodeFailure(RuntimeError):
@@ -46,11 +46,15 @@ class TrainerConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
     async_ckpt: bool = True
     # Host-path (SW analogue) control plane: a RailController, or a bare
-    # Policy (wrapped so update_host runs between steps, decide-only; pass a
-    # HostRailController to also pay PMBus actuation). The in-graph (HW
+    # Policy (wrapped so its decision runs between steps, decide-only; pass a
+    # HostRailController to also pay PMBus actuation — and decide_from="poll"
+    # to close the loop on its own READ_VOUT sampling). The in-graph (HW
     # analogue) path is configured on the step (train.step.StepConfig.policy).
     controller: RailController | Any = None
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    # Fleet provenance: checkpointed alongside the plane so elastic restarts
+    # onto a different fleet size remap per-chip state explicitly.
+    fleet: FleetSpec | None = None
 
     def __post_init__(self):
         self.controller = as_controller(self.controller, host=True)
@@ -80,11 +84,24 @@ class Trainer:
             return False
         step, restored = self.ckpt.restore(self.state)
         self.state.update(restored)
+        self._remap_restored_plane()
         self.start_step = step
         return True
 
+    def _remap_restored_plane(self) -> None:
+        """Elastic fleet restore: when this run's FleetSpec differs in size
+        from the checkpoint's, remap the restored `[n_old]` plane onto the
+        current fleet explicitly (surviving chips keep their per-chip state,
+        joiners start at their own nominal point)."""
+        if self.cfg.fleet is None:
+            return
+        plane = self.state["plane"]
+        if plane.is_fleet and plane.n_chips == self.cfg.fleet.n_chips:
+            return
+        self.state["plane"] = remap_plane(plane, self.cfg.fleet)
+
     def _save(self, step: int):
-        self.ckpt.save(step, self.state)
+        self.ckpt.save(step, self.state, fleet=self.cfg.fleet)
         self.ckpt_writes += 1
 
     # -- fault injection ---------------------------------------------------------
@@ -121,6 +138,7 @@ class Trainer:
                 if latest is not None:
                     s, restored = self.ckpt.restore(self.state)
                     self.state.update(restored)
+                    self._remap_restored_plane()
                     step = s
                 # else: restart from the in-memory state (step unchanged)
         self.ckpt.wait()

@@ -1,0 +1,427 @@
+"""Decision-as-data control API tests (docs/control_api.md):
+
+  * observation — TelemetryFrame construction, provenance/age, dict shim;
+  * decision   — decide()/arbitrate() purity under jit and vmap, RailRequest
+    broadcast/clamp semantics;
+  * back-compat — the `from_dict` shim keeps every shipped policy's
+    trajectory BIT-identical to the pre-redesign dict API on the scalar
+    path, and the deprecated `update_*` shims warn (an *error* for in-repo
+    callers via pytest.ini);
+  * actuation  — HostRailController(decide_from="poll") closes the loop on
+    *sampled* voltages: its trajectory matches the exact-frame loop up to
+    sampling delay + LINEAR16 quantization, with nonzero sample age;
+  * satellites — fleet serve engine (array-aware accounting, worst-chip
+    gating), fleet checkpoint provenance + explicit plane remap.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager, remap_plane
+from repro.core.control_plane import (HostRailController,
+                                      InGraphRailController, arbitrate)
+from repro.core.fleet import FleetPowerManager
+from repro.core.hwspec import V5E, FleetSpec
+from repro.core.policy import (POLICIES, BERBounded, ClosedLoop,
+                               ControlAPIDeprecationWarning, PhaseAware,
+                               RailRequest, StaticNominal, WorstChipGate,
+                               apply_request)
+from repro.core.power_plane import (PowerPlaneState, StepProfile,
+                                    account_and_observe,
+                                    account_fleet_and_observe, account_step)
+from repro.core.telemetry import Provenance, TelemetryFrame, as_frame
+
+PROFILE = StepProfile(flops_per_chip=2e12, hbm_bytes_per_chip=8e9,
+                      ici_bytes_per_chip=4e9, grad_bytes_per_chip=3e9)
+BOUND = 5e-3
+
+
+def _grad_stream(steps=10):
+    """Deterministic grad-error stream crossing the policy bounds both ways."""
+    return [jnp.float32(BOUND * (0.2 if s % 3 else 3.0)) for s in range(steps)]
+
+
+# -- observation ---------------------------------------------------------------
+
+def test_frame_from_dict_roundtrip_and_extras():
+    plane = PowerPlaneState.nominal()
+    telem = {"grad_error": jnp.float32(1e-3), "t_comp_s": jnp.float32(0.5),
+             "custom_metric": jnp.float32(7.0)}
+    frame = TelemetryFrame.from_dict(telem, state=plane)
+    assert frame.provenance is Provenance.EXACT
+    assert float(frame.age_s) == 0.0
+    assert float(frame.grad_error) == pytest.approx(1e-3)
+    # rail observations come from the plane (oracle) on the dict path
+    assert float(frame.v_io) == float(plane.v_io)
+    assert float(frame.extras["custom_metric"]) == 7.0
+    d = frame.to_dict()
+    assert float(d["grad_error"]) == pytest.approx(1e-3)
+    assert float(d["custom_metric"]) == 7.0
+    assert frame.get("custom_metric") is telem["custom_metric"]
+    assert frame.get("v_nom_io", "missing") == "missing"
+
+
+def test_account_and_observe_builds_exact_frame():
+    plane, frame, metrics = account_and_observe(PROFILE,
+                                                PowerPlaneState.nominal())
+    assert frame.provenance is Provenance.EXACT
+    np.testing.assert_array_equal(np.asarray(frame.t_step_s),
+                                  np.asarray(metrics["t_step_s"]))
+    assert float(frame.v_io) == float(plane.v_io)
+    # fleet variant anchors per-chip nominals from the FleetSpec
+    fs = FleetSpec.sample(4, seed=9)
+    fp, ff, _ = account_fleet_and_observe(PROFILE,
+                                          PowerPlaneState.from_fleet(fs), fs)
+    np.testing.assert_allclose(np.asarray(ff.v_nom_io), fs.v_io_nominal)
+    assert np.asarray(ff.v_core).shape == (4,)
+
+
+def test_frame_reduce_worst_broadcasts_fleet_max():
+    err = jnp.asarray([1.0, 5.0, 2.0], jnp.float32)
+    frame = TelemetryFrame(grad_error=err,
+                           extras={"aux": jnp.asarray([0.0, 1.0, 9.0])})
+    red = frame.reduce_worst(("grad_error", "aux"))
+    np.testing.assert_array_equal(np.asarray(red.grad_error), [5.0] * 3)
+    np.testing.assert_array_equal(np.asarray(red.extras["aux"]), [9.0] * 3)
+    # scalar frames reduce to themselves
+    s = TelemetryFrame(grad_error=jnp.float32(3.0)).reduce_worst(("grad_error",))
+    assert float(s.grad_error) == 3.0
+
+
+# -- decision: purity + arbitration --------------------------------------------
+
+def test_decide_arbitrate_pure_under_jit():
+    plane, frame, _ = account_and_observe(PROFILE, PowerPlaneState.nominal())
+    frame = dataclasses.replace(frame, grad_error=jnp.float32(1e-4))
+    for policy in POLICIES.values():
+        eager = arbitrate(plane, policy.decide(plane, frame))
+        jitted = jax.jit(
+            lambda p, f, pol=policy: arbitrate(p, pol.decide(p, f)))(plane, frame)
+        for f in ("v_core", "v_hbm", "v_io", "comp_level"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(jitted, f)), np.asarray(getattr(eager, f)),
+                rtol=1e-7, err_msg=f"{policy.name}.{f}")
+
+
+def test_decide_arbitrate_pure_under_vmap():
+    """vmap of the scalar decide+arbitrate == one elementwise fleet call."""
+    n = 6
+    fs = FleetSpec.sample(n, seed=2)
+    plane, frame, _ = account_fleet_and_observe(
+        PROFILE, PowerPlaneState.from_fleet(fs), fs)
+    frame = dataclasses.replace(frame,
+                                grad_error=jnp.linspace(0, 1e-2, n),
+                                age_s=jnp.zeros((n,), jnp.float32))
+    policy = ClosedLoop()
+    direct = arbitrate(plane, policy.decide(plane, frame))
+    mapped = jax.vmap(lambda p, f: arbitrate(p, policy.decide(p, f)))(
+        plane, frame)
+    np.testing.assert_allclose(np.asarray(mapped.v_io),
+                               np.asarray(direct.v_io), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(mapped.comp_level),
+                                  np.asarray(direct.comp_level))
+
+
+def test_arbitrate_clamps_to_rail_envelopes():
+    plane = PowerPlaneState.nominal()
+    req = RailRequest(v_io=jnp.float32(0.10),       # far below VDD_IO v_min
+                      v_core=jnp.float32(2.00),     # far above VDD_CORE v_max
+                      comp_level=jnp.int32(99),
+                      reason="hostile")
+    out = arbitrate(plane, req)
+    assert float(out.v_io) == pytest.approx(0.65)    # clamped to floor
+    assert float(out.v_core) == pytest.approx(0.99)  # clamped to ceiling
+    assert int(out.comp_level) == 2                  # codec range
+    assert float(out.v_hbm) == float(plane.v_hbm)    # None = untouched
+
+
+def test_rail_request_broadcast_and_per_chip():
+    fleet = PowerPlaneState.fleet(4)
+    # scalar request broadcasts; per-chip array lands per chip
+    out = arbitrate(fleet, RailRequest(v_io=jnp.float32(0.80)))
+    np.testing.assert_allclose(np.asarray(out.v_io), [0.80] * 4)
+    per = jnp.asarray([0.70, 0.75, 0.80, 0.85], jnp.float32)
+    out = arbitrate(fleet, RailRequest(v_io=per))
+    np.testing.assert_allclose(np.asarray(out.v_io), np.asarray(per))
+    # apply_request (legacy-shim semantics) merges raw, no clamp
+    raw = apply_request(fleet, RailRequest(v_io=jnp.float32(0.10)))
+    np.testing.assert_allclose(np.asarray(raw.v_io), [0.10] * 4)
+    assert RailRequest().is_empty()
+
+
+# -- back-compat: bit-identical trajectories + deprecation -------------------
+
+@pytest.mark.parametrize("policy", list(POLICIES.values()),
+                         ids=list(POLICIES))
+def test_from_dict_shim_trajectory_bit_identical(policy):
+    """The deprecated dict API (update_jax shim over from_dict + decide) and
+    the new controller path produce BIT-identical scalar trajectories — no
+    caller of the old API sees any numeric change."""
+    ctrl = InGraphRailController(policy)
+    p_shim = PowerPlaneState.nominal()
+    p_ctrl = PowerPlaneState.nominal()
+    for g in _grad_stream():
+        p_shim, m_shim = account_step(PROFILE, p_shim)
+        p_ctrl, m_ctrl = account_step(PROFILE, p_ctrl)
+        with pytest.warns(ControlAPIDeprecationWarning):
+            p_shim = policy.update_jax(p_shim, {**m_shim, "grad_error": g})
+        p_ctrl = ctrl.control_step(p_ctrl, {**m_ctrl, "grad_error": g})
+        for f in ("v_core", "v_hbm", "v_io", "comp_level"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(p_shim, f)),
+                np.asarray(getattr(p_ctrl, f)), err_msg=f"{policy.name}.{f}")
+
+
+def test_update_fleet_shim_matches_controller():
+    n = 5
+    fleet = PowerPlaneState.fleet(n)
+    err = jnp.linspace(0, 1e-2, n)
+    with pytest.warns(ControlAPIDeprecationWarning):
+        shim = BERBounded().update_fleet(fleet, {"grad_error": err})
+    ctrl = InGraphRailController(BERBounded()).control_step(
+        fleet, {"grad_error": err})
+    np.testing.assert_array_equal(np.asarray(shim.v_io),
+                                  np.asarray(ctrl.v_io))
+    np.testing.assert_array_equal(np.asarray(shim.comp_level),
+                                  np.asarray(ctrl.comp_level))
+
+
+def test_deprecated_update_api_is_error_for_in_repo_callers():
+    """pytest.ini promotes ControlAPIDeprecationWarning to an error: new
+    in-repo code cannot quietly regress onto the dict interface."""
+    plane = PowerPlaneState.nominal()
+    with pytest.raises(ControlAPIDeprecationWarning):
+        StaticNominal().update_jax(plane, {})
+    with pytest.raises(ControlAPIDeprecationWarning):
+        StaticNominal().update_host(plane, {})
+    with pytest.raises(ControlAPIDeprecationWarning):
+        WorstChipGate(BERBounded()).update_fleet(
+            PowerPlaneState.fleet(2), {"grad_error": jnp.zeros((2,))})
+
+
+# -- actuation: poll-driven closed-loop host control ---------------------------
+
+def _drive(hc, rounds=8, dt=5e-3):
+    """One closed loop: train-time passes (polls fire), then a control round
+    on a constant under-bound error stream (policy keeps undervolting)."""
+    plane = PowerPlaneState.nominal()
+    traj = []
+    for _ in range(rounds):
+        hc.fleet.idle(dt)
+        plane = hc.control_step(plane, {"grad_error": jnp.float32(1e-4)})
+        traj.append(float(plane.v_io))
+    return plane, np.asarray(traj)
+
+
+def test_poll_driven_host_control_closes_loop_on_sampled_voltages():
+    """ROADMAP item 3 / acceptance: decide_from="poll" produces a closed-loop
+    trajectory on PMBus-*sampled* voltages — same walk as the exact-frame
+    loop up to sampling delay + LINEAR16 quantization, with nonzero
+    per-decision sample age."""
+    exact = HostRailController(ClosedLoop(), settle_band_frac=0.001)
+    polled = HostRailController(ClosedLoop(), settle_band_frac=0.001,
+                                decide_from="poll")
+    polled.enable_polling(interval_s=1e-3)
+
+    _, traj_exact = _drive(exact)
+    _, traj_poll = _drive(polled)
+
+    # the loop genuinely moved, on both observation sources
+    assert traj_exact[-1] < traj_exact[0]
+    assert traj_poll[-1] < traj_poll[0]
+    # ...and they differ only by sampling delay/quantization: at most one
+    # control step of lag plus the LINEAR16 LSB
+    np.testing.assert_allclose(traj_poll, traj_exact, atol=0.007)
+
+    # the polled decisions really ran on sampled telemetry with nonzero age
+    assert polled.last_frame is not None
+    assert polled.last_frame.provenance is Provenance.POLLED
+    assert float(polled.last_frame.age_s) > 0.0
+    st = polled.stats()
+    assert st.poll_decisions == st.decisions > 0
+    assert st.polls > 0
+    # the exact-frame controller never decided from a poll
+    assert exact.stats().poll_decisions == 0
+    assert exact.last_frame.provenance is Provenance.EXACT
+
+
+def test_poll_mode_rejects_legacy_policies():
+    """decide_from="poll" exists to close the loop on sampled voltages; a
+    legacy update_* policy reads the oracle state and would silently ignore
+    the polled frame — rejected at construction, not mis-reported."""
+    from repro.core.policy import Policy
+
+    class LegacyOnly(Policy):
+        name = "legacy-only"
+
+        def update_jax(self, state, telemetry):
+            return state
+
+    with pytest.raises(ValueError, match="decide"):
+        HostRailController(LegacyOnly(), decide_from="poll")
+    # actuate-only (policy=None) and API-native policies are fine
+    HostRailController(None, decide_from="poll")
+    HostRailController(ClosedLoop(), decide_from="poll")
+
+
+def test_poll_frame_nan_fallback_before_first_sample():
+    """Chips never sampled fall back to the oracle plane value at age 0 —
+    a poll-driven controller is safe to start before its first poll."""
+    hc = HostRailController(ClosedLoop(), settle_band_frac=0.001,
+                            decide_from="poll")
+    # no polling enabled at all: poll_frame is all-NaN
+    raw = hc.fleet.poll_frame()
+    assert np.isnan(np.asarray(raw.v_io)).all()
+    plane = PowerPlaneState.nominal()
+    frame = hc.observed_frame(plane, {"grad_error": jnp.float32(0.0)})
+    assert float(frame.v_io) == float(plane.v_io)
+    assert float(frame.age_s) == 0.0
+    out = hc.control_step(plane, {"grad_error": jnp.float32(1e-4)})
+    assert float(out.v_io) < float(plane.v_io)   # loop still walks down
+
+
+def test_poll_observation_values_and_ages():
+    fpm = FleetPowerManager(2)
+    fpm.start_polling(interval_s=1e-3)
+    fpm.apply_setpoints([{2: 0.85}, {2: 0.90}])
+    fpm.idle(5e-3)
+    vals, ages = fpm.poll_observation(lanes=[2])
+    np.testing.assert_allclose(vals[:, 0], [0.85, 0.90], atol=5e-3)
+    assert (ages[:, 0] >= 0).all() and np.isfinite(ages).all()
+    frame = fpm.poll_frame()
+    np.testing.assert_allclose(np.asarray(frame.v_io), vals[:, 0])
+    assert np.asarray(frame.age_s).shape == (2,)
+
+
+# -- satellites: fleet serve engine --------------------------------------------
+
+def _tiny_engine(**kw):
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve.engine import ServeEngine
+    cfg = get_config("minicpm_2b", tiny=True)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, ServeEngine(cfg, params, max_len=24, batch_size=2,
+                            prefill_profile=PROFILE, decode_profile=PROFILE,
+                            **kw)
+
+
+def test_serve_engine_fleet_plane_and_worst_chip_gate():
+    """Fleet serving: [n_chips] plane threads through the decode loop, a
+    bare policy is worst-chip gated, and accounting/summary are array-aware
+    (the pre-redesign float() coercions raised on fleet planes)."""
+    fs = FleetSpec.sample(4, seed=11)
+    cfg, eng = _tiny_engine(policy=PhaseAware(), fleet=fs)
+    assert isinstance(eng.controller.policy, WorstChipGate)
+    assert eng.n_chips == 4
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 4)).astype(np.int32)
+    out = eng.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    s = eng.summary()
+    assert s["n_chips"] == 4
+    assert s["energy_j"] > 0 and np.isfinite(s["energy_j"])
+    assert s["fleet_energy_j"] == pytest.approx(4 * s["energy_j"])
+    assert s["v_io_min"] <= s["v_io"]
+    # per-chip decode accounting really diverged the operating points
+    assert np.asarray(eng.plane.v_core).shape == (4,)
+
+
+def test_serve_engine_scalar_default_unchanged():
+    cfg, eng = _tiny_engine(policy=PhaseAware())
+    assert eng.n_chips == 1
+    prompts = np.zeros((2, 4), np.int32)
+    out = eng.generate(prompts, max_new_tokens=3)
+    assert out.shape == (2, 3)
+    s = eng.summary()
+    assert s["n_chips"] == 1 and "fleet_energy_j" not in s
+
+
+# -- satellites: fleet checkpoint provenance + explicit remap ------------------
+
+def test_checkpoint_fleet_roundtrip_and_remap(tmp_path):
+    fs = FleetSpec.sample(4, seed=21)
+    plane = dataclasses.replace(
+        PowerPlaneState.from_fleet(fs),
+        v_io=jnp.linspace(0.80, 0.95, 4, dtype=jnp.float32),
+        energy_j=jnp.arange(4, dtype=jnp.float32),
+        step=jnp.full((4,), 7, jnp.int32))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, {"plane": plane}, fleet=fs)
+
+    restored_fs = mgr.restore_fleet()
+    assert restored_fs is not None
+    assert restored_fs.seed == fs.seed and restored_fs.n_chips == 4
+    np.testing.assert_array_equal(restored_fs.v_io_nominal, fs.v_io_nominal)
+    assert restored_fs.base == fs.base   # ChipSpec base round-trips too
+
+    _, out = mgr.restore({"plane": plane})
+    # grow 4 -> 6: survivors keep state, joiners start at their own nominal
+    target = FleetSpec.sample(6, seed=33)
+    grown = remap_plane(out["plane"], target)
+    assert grown.n_chips == 6
+    np.testing.assert_allclose(np.asarray(grown.v_io)[:4],
+                               np.linspace(0.80, 0.95, 4), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grown.v_io)[4:],
+                               target.v_io_nominal[4:], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grown.energy_j)[:4], [0, 1, 2, 3])
+    np.testing.assert_allclose(np.asarray(grown.energy_j)[4:], [0, 0])
+    assert np.asarray(grown.step).tolist() == [7] * 6  # fleet steps together
+    # shrink 4 -> 2: explicit truncation, survivors keep state
+    shrunk = remap_plane(out["plane"], FleetSpec.sample(2, seed=33))
+    assert shrunk.n_chips == 2
+    np.testing.assert_allclose(np.asarray(shrunk.v_io),
+                               np.linspace(0.80, 0.95, 4)[:2], rtol=1e-6)
+
+
+def test_checkpoint_without_fleet_has_no_fleet_meta(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"plane": PowerPlaneState.nominal()})
+    assert mgr.restore_fleet() is None
+
+
+def test_checkpoint_fleet_preserves_custom_chip_spec(tmp_path):
+    """A fleet sampled over a non-default ChipSpec must restore with that
+    base (power constants/nominals), not silently fall back to V5E."""
+    custom = dataclasses.replace(V5E, name="tpu-custom", p_hbm_w=45.0,
+                                 nominal_v_io=0.93)
+    fs = FleetSpec.sample(3, seed=4, spec=custom)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, {"plane": PowerPlaneState.from_fleet(fs)}, fleet=fs)
+    restored = mgr.restore_fleet()
+    assert restored.base == custom
+    assert restored.base.p_hbm_w == 45.0
+
+
+def test_trainer_remaps_restored_plane_onto_new_fleet(tmp_path):
+    """Elastic restart onto a different fleet size: the trainer restores the
+    old [n_old] plane and remaps it onto its own FleetSpec explicitly."""
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    fs_old = FleetSpec.sample(3, seed=1)
+    plane_old = dataclasses.replace(
+        PowerPlaneState.from_fleet(fs_old),
+        v_io=jnp.asarray([0.81, 0.82, 0.83], jnp.float32))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, {"plane": plane_old, "params": {"w": jnp.zeros((2,))},
+                 "opt": {"step": jnp.int32(5)}, "ef": {}}, fleet=fs_old)
+
+    fs_new = FleetSpec.sample(5, seed=2)
+    cfg = TrainerConfig(total_steps=10, ckpt_dir=str(tmp_path),
+                        fleet=fs_new)
+    tr = Trainer(train_step=None, data=None, cfg=cfg,
+                 init_state={"plane": PowerPlaneState.from_fleet(fs_new),
+                             "params": {"w": jnp.zeros((2,))},
+                             "opt": {"step": jnp.int32(0)}, "ef": {}})
+    assert tr.maybe_restore()
+    plane = tr.state["plane"]
+    assert plane.n_chips == 5
+    np.testing.assert_allclose(np.asarray(plane.v_io)[:3],
+                               [0.81, 0.82, 0.83], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(plane.v_io)[3:],
+                               fs_new.v_io_nominal[3:], rtol=1e-6)

@@ -70,24 +70,77 @@ def test_as_controller_normalizes():
     assert isinstance(hc, RailController)
 
 
-def test_trainer_config_bare_policy_runs_update_host():
-    """A bare Policy in the trainer's host-path slot must run update_host
-    between steps (the SW-path hook), not update_jax."""
+def test_trainer_config_bare_policy_decides_between_steps():
+    """A bare Policy in the trainer's host-path slot runs its decision
+    between steps (the SW-path hook) through the decide/arbitrate API."""
     from repro.core.control_plane import HostDecisionController
     from repro.train.trainer import TrainerConfig
 
     class Marking(StaticNominal):
-        host_calls = 0
+        decide_calls = 0
 
-        def update_host(self, state, telemetry):
-            Marking.host_calls += 1
-            return super().update_host(state, telemetry)
+        def decide(self, state, frame):
+            Marking.decide_calls += 1
+            return super().decide(state, frame)
 
     cfg = TrainerConfig(total_steps=1, controller=Marking())
     assert isinstance(cfg.controller, HostDecisionController)
     cfg.controller.control_step(PowerPlaneState.nominal(), {})
-    assert Marking.host_calls == 1
+    assert Marking.decide_calls == 1
     assert cfg.controller.stats().decisions == 1
+
+
+def test_legacy_update_policy_still_runs_through_controllers():
+    """A pre-redesign policy (state-mutating update_* methods, no decide())
+    keeps working behind every controller: the host path routes through
+    update_host, the in-graph path through update_jax."""
+    from repro.core.control_plane import HostDecisionController
+    from repro.core.policy import Policy
+
+    class Legacy(Policy):
+        name = "legacy"
+        jax_calls = 0
+        host_calls = 0
+
+        def update_jax(self, state, telemetry):
+            Legacy.jax_calls += 1
+            return dataclasses.replace(state, v_io=jnp.float32(0.85))
+
+        def update_host(self, state, telemetry):
+            Legacy.host_calls += 1
+            return dataclasses.replace(state, v_io=jnp.float32(0.84))
+
+    plane = PowerPlaneState.nominal()
+    out = HostDecisionController(Legacy()).control_step(plane, {})
+    assert Legacy.host_calls == 1 and float(out.v_io) == pytest.approx(0.84)
+    out = InGraphRailController(Legacy()).control_step(plane, {})
+    assert Legacy.jax_calls == 1 and float(out.v_io) == pytest.approx(0.85)
+
+
+def test_legacy_update_jax_only_policy_keeps_old_base_defaults():
+    """A pre-redesign policy overriding ONLY update_jax relied on the old
+    base-class defaults (update_host -> update_jax, update_fleet ->
+    vmap(update_jax)); the deprecated shims must preserve that, on the host
+    path and on fleet planes alike."""
+    from repro.core.control_plane import HostDecisionController
+    from repro.core.policy import Policy
+
+    class JaxOnly(Policy):
+        name = "jax-only"
+
+        def update_jax(self, state, telemetry):
+            return dataclasses.replace(state, v_io=state.v_io - 0.01)
+
+    plane = PowerPlaneState.nominal()
+    # the base-class shims fire the deprecation warning on the way through
+    with pytest.warns(DeprecationWarning):
+        out = HostDecisionController(JaxOnly()).control_step(plane, {})
+    assert float(out.v_io) == pytest.approx(float(plane.v_io) - 0.01)
+    fleet = PowerPlaneState.fleet(3)
+    with pytest.warns(DeprecationWarning):
+        out = InGraphRailController(JaxOnly()).control_step(fleet, {})
+    np.testing.assert_allclose(np.asarray(out.v_io),
+                               np.asarray(fleet.v_io) - 0.01, rtol=1e-6)
 
 
 # -- fleet vectorization -------------------------------------------------------
@@ -116,14 +169,17 @@ def test_batched_account_step_matches_scalar_loop():
     assert np.all(np.asarray(fleet2.step) == 1)
 
 
-def test_fleet_policy_vmap_matches_scalar_loop():
+def test_fleet_policy_matches_scalar_loop():
+    """One elementwise decide() on a [n_chips] frame == the per-chip scalar
+    decisions (the fleet path is the scalar path, vectorized)."""
+    ctrl = InGraphRailController(PhaseAware())
     fleet = _varied_fleet(8)
     _, metrics = account_step_fleet(PROFILE, fleet)
     telem = {**metrics, "grad_error": jnp.linspace(0, 1e-2, 8)}
-    out = PhaseAware().update_fleet(fleet, telem)
+    out = ctrl.control_step(fleet, telem)
     for i in range(8):
         chip_t = {k: v[i] for k, v in telem.items()}
-        chip_out = PhaseAware().update_jax(fleet.chip(i), chip_t)
+        chip_out = ctrl.control_step(fleet.chip(i), chip_t)
         np.testing.assert_allclose(np.asarray(out.v_core)[i],
                                    float(chip_out.v_core), rtol=1e-6)
         np.testing.assert_allclose(np.asarray(out.v_io)[i],
@@ -137,10 +193,12 @@ def test_worst_chip_gate_reduces_over_fleet():
         PowerPlaneState.fleet(n),
         comp_level=jnp.full((n,), 2, jnp.int32))   # everyone compressed
     err = jnp.zeros((n,)).at[3].set(1.0)           # chip 3 is over the bound
-    gated = WorstChipGate(BERBounded()).update_fleet(fleet, {"grad_error": err})
+    gated = InGraphRailController(WorstChipGate(BERBounded())).control_step(
+        fleet, {"grad_error": err})
     assert np.all(np.asarray(gated.comp_level) == 1)   # ALL chips retreat
     # per-chip policy (no gate) would only retreat chip 3
-    solo = BERBounded().update_fleet(fleet, {"grad_error": err})
+    solo = InGraphRailController(BERBounded()).control_step(
+        fleet, {"grad_error": err})
     assert np.asarray(solo.comp_level)[3] == 1
     assert np.all(np.delete(np.asarray(solo.comp_level), 3) == 2)
 
