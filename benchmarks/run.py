@@ -22,6 +22,9 @@ MODULES = [
     "benchmarks.power_reduction",       # Fig 16 / Table XII
     "benchmarks.ecollectives_frontier",  # beyond-paper (DESIGN.md §2.2)
     "benchmarks.fleet_frontier",        # beyond-paper: fleet size x policy
+    # learned-vs-static safe-operating-region comparison (docs/sor.md):
+    # per-chip recovered headroom below the shared static envelope
+    "benchmarks.fleet_frontier:run_learned",
     "benchmarks.roofline_table",        # deliverable (g)
 ]
 
@@ -31,8 +34,10 @@ def main() -> None:
     failures = 0
     for name in MODULES:
         try:
-            mod = importlib.import_module(name)
-            rows = mod.run()
+            # "module" runs module.run(); "module:fn" runs module.fn()
+            mod_name, _, fn_name = name.partition(":")
+            mod = importlib.import_module(mod_name)
+            rows = getattr(mod, fn_name or "run")()
             all_rows.extend(rows)
         except Exception:
             failures += 1

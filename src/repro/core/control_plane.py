@@ -62,20 +62,33 @@ _LANE_FIELDS = {"VDD_CORE": "v_core", "VDD_HBM": "v_hbm", "VDD_IO": "v_io"}
 # ---------------------------------------------------------------------------
 
 def arbitrate(plane: PowerPlaneState, request: RailRequest,
-              rail_map: RailMap = TPU_V5E_RAIL_MAP) -> PowerPlaneState:
+              rail_map: RailMap = TPU_V5E_RAIL_MAP,
+              envelopes: dict | None = None) -> PowerPlaneState:
     """Merge a `RailRequest` into the plane state under the per-rail safety
     envelopes: None fields keep the current value, scalar fields broadcast
     over a `[n_chips]` fleet, voltages clamp into [v_min, v_max] of their
     rail, compression levels clamp into the codec range. Pure jnp —
     identical under jit/vmap and on the host. The None-skip/broadcast merge
     itself is `policy.apply_request` (one implementation); arbitration adds
-    only the clamping."""
+    only the clamping.
+
+    `envelopes` optionally maps rail names to learned per-chip
+    `sor.SafeEnvelope`s: a rail with an envelope clamps into
+    [env.floor(v_min), env.ceil(v_max)] instead of the one shared static
+    pair — weak chips get a *tighter* floor than the platform constant,
+    strong chips a confidence-gated extension below it (bounded by the
+    envelope's `max_extension_v`). At zero confidence the blend is bit-exact
+    the static envelope, so cold start arbitrates exactly as before."""
     def clamp(want, name):
         if want is None:
             return None
         r = rail_map.by_name(name)
-        return jnp.clip(jnp.asarray(want, jnp.float32),
-                        jnp.float32(r.v_min), jnp.float32(r.v_max))
+        env = envelopes.get(name) if envelopes else None
+        if env is None:
+            lo, hi = jnp.float32(r.v_min), jnp.float32(r.v_max)
+        else:
+            lo, hi = env.floor(r.v_min), env.ceil(r.v_max)
+        return jnp.clip(jnp.asarray(want, jnp.float32), lo, hi)
 
     comp = request.comp_level
     if comp is not None:
@@ -90,6 +103,25 @@ def arbitrate(plane: PowerPlaneState, request: RailRequest,
     return apply_request(plane, clamped)
 
 
+def worst_chip_pinned(plane: PowerPlaneState, request: RailRequest | None,
+                      rail_map: RailMap = TPU_V5E_RAIL_MAP,
+                      envelope: Any = None, atol: float = 1e-4) -> bool:
+    """Host-side: is the fleet's worst chip pinned at its VDD_IO envelope
+    floor — i.e. did the latest decision *want* a voltage at/below the floor
+    arbitration holds it to? A pinned worst chip means the fleet has no
+    safe headroom left; serve-side admission control sheds load on this
+    signal rather than letting the envelope absorb unbounded demand."""
+    if request is None or request.v_io is None:
+        return False
+    r = rail_map.by_name("VDD_IO")
+    floor = (envelope.floor(r.v_min) if envelope is not None
+             else jnp.float32(r.v_min))
+    want = jnp.asarray(request.v_io, jnp.float32)
+    held = jnp.asarray(plane.v_io, jnp.float32)
+    pinned = (want <= floor + atol) & (held <= floor + atol)
+    return bool(np.any(np.asarray(jax.device_get(pinned))))
+
+
 def _has_decide(policy: Any) -> bool:
     """True when the policy implements the decision-as-data API (its own
     decide(), not the abstract base)."""
@@ -97,20 +129,59 @@ def _has_decide(policy: Any) -> bool:
     return fn is not None and fn is not Policy.decide
 
 
+def validate_in_graph_sor(cfg: Any) -> None:
+    """In-graph SOR has no bus: the only observations it can learn from are
+    the frames the decision consumes, so `ingest="polled"` (the host
+    controller's READ_VOUT path) would be silently meaningless — reject it
+    up front instead of oracle-training a 'polled-only' config."""
+    if cfg is not None and cfg.ingest != "frames":
+        raise ValueError(
+            "in-graph SOR learns from the frames the decision consumes; "
+            "use SorConfig(ingest='frames') (ingest='polled' is the "
+            "HostRailController READ_VOUT path)")
+
+
+def _concrete_or_none(tree):
+    """`tree` if every leaf is a concrete array, else None. Controllers use
+    this to record their latest decision (`last_request`/`last_envelope`)
+    only on eager paths — inside a jitted step the values are tracers, and
+    storing those would leak them (and go stale on cache hits anyway)."""
+    if tree is None:
+        return None
+    if any(isinstance(leaf, jax.core.Tracer)
+           for leaf in jax.tree_util.tree_leaves(tree)):
+        return None
+    return tree
+
+
 def _run_policy(policy: Any, plane: PowerPlaneState, frame: TelemetryFrame,
-                telemetry: Any, rail_map: RailMap, *,
-                host: bool) -> PowerPlaneState:
+                telemetry: Any, rail_map: RailMap, *, host: bool,
+                envelope: Any = None
+                ) -> tuple[PowerPlaneState, RailRequest | None]:
     """decide() + arbitrate() for API-native policies; the pre-redesign
     state-mutating `update_*` methods for legacy policies that never defined
-    decide() (kept working, unclamped, exactly as before)."""
+    decide() (kept working, unclamped, exactly as before). Returns
+    (arbitrated plane, the pre-arbitration request) — the request is None on
+    the legacy path, which never speaks decision-as-data.
+
+    `envelope` is a learned VDD_IO `sor.SafeEnvelope`: it warm-starts the
+    decision (policy.decide_env) and tightens/extends the arbitration clamp
+    for that rail, in one place for both controllers."""
     if _has_decide(policy):
-        return arbitrate(plane, policy.decide(plane, frame), rail_map)
+        if envelope is not None:
+            request = policy.decide_env(plane, frame, envelope)
+            arbitrated = arbitrate(plane, request, rail_map,
+                                   envelopes={"VDD_IO": envelope})
+        else:
+            request = policy.decide(plane, frame)
+            arbitrated = arbitrate(plane, request, rail_map)
+        return arbitrated, request
     telem = telemetry if isinstance(telemetry, dict) else frame.to_dict()
     if jnp.ndim(plane.v_core) >= 1:
-        return policy.update_fleet(plane, telem)
+        return policy.update_fleet(plane, telem), None
     if host:
-        return policy.update_host(plane, telem)
-    return policy.update_jax(plane, telem)
+        return policy.update_host(plane, telem), None
+    return policy.update_jax(plane, telem), None
 
 
 @dataclasses.dataclass
@@ -168,21 +239,62 @@ class InGraphRailController:
     Actuation is the identity: in the HW path the arbitrated operating point
     is applied deterministically before the next step, with no bus
     transaction on the modelled timeline (its cost is pinned separately by
-    the Table VII/IX overhead benchmarks)."""
+    the Table VII/IX overhead benchmarks).
+
+    With `sor=SorConfig(...)` the controller learns per-chip safe operating
+    regions *inside the graph*: the caller threads a functional `SorState`
+    (init_sor) through its scan and calls `control_step_sor`, which pushes
+    the frame into the history, refreshes the frontier estimate on the
+    configured cadence, and runs the envelope-warm-started decision +
+    envelope-clamped arbitration — all pure jnp."""
 
     def __init__(self, policy: Any, name: str | None = None,
-                 rail_map: RailMap = TPU_V5E_RAIL_MAP):
+                 rail_map: RailMap = TPU_V5E_RAIL_MAP,
+                 sor: "Any | None" = None):
         if policy is None:
             raise ValueError("InGraphRailController needs a policy")
+        validate_in_graph_sor(sor)
         self.policy = policy
         self.rail_map = rail_map
+        self.sor = sor
         self.name = name or f"in-graph[{getattr(policy, 'name', 'policy')}]"
+        self.last_request: RailRequest | None = None
+        self.last_envelope: Any = None
 
     def control_step(self, plane: PowerPlaneState,
                      telemetry: Telemetry) -> PowerPlaneState:
         frame = as_frame(telemetry, state=plane)
-        return _run_policy(self.policy, plane, frame, telemetry,
-                           self.rail_map, host=False)
+        plane, request = _run_policy(
+            self.policy, plane, frame, telemetry, self.rail_map, host=False)
+        self.last_request = _concrete_or_none(request)
+        return plane
+
+    # -- learned safe-operating-region path -----------------------------------
+    def init_sor(self, n_chips: int | None = None):
+        """Fresh functional SOR state for a `control_step_sor` loop."""
+        from repro.core import sor as _sor
+        if self.sor is None:
+            raise ValueError("construct the controller with sor=SorConfig() "
+                             "before init_sor()")
+        return _sor.init_state(self.sor, n_chips)
+
+    def control_step_sor(self, plane: PowerPlaneState, telemetry: Telemetry,
+                         sor_state):
+        """One SOR-aware control round: observe -> refresh-on-cadence ->
+        envelope-driven decide + arbitrate. Returns (plane', sor_state').
+        Pure jnp — thread `sor_state` through the caller's scan carry."""
+        from repro.core import sor as _sor
+        if self.sor is None:
+            raise ValueError("control_step_sor needs sor=SorConfig()")
+        frame = as_frame(telemetry, state=plane)
+        sor_state = _sor.observe(sor_state, frame, self.sor)
+        env = _sor.safe_envelope(sor_state.estimate, self.sor)
+        plane, request = _run_policy(
+            self.policy, plane, frame, telemetry, self.rail_map, host=False,
+            envelope=env)
+        self.last_request = _concrete_or_none(request)
+        self.last_envelope = _concrete_or_none(env)
+        return plane, sor_state
 
     def stats(self) -> ControlPlaneStats:
         # decisions happen inside the compiled step; host-side cost is zero
@@ -206,13 +318,16 @@ class HostDecisionController:
         self.rail_map = rail_map
         self.name = f"host-decide[{getattr(policy, 'name', 'policy')}]"
         self.decisions = 0
+        self.last_request: RailRequest | None = None
 
     def control_step(self, plane: PowerPlaneState,
                      telemetry: Telemetry) -> PowerPlaneState:
         self.decisions += 1
         frame = as_frame(telemetry, state=plane)
-        return _run_policy(self.policy, plane, frame, telemetry,
-                           self.rail_map, host=True)
+        plane, request = _run_policy(
+            self.policy, plane, frame, telemetry, self.rail_map, host=True)
+        self.last_request = _concrete_or_none(request)
+        return plane
 
     def stats(self) -> ControlPlaneStats:
         return ControlPlaneStats(decisions=self.decisions)
@@ -250,6 +365,7 @@ class HostRailController:
         seed: int = 0,
         decide_from: str = "telemetry",
         rail_map: RailMap = TPU_V5E_RAIL_MAP,
+        sor: "Any | None" = None,
     ):
         if decide_from not in ("telemetry", "poll"):
             raise ValueError(f"decide_from must be 'telemetry' or 'poll', "
@@ -276,17 +392,27 @@ class HostRailController:
         self.poll_decisions = 0
         self.last_report = None   # FleetActuationReport of the latest round
         self.last_frame: TelemetryFrame | None = None  # latest decision input
+        self.last_request: RailRequest | None = None   # latest decision output
+        self.last_envelope: Any = None                 # latest SOR envelope
+        # learned safe-operating-region state (core/sor.py): lazily sized on
+        # the first decide (scalar vs [n_chips] follows the plane)
+        self.sor = sor
+        self.sor_state = None
 
     # -- observe --------------------------------------------------------------
     def observed_frame(self, plane: PowerPlaneState,
-                       telemetry: Telemetry | None = None) -> TelemetryFrame:
+                       telemetry: Telemetry | None = None,
+                       sampled: TelemetryFrame | None = None
+                       ) -> TelemetryFrame:
         """POLLED TelemetryFrame: the rail voltages this controller's polling
         loop last *sampled* (LINEAR16-quantized READ_VOUT values, with their
         fleet-clock staleness in `age_s`), merged over the caller-supplied
         non-electrical measurements. Lanes never polled fall back to the
-        plane value at age 0."""
+        plane value at age 0. `sampled` optionally reuses a `poll_frame`
+        the caller already took this round."""
         base = as_frame(telemetry if telemetry is not None else {})
-        sampled = self.fleet.poll_frame()
+        if sampled is None:
+            sampled = self.fleet.poll_frame()
         batched = jnp.ndim(plane.v_core) >= 1
 
         def pick(field):
@@ -307,6 +433,42 @@ class HostRailController:
             age_s=jnp.asarray(age if batched else age[0]),
             provenance=Provenance.POLLED)
 
+    # -- learn ----------------------------------------------------------------
+    def _sor_observe(self, plane: PowerPlaneState, frame: TelemetryFrame,
+                     sampled: TelemetryFrame | None = None) -> Any:
+        """Feed the SOR learner one observation and return the current
+        envelope. With `ingest="polled"` (default) the history ingests the
+        *raw* `FleetPowerManager.poll_frame` samples — NaN where a lane was
+        never sampled, so chips with no real READ_VOUT telemetry record
+        nothing and the envelope stays bit-exactly static (cold-start pin);
+        `ingest="frames"` learns from whatever frame the decision consumed
+        (EXACT oracle values included). `sampled` reuses a poll sweep the
+        caller already took this round instead of sweeping the bus twice."""
+        from repro.core import sor as _sor
+        batched = jnp.ndim(plane.v_core) >= 1
+        if self.sor_state is None:
+            self.sor_state = _sor.init_state(
+                self.sor, plane.v_core.shape[0] if batched else None)
+        if self.sor.ingest == "polled":
+            raw = sampled if sampled is not None else self.fleet.poll_frame()
+            sample = dataclasses.replace(raw, grad_error=frame.grad_error)
+            if not batched:
+                sample = dataclasses.replace(
+                    sample, v_core=sample.v_core[0], v_hbm=sample.v_hbm[0],
+                    v_io=sample.v_io[0], age_s=sample.age_s[0])
+        else:
+            sample = frame
+        self.sor_state = _sor.observe(self.sor_state, sample, self.sor)
+        return _sor.safe_envelope(self.sor_state.estimate, self.sor)
+
+    def sor_summary(self) -> dict | None:
+        """Host-side view of the learned safe operating regions (None until
+        the first decision under sor=SorConfig)."""
+        from repro.core import sor as _sor
+        if self.sor is None or self.sor_state is None:
+            return None
+        return _sor.summary(self.sor_state.estimate, self.sor)
+
     # -- decide ---------------------------------------------------------------
     def decide(self, plane: PowerPlaneState,
                telemetry: Telemetry) -> PowerPlaneState:
@@ -314,14 +476,22 @@ class HostRailController:
         arbitration, returning the target state the bus would be asked for."""
         if self.policy is None:
             return plane
+        sampled = None
         if self.decide_from == "poll":
-            frame = self.observed_frame(plane, telemetry)
+            sampled = self.fleet.poll_frame()   # ONE bus sweep per round
+            frame = self.observed_frame(plane, telemetry, sampled=sampled)
             self.poll_decisions += 1
         else:
             frame = as_frame(telemetry, state=plane)
         self.last_frame = frame
-        return _run_policy(self.policy, plane, frame, telemetry,
-                           self.rail_map, host=True)
+        env = (self._sor_observe(plane, frame, sampled=sampled)
+               if self.sor is not None else None)
+        plane, request = _run_policy(
+            self.policy, plane, frame, telemetry, self.rail_map, host=True,
+            envelope=env)
+        self.last_request = _concrete_or_none(request)
+        self.last_envelope = _concrete_or_none(env)
+        return plane
 
     # -- actuate --------------------------------------------------------------
     def actuate(self, plane: PowerPlaneState) -> PowerPlaneState:

@@ -346,13 +346,19 @@ class FleetPowerManager:
                     ages[s.board_id, j] = self.clock.age(t_done)
         return vals, ages
 
-    def poll_frame(self) -> "object":
+    def poll_frame(self, *, grad_error=None) -> "object":
         """The latest polled observation as a typed `TelemetryFrame`
         (Provenance.POLLED): per-board sampled rail voltages keyed by the
         rail map's VDD_CORE/VDD_HBM/VDD_IO names, `age_s` = each board's
         *stalest* sampled lane (a decision is only as fresh as its oldest
         input). NaN where a lane was never polled — the consumer decides the
-        fallback (HostRailController uses the oracle plane value at age 0)."""
+        fallback (HostRailController uses the oracle plane value at age 0;
+        the SOR learner records the chip as having no sample).
+
+        `grad_error` optionally merges the caller's measured-error telemetry
+        (the one non-electrical input the BER-frontier fit needs) onto the
+        sampled frame — this is how `poll_frame` feeds `telemetry.
+        FrameHistory` without pretending the error came off the bus."""
         from repro.core.telemetry import Provenance, TelemetryFrame
         fields = {"VDD_CORE": "v_core", "VDD_HBM": "v_hbm", "VDD_IO": "v_io"}
         lanes, names = [], []
@@ -363,6 +369,8 @@ class FleetPowerManager:
         vals, ages = self.poll_observation(lanes)
         kw = {name: vals[:, j].astype(np.float32)
               for j, name in enumerate(names)}
+        if grad_error is not None:
+            kw["grad_error"] = grad_error
         # max over lanes, NaN-aware without the all-NaN-slice warning
         masked = np.where(np.isnan(ages), -np.inf, ages)
         age = masked.max(axis=1, initial=-np.inf)

@@ -131,6 +131,15 @@ class Policy:
             f"{type(self).__name__} defines no decide(); implement it "
             f"(the legacy update_* API is deprecated)")
 
+    def decide_env(self, state: PowerPlaneState, frame: TelemetryFrame,
+                   envelope=None) -> RailRequest:
+        """decide() under a learned per-chip `sor.SafeEnvelope`. Controllers
+        with a live SOR estimate call this; envelope-aware policies override
+        it to warm-start from the fitted frontier (confidence-blended so
+        zero confidence is bit-identical to decide()). The base simply
+        ignores the envelope, so every policy stays callable either way."""
+        return self.decide(state, frame)
+
     def _decides(self) -> bool:
         """True when this policy implements its own decide() (vs a legacy
         subclass that only overrode the update_* methods)."""
@@ -197,8 +206,13 @@ class BERBounded(Policy):
     v_io_floor: float = 0.80
     spec: ChipSpec = V5E
     name: str = "ber-bounded"
+    # learned per-chip SOR envelope (core/sor.py). None -> static floor only.
+    envelope: Any = None
 
     def decide(self, state, frame):
+        return self.decide_env(state, frame, self.envelope)
+
+    def decide_env(self, state, frame, envelope=None):
         err = frame.grad_error
         # hysteresis: escalate when comfortably under bound, retreat when over
         lvl = state.comp_level
@@ -206,10 +220,17 @@ class BERBounded(Policy):
                         jnp.minimum(lvl + 1, ecollectives.LEVEL_INT8_TOPK), lvl)
         lvl = jnp.where(err > self.error_bound, jnp.maximum(lvl - 1, 0), lvl)
         v_nom_io = _nom(frame.v_nom_io, self.spec.nominal_v_io)
-        v_io = jnp.where(lvl > 0,
-                         jnp.maximum(jnp.float32(self.v_io_floor),
-                                     v_nom_io * 0.9),
-                         v_nom_io)
+        base = v_nom_io * 0.9
+        if envelope is None:
+            v_low = jnp.maximum(jnp.float32(self.v_io_floor), base)
+        else:
+            # warm start from the fitted frontier: the undervolt target pulls
+            # from the fixed 10% margin toward each chip's learned floor as
+            # confidence accrues (zero confidence == the static expression)
+            floor_eff = envelope.floor(self.v_io_floor)
+            c = jnp.asarray(envelope.confidence, jnp.float32)
+            v_low = jnp.maximum(floor_eff, base + c * (floor_eff - base))
+        v_io = jnp.where(lvl > 0, v_low, v_nom_io)
         return RailRequest(v_io=v_io, comp_level=lvl.astype(jnp.int32),
                            reason="ber-bounded-hysteresis")
 
@@ -268,12 +289,26 @@ class ClosedLoop(Policy):
     v_io_floor: float = 0.75
     spec: ChipSpec = V5E
     name: str = "closed-loop"
+    # learned per-chip SOR envelope (core/sor.py). None -> static floor only.
+    envelope: Any = None
 
     def decide(self, state, frame):
+        return self.decide_env(state, frame, self.envelope)
+
+    def decide_env(self, state, frame, envelope=None):
         err = frame.grad_error
         v_io_obs = _obs(frame.v_io, state.v_io)
         ok = err <= self.error_bound
-        v_down = jnp.maximum(v_io_obs - self.step_v, self.v_io_floor)
+        if envelope is None:
+            v_down = jnp.maximum(v_io_obs - self.step_v, self.v_io_floor)
+        else:
+            # warm start: a confident fitted frontier pulls the 5 mV walk
+            # straight to each chip's learned floor (and lifts chips already
+            # *below* it back up); zero confidence == the static walk
+            floor_eff = envelope.floor(self.v_io_floor)
+            c = jnp.asarray(envelope.confidence, jnp.float32)
+            walk = v_io_obs - self.step_v
+            v_down = jnp.maximum(walk + c * (floor_eff - walk), floor_eff)
         v_up = jnp.minimum(v_io_obs * self.backoff,
                            _nom(frame.v_nom_io, self.spec.nominal_v_io))
         v_io = jnp.where(ok, v_down, v_up)
@@ -294,15 +329,24 @@ class WorstChipGate(Policy):
     inner: Policy = dataclasses.field(default_factory=lambda: BERBounded())
     reduce_keys: tuple[str, ...] = ("grad_error",)
     name: str = "worst-chip"
+    # learned per-chip SOR envelope, forwarded to the inner policy: the
+    # worst chip's *telemetry* gates everyone, but each chip keeps its own
+    # learned floor — the conservative fleet policy with per-chip margins.
+    envelope: Any = None
 
     def __post_init__(self):
         self.name = f"worst-chip[{self.inner.name}]"
 
     def decide(self, state, frame):
+        return self.decide_env(state, frame, self.envelope)
+
+    def decide_env(self, state, frame, envelope=None):
         # scalar state: one chip IS the worst chip
         if jnp.ndim(state.v_core) >= 1:
             frame = frame.reduce_worst(self.reduce_keys)
-        return self.inner.decide(state, frame)
+        if envelope is None:
+            return self.inner.decide(state, frame)
+        return self.inner.decide_env(state, frame, envelope)
 
     def update_fleet(self, state, telemetry):
         # legacy shim kept override-for-override with the old API: reduce the
@@ -318,6 +362,54 @@ class WorstChipGate(Policy):
             return self.inner.update_fleet(state, telem)
 
 
+@dataclasses.dataclass
+class StalenessGuard(Policy):
+    """Age-aware margin widening: the first policy to actually act on
+    `frame.age_s`. Wraps any decision policy and *widens the requested
+    margin* in proportion to how stale the observations are — when
+    back-pressure degrades the poll interval (fleet.SegmentPollStats), the
+    loop is flying on old samples and should not hold an aggressive
+    operating point it can no longer verify.
+
+    Mechanics: staleness beyond `grace_s` lifts every requested rail voltage
+    by `widen_v_per_s` volts per second of excess age, capped at
+    `max_widen_v` (arbitration still clamps to the rail/SOR envelope above).
+    Fresh frames (age <= grace, including every EXACT frame at age 0) pass
+    the inner request through numerically unchanged."""
+    inner: Policy = dataclasses.field(default_factory=lambda: ClosedLoop())
+    grace_s: float = 0.050       # staleness the loop tolerates for free
+    widen_v_per_s: float = 0.5   # volts of margin per second of excess age
+    max_widen_v: float = 0.05    # never widen past this
+    name: str = "staleness-guard"
+
+    def __post_init__(self):
+        self.name = f"staleness-guard[{self.inner.name}]"
+
+    def decide(self, state, frame):
+        return self.decide_env(state, frame, None)
+
+    def decide_env(self, state, frame, envelope=None):
+        req = (self.inner.decide_env(state, frame, envelope)
+               if envelope is not None else self.inner.decide(state, frame))
+        age = jnp.asarray(frame.age_s, jnp.float32)
+        widen = jnp.clip((age - self.grace_s) * self.widen_v_per_s,
+                         0.0, self.max_widen_v)
+        # NaN age is the documented "staleness unknown" sentinel (telemetry.
+        # from_dict, poll_frame before the first sample): treat it as
+        # maximally stale — widen fully rather than poisoning the rails
+        widen = jnp.where(jnp.isnan(age), jnp.float32(self.max_widen_v),
+                          widen)
+
+        def lift(v):
+            return None if v is None else jnp.asarray(v, jnp.float32) + widen
+
+        return dataclasses.replace(
+            req, v_core=lift(req.v_core), v_hbm=lift(req.v_hbm),
+            v_io=lift(req.v_io),
+            reason=f"{req.reason}+staleness-guard" if req.reason
+            else "staleness-guard")
+
+
 POLICIES = {p.name: p for p in
             (StaticNominal(), BERBounded(), PhaseAware(), ClosedLoop(),
-             WorstChipGate(BERBounded()))}
+             WorstChipGate(BERBounded()), StalenessGuard(ClosedLoop()))}

@@ -1,0 +1,290 @@
+"""Learned per-chip safe operating regions (paper §VIII future work, at
+fleet scale).
+
+VolTune's headline result is a *bounded operating region*: undervolt the
+transceiver rail as far as the measured BER frontier allows (≈29.3% rail
+power at 10 Gbps with BER <= 1e-6) — and its future-work section asks for
+learning that region at runtime instead of hard-coding it. This module is
+that subsystem for the TPU adaptation (docs/sor.md):
+
+    FrameHistory  ->  SorEstimate  ->  SafeEnvelope  ->  arbitration
+    (telemetry)       (fitted frontier)  (per-chip v_min)   (control_plane)
+
+* `telemetry.FrameHistory` — fixed-capacity ring of (voltage, measured
+  error, age, provenance) samples per chip, stacked jnp arrays so the whole
+  store jits/vmaps and rides a scan carry.
+* `SorEstimate` — each chip's fitted log10(error)-vs-voltage frontier:
+  slope + intercept from exponentially-weighted least squares over the
+  history window, the frontier voltage where the modeled error meets a
+  caller-chosen bound, and a confidence in [0, 1] that gates everything
+  downstream. All math is elementwise jnp over `[n_chips]` (Pallas-friendly:
+  the same streaming-reduction shape as kernels/fleet_telemetry.py).
+* `SafeEnvelope` — per-chip v_min/v_max derived from the fit at the bound,
+  *blended with the caller's static envelope by confidence*: at zero
+  confidence the envelope IS the static one (bit-exact — the cold-start
+  no-behavior-change pin), and the learned floor may extend below the static
+  floor by at most `max_extension_v` (bounded exploration).
+
+Consumers: `policy.BERBounded/ClosedLoop/WorstChipGate` warm-start their
+decisions from the envelope (`decide_env`), `control_plane.arbitrate` clamps
+requests against per-chip envelopes instead of the one shared rail envelope,
+and both controllers maintain the history/estimate on a configurable cadence
+(`SorConfig.refresh_every`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.telemetry import FrameHistory, TelemetryFrame
+
+LOG10_ERR_FLOOR = -8.0   # zero-error samples clamp here (detection floor)
+LOG10_ERR_CEIL = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SorConfig:
+    """Knobs of the safe-operating-region learner.
+
+    `error_bound` is the measured-error bound the frontier is cut at (the
+    gradient-domain analogue of the paper's BER <= 1e-6); `guard_v` is the
+    guard band added above the fitted frontier voltage; `max_extension_v`
+    bounds how far below a consumer's *static* floor the learned floor may
+    reach (confidence-gated exploration, never a free fall)."""
+    capacity: int = 32           # history window (samples per chip)
+    refresh_every: int = 4       # observations between estimate refreshes
+    error_bound: float = 5e-3    # frontier cut: modeled error == this bound
+    guard_v: float = 0.010       # volts of guard band above the frontier
+    decay: float = 0.92          # per-slot recency decay of the EWLS weights
+    update_gain: float = 1.0     # EW blend of a refit into the running fit
+    min_slope: float = 0.5       # |d log10(err)/dV| below this -> no trust
+    min_spread_v: float = 2e-3   # required voltage stddev in the window
+    conf_samples: float = 8.0    # effective samples to ~63% confidence
+    age_halflife_s: "float | None" = None  # None: staleness-blind weights;
+    #                              else a sample's weight halves per this
+    #                              many seconds of observation age
+    max_extension_v: float = 0.05  # max reach below a consumer's static floor
+    ingest: str = "polled"       # "polled": learn only from READ_VOUT
+    #                              samples; "frames": learn from whatever
+    #                              frame the decision consumed (EXACT ok)
+
+    def __post_init__(self):
+        if self.ingest not in ("polled", "frames"):
+            raise ValueError(f"ingest must be 'polled' or 'frames', "
+                             f"got {self.ingest!r}")
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {self.decay}")
+        if self.refresh_every < 1:
+            raise ValueError("refresh_every must be >= 1")
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["intercept", "slope", "v_frontier", "confidence",
+                      "n_eff"],
+         meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class SorEstimate:
+    """One chip's (or `[n_chips]`-batched) fitted BER frontier:
+    log10(error)(v) ~= intercept + slope * v, with `v_frontier` the voltage
+    where the model meets the configured bound and `confidence` in [0, 1]
+    gating every consumer. Zero confidence == no opinion (cold start)."""
+    intercept: Any    # f32 [] or [n_chips]
+    slope: Any        # f32 — d log10(err)/dV, negative when healthy
+    v_frontier: Any   # f32 — modeled log10(err) == log10(bound) here
+    confidence: Any   # f32 in [0, 1]
+    n_eff: Any        # f32 — effective (decayed) sample count behind the fit
+
+    @staticmethod
+    def init(n_chips: int | None = None) -> "SorEstimate":
+        shape = () if n_chips is None else (n_chips,)
+        z = jnp.zeros(shape, jnp.float32)
+        return SorEstimate(intercept=z, slope=z, v_frontier=z,
+                           confidence=z, n_eff=z)
+
+    def log10_error_at(self, v) -> jnp.ndarray:
+        """Modeled log10(error) at rail voltage `v` (elementwise)."""
+        return self.intercept + self.slope * jnp.asarray(v, jnp.float32)
+
+
+def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
+    """Exponentially-weighted least squares of log10(error) against the
+    VDD_IO observation over the history window — elementwise per chip, pure
+    jnp (jit/vmap/scan safe; the same [window, n_chips] streaming-reduction
+    shape the Pallas fleet-telemetry kernel handles at scale).
+
+    Confidence gates on three things at once: enough effective samples
+    (`conf_samples` ramp), enough voltage spread to identify a slope
+    (`min_spread_v`), and a frontier with the right sign and steepness
+    (`min_slope`; error must *grow* as voltage drops)."""
+    eps = jnp.float32(1e-9)
+    w = history.recency_weights(cfg.decay)
+    if cfg.age_halflife_s is not None:
+        # POLLED samples that were already stale when observed carry less
+        # weight (halving per age_halflife_s of recorded staleness)
+        w = w * 0.5 ** (history.age_s / jnp.float32(cfg.age_halflife_s))
+    x = jnp.where(history.valid, history.v_io, 0.0)
+    y = jnp.clip(
+        jnp.log10(jnp.maximum(history.error, 10.0 ** LOG10_ERR_FLOOR)),
+        LOG10_ERR_FLOOR, LOG10_ERR_CEIL)
+    y = jnp.where(history.valid, y, 0.0)
+
+    sw = jnp.sum(w, axis=0)
+    sx = jnp.sum(w * x, axis=0)
+    sy = jnp.sum(w * y, axis=0)
+    sxx = jnp.sum(w * x * x, axis=0)
+    sxy = jnp.sum(w * x * y, axis=0)
+
+    denom = sw * sxx - sx * sx
+    slope = (sw * sxy - sx * sy) / jnp.maximum(denom, eps)
+    intercept = (sy - slope * sx) / jnp.maximum(sw, eps)
+    var_x = jnp.maximum(sxx / jnp.maximum(sw, eps)
+                        - (sx / jnp.maximum(sw, eps)) ** 2, 0.0)
+
+    steep = slope < -jnp.float32(cfg.min_slope)
+    spread = var_x > jnp.float32(cfg.min_spread_v) ** 2
+    usable = steep & spread & (denom > eps)
+
+    log10_bound = jnp.float32(np.log10(cfg.error_bound))
+    v_frontier = jnp.where(
+        usable, (log10_bound - intercept) / jnp.where(usable, slope, -1.0),
+        0.0)
+    v_frontier = jnp.clip(v_frontier, 0.0, 2.0)   # sanity, conf gates anyway
+    confidence = jnp.where(
+        usable, 1.0 - jnp.exp(-sw / jnp.float32(cfg.conf_samples)), 0.0)
+    return SorEstimate(
+        intercept=jnp.where(usable, intercept, 0.0).astype(jnp.float32),
+        slope=jnp.where(usable, slope, 0.0).astype(jnp.float32),
+        v_frontier=v_frontier.astype(jnp.float32),
+        confidence=confidence.astype(jnp.float32),
+        n_eff=sw.astype(jnp.float32))
+
+
+def update_estimate(old: SorEstimate, history: FrameHistory,
+                    cfg: SorConfig) -> SorEstimate:
+    """Online refresh: refit the window, then blend into the running
+    estimate with `update_gain` (1.0 == adopt the refit). A window that
+    yields no usable fit keeps the previous estimate — a chip whose polls
+    stopped does not forget its learned region, and a cold chip stays at
+    zero confidence."""
+    fit = fit_history(history, cfg)
+    gain = jnp.where(old.confidence > 0.0, jnp.float32(cfg.update_gain), 1.0)
+    return jax.tree_util.tree_map(
+        lambda o, f: jnp.where(fit.confidence > 0.0, o + gain * (f - o),
+                               jnp.where(old.confidence > 0.0, o, f)),
+        old, fit)
+
+
+# ---------------------------------------------------------------------------
+# SafeEnvelope: the fit, expressed as per-chip operating limits
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["v_min", "v_max", "confidence"],
+         meta_fields=["max_extension_v"])
+@dataclasses.dataclass(frozen=True)
+class SafeEnvelope:
+    """Per-chip learned operating limits for one rail, confidence-blended
+    against whatever *static* limit the consumer holds (a policy's
+    `v_io_floor`, arbitration's rail `v_min`): at zero confidence the
+    blended limit is bit-exactly the static one, at full confidence it is
+    the learned frontier. The learned floor may reach below the static one
+    by at most `max_extension_v` — conservative, bounded exploration."""
+    v_min: Any          # f32 [] or [n_chips] — learned minimum safe voltage
+    v_max: Any = None   # f32 or None — learned ceiling (None: static only)
+    confidence: Any = 0.0
+    max_extension_v: float = 0.05
+
+    def floor(self, static_v_min) -> jnp.ndarray:
+        s = jnp.asarray(static_v_min, jnp.float32)
+        blended = s + jnp.asarray(self.confidence, jnp.float32) \
+            * (jnp.asarray(self.v_min, jnp.float32) - s)
+        return jnp.maximum(blended, s - jnp.float32(self.max_extension_v))
+
+    def ceil(self, static_v_max) -> jnp.ndarray:
+        s = jnp.asarray(static_v_max, jnp.float32)
+        if self.v_max is None:
+            return s
+        blended = s + jnp.asarray(self.confidence, jnp.float32) \
+            * (jnp.asarray(self.v_max, jnp.float32) - s)
+        return jnp.minimum(blended, s + jnp.float32(self.max_extension_v))
+
+
+def safe_envelope(est: SorEstimate, cfg: SorConfig) -> SafeEnvelope:
+    """The estimate as a rail envelope: floor at the fitted frontier plus
+    the guard band, ceiling left to the consumer's static limit."""
+    return SafeEnvelope(v_min=est.v_frontier + jnp.float32(cfg.guard_v),
+                        v_max=None, confidence=est.confidence,
+                        max_extension_v=cfg.max_extension_v)
+
+
+# ---------------------------------------------------------------------------
+# SorState: the functional bundle controllers carry
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["history", "estimate", "tick"],
+         meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class SorState:
+    """(history, estimate, tick): what a controller threads through its
+    loop. `InGraphRailController.control_step_sor` carries it through the
+    jitted scan; `HostRailController` holds it between decisions."""
+    history: FrameHistory
+    estimate: SorEstimate
+    tick: Any   # i32 [] — observations seen
+
+
+def init_state(cfg: SorConfig, n_chips: int | None = None) -> SorState:
+    return SorState(history=FrameHistory.create(cfg.capacity, n_chips),
+                    estimate=SorEstimate.init(n_chips),
+                    tick=jnp.int32(0))
+
+
+def observe(state: SorState, frame: TelemetryFrame,
+            cfg: SorConfig) -> SorState:
+    """Push one observation and refresh the estimate on the configured
+    cadence. Under a trace the refresh is computed every step and selected
+    by tick (one graph serves every step of a scan); on the eager host path
+    the off-cadence refits are skipped outright instead of computed and
+    discarded."""
+    hist = state.history.push(frame)
+    tick = state.tick + 1
+    if isinstance(tick, jax.core.Tracer):
+        refreshed = update_estimate(state.estimate, hist, cfg)
+        do = (tick % cfg.refresh_every) == 0
+        est = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(do, b, a), state.estimate, refreshed)
+    elif int(tick) % cfg.refresh_every == 0:
+        est = update_estimate(state.estimate, hist, cfg)
+    else:
+        est = state.estimate
+    return SorState(history=hist, estimate=est, tick=tick)
+
+
+def summary(est: SorEstimate, cfg: SorConfig) -> dict[str, float]:
+    """Host-side telemetry view of an estimate (trainer/serve summaries)."""
+    conf = np.atleast_1d(np.asarray(jax.device_get(est.confidence),
+                                    np.float64))
+    front = np.atleast_1d(np.asarray(jax.device_get(est.v_frontier),
+                                     np.float64))
+    n_eff = np.atleast_1d(np.asarray(jax.device_get(est.n_eff), np.float64))
+    learned = conf > 0.0
+    floor = front + cfg.guard_v
+    out = {
+        "n_chips": int(conf.size),
+        "chips_learned": int(learned.sum()),
+        "confidence_mean": float(conf.mean()),
+        "confidence_min": float(conf.min()),
+        "n_eff_mean": float(n_eff.mean()),
+    }
+    if learned.any():
+        out["floor_min_v"] = float(floor[learned].min())
+        out["floor_max_v"] = float(floor[learned].max())
+        out["floor_mean_v"] = float(floor[learned].mean())
+    return out

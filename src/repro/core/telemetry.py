@@ -111,6 +111,15 @@ class TelemetryFrame:
         `extras`; rail-voltage observations come from `state` (the plane the
         caller is controlling) so legacy dict-driven trajectories are
         bit-identical to the old state-reading policies."""
+        if provenance is Provenance.POLLED and age_s is None:
+            # a POLLED observation with a silently zero-filled age would
+            # masquerade as fresh to every age-aware consumer (StalenessGuard,
+            # SOR ingestion); demand an explicit staleness — math.nan is the
+            # honest sentinel when the caller genuinely does not know
+            raise ValueError(
+                "POLLED frames must carry age_s (fleet-clock staleness of "
+                "the READ_VOUT samples); pass age_s=math.nan if unknown "
+                "rather than letting a stale sample masquerade as fresh")
         t = dict(telemetry)
         kw: dict[str, Any] = {}
         for k in _FRAME_METRIC_KEYS:
@@ -195,6 +204,103 @@ def as_frame(telemetry, *, state=None) -> TelemetryFrame:
                 v_io=state.v_io)
         return telemetry
     return TelemetryFrame.from_dict(telemetry, state=state)
+
+
+# ---------------------------------------------------------------------------
+# FrameHistory: the jit/vmap-safe per-chip telemetry window (SOR stage 0)
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["v_core", "v_hbm", "v_io", "error", "age_s", "polled",
+                      "valid", "cursor", "count"],
+         meta_fields=["capacity"])
+@dataclasses.dataclass(frozen=True)
+class FrameHistory:
+    """Fixed-capacity ring buffer of `TelemetryFrame` samples, stored as
+    stacked jnp arrays `[capacity, *chip_shape]` so the whole store jits,
+    vmaps, and rides a `lax.scan` carry (the in-graph SOR path needs exactly
+    that — see core/sor.py and docs/sor.md).
+
+    Per sample and per chip it keeps the full observation record: the
+    rail-voltage observations (the VDD_IO frontier fit reads `v_io`;
+    `v_core`/`v_hbm` are stored for the road-mapped cross-rail fits), the
+    measured error (`grad_error`, the BER analogue), the observation
+    staleness (`age_s` — down-weighted by the fit when
+    `SorConfig.age_halflife_s` is set), and a POLLED/EXACT provenance flag
+    (the record of *where* each sample came from). `valid` masks chips whose
+    voltage or error observation was NaN at push time (e.g. a
+    `FleetPowerManager.poll_frame` lane that was never sampled) — cold start
+    therefore records *nothing*, which is what pins learned-envelope
+    controllers to static behavior until real telemetry arrives."""
+    v_core: Any       # f32 [capacity, *chip]
+    v_hbm: Any        # f32 [capacity, *chip]
+    v_io: Any         # f32 [capacity, *chip]
+    error: Any        # f32 [capacity, *chip] — measured error (BER analogue)
+    age_s: Any        # f32 [capacity, *chip] — staleness at observation time
+    polled: Any       # f32 [capacity, *chip] — 1.0 POLLED, 0.0 EXACT
+    valid: Any        # bool [capacity, *chip]
+    cursor: Any       # i32 [] — next slot to write
+    count: Any        # i32 [] — total pushes (not capped)
+    capacity: int
+
+    @staticmethod
+    def create(capacity: int, n_chips: int | None = None) -> "FrameHistory":
+        """Empty history. `n_chips=None` -> scalar (single-chip) samples."""
+        if capacity < 2:
+            raise ValueError(f"capacity must be >= 2, got {capacity}")
+        shape = (capacity,) if n_chips is None else (capacity, n_chips)
+        z = jnp.zeros(shape, jnp.float32)
+        return FrameHistory(
+            v_core=z, v_hbm=z, v_io=z, error=z, age_s=z, polled=z,
+            valid=jnp.zeros(shape, bool),
+            cursor=jnp.int32(0), count=jnp.int32(0), capacity=capacity)
+
+    @property
+    def chip_shape(self) -> tuple[int, ...]:
+        return self.v_io.shape[1:]
+
+    def push(self, frame: TelemetryFrame) -> "FrameHistory":
+        """Functional append of one observation (pure jnp: jit/vmap/scan
+        safe). Chips whose voltage or error observation is non-finite record
+        as invalid — they carry no weight in any downstream fit."""
+        shape = self.chip_shape
+
+        def val(x, default=None):
+            if x is None:
+                x = jnp.nan if default is None else default
+            return jnp.broadcast_to(jnp.asarray(x, jnp.float32), shape)
+
+        v_core, v_hbm, v_io = val(frame.v_core), val(frame.v_hbm), val(frame.v_io)
+        err = val(frame.grad_error)
+        age = val(frame.age_s, default=0.0)
+        ok = jnp.isfinite(v_io) & jnp.isfinite(err)
+        polled = jnp.broadcast_to(
+            jnp.float32(frame.provenance is Provenance.POLLED), shape)
+
+        def put(buf, x):
+            return jax.lax.dynamic_update_index_in_dim(buf, x, self.cursor, 0)
+
+        return dataclasses.replace(
+            self,
+            v_core=put(self.v_core, v_core),
+            v_hbm=put(self.v_hbm, v_hbm),
+            v_io=put(self.v_io, v_io),
+            error=put(self.error, err),
+            age_s=put(self.age_s, jnp.where(jnp.isfinite(age), age, 0.0)),
+            polled=put(self.polled, polled),
+            valid=put(self.valid, ok),
+            cursor=(self.cursor + 1) % self.capacity,
+            count=self.count + 1)
+
+    def recency_weights(self, decay: float) -> jnp.ndarray:
+        """`[capacity, *chip]` exponential recency weights: the newest valid
+        sample weighs 1, each older slot `decay`x less, invalid slots 0 —
+        the weighting of the SOR exponentially-weighted least squares."""
+        slots = jnp.arange(self.capacity)
+        rank = (self.cursor - 1 - slots) % self.capacity   # 0 == newest
+        w = jnp.asarray(decay, jnp.float32) ** rank
+        w = w.reshape((self.capacity,) + (1,) * len(self.chip_shape))
+        return w * self.valid.astype(jnp.float32)
 
 
 def scalar_view(x) -> float:

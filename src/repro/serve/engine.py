@@ -25,12 +25,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.control_plane import as_controller
+from repro.core import sor as sor_mod
+from repro.core.control_plane import (InGraphRailController, as_controller,
+                                      validate_in_graph_sor,
+                                      worst_chip_pinned)
 from repro.core.hwspec import FleetSpec
 from repro.core.policy import WorstChipGate
 from repro.core.power_plane import (PowerPlaneState, StepProfile,
                                     account_and_observe,
-                                    account_fleet_and_observe)
+                                    account_fleet_and_observe, step_time_s)
 from repro.core.telemetry import scalar_view
 from repro.models import registry
 
@@ -42,6 +45,8 @@ class ServeStats:
     energy_j: float = 0.0          # per-chip (fleet mean) energy
     model_time_s: float = 0.0
     fleet_energy_j: float = 0.0    # whole-fleet energy (mean x n_chips)
+    decode_sheds: int = 0          # decode batches deferred by admission gate
+    defer_time_s: float = 0.0      # simulated time spent waiting out sheds
 
 
 class ServeEngine:
@@ -50,7 +55,9 @@ class ServeEngine:
                  prefill_profile: StepProfile | None = None,
                  decode_profile: StepProfile | None = None,
                  controller=None, policy=None,
-                 fleet: FleetSpec | None = None):
+                 fleet: FleetSpec | None = None,
+                 sor: "sor_mod.SorConfig | None" = None,
+                 admission_gate: bool = False):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg)
@@ -70,6 +77,27 @@ class ServeEngine:
             policy = WorstChipGate(policy)
         self.controller = as_controller(controller if controller is not None
                                         else policy)
+        # learned safe-operating-region state (core/sor.py): the engine's
+        # serving loop is eager, so it threads the functional SorState itself
+        if sor is not None:
+            if not isinstance(self.controller, InGraphRailController):
+                raise ValueError("sor= needs an in-graph policy/controller "
+                                 "(the serve loop threads SorState through "
+                                 "InGraphRailController.control_step_sor); "
+                                 "for a HostRailController pass sor= to the "
+                                 "controller itself")
+            if (self.controller.sor is not None
+                    and self.controller.sor != sor):
+                raise ValueError(
+                    "conflicting SorConfig: the controller already carries "
+                    "its own sor=; configure it in one place")
+            validate_in_graph_sor(sor)
+            self.controller.sor = sor
+        self._sor_state = None
+        # admission gate: shed/defer decode batches while the arbitrated
+        # request shows the worst chip pinned at its VDD_IO envelope floor
+        self.admission_gate = admission_gate
+        self.last_shed_reason: str | None = None
         self.prefill_profile = prefill_profile or StepProfile(1e9, 1e9, 0.0)
         self.decode_profile = decode_profile or StepProfile(1e8, 1e9, 0.0)
         self.stats = ServeStats()
@@ -98,7 +126,41 @@ class ServeEngine:
             self.stats.fleet_energy_j += e * self.n_chips
             self.stats.model_time_s += scalar_view(m["t_step_s"])
             if self.controller is not None:
-                self.plane = self.controller.control_step(self.plane, frame)
+                c = self.controller
+                if getattr(c, "sor", None) is not None and hasattr(
+                        c, "control_step_sor"):
+                    if self._sor_state is None:
+                        self._sor_state = c.init_sor(
+                            self.n_chips if self.plane.is_fleet else None)
+                    self.plane, self._sor_state = c.control_step_sor(
+                        self.plane, frame, self._sor_state)
+                else:
+                    self.plane = c.control_step(self.plane, frame)
+
+    def _worst_chip_pinned(self) -> bool:
+        """Did the latest arbitration pin the worst chip at its VDD_IO
+        envelope floor (request wanted at/below what the envelope holds)?
+        The shed signal carries the arbitrated `RailRequest.reason`."""
+        c = self.controller
+        req = getattr(c, "last_request", None) if c is not None else None
+        env = getattr(c, "last_envelope", None) if c is not None else None
+        if req is None:
+            return False
+        if worst_chip_pinned(self.plane, req, envelope=env):
+            self.last_shed_reason = req.reason or "pinned-at-envelope-floor"
+            return True
+        return False
+
+    def _defer_tick(self) -> None:
+        """Admission shed: the batch waits out one *accounted* decode tick
+        before being admitted — simulated time passes and the control loop
+        runs (so the controller genuinely gets a round to back off the
+        floor, e.g. escalate compression or raise the rail); a real
+        deployment would route the deferred batch to another replica."""
+        self.stats.decode_sheds += 1
+        self.stats.defer_time_s += scalar_view(
+            step_time_s(self.decode_profile, self.plane))
+        self._account(self.decode_profile)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  eos_id: int | None = None) -> np.ndarray:
@@ -119,6 +181,8 @@ class ServeEngine:
 
         out = [next_tok]
         for i in range(max_new_tokens - 1):
+            if self.admission_gate and self._worst_chip_pinned():
+                self._defer_tick()
             logits, cache = self._decode(
                 self.params, cache,
                 {"tokens": out[-1], "cur_index": cur_index})
@@ -150,4 +214,19 @@ class ServeEngine:
             out["v_core_min"] = float(jnp.min(self.plane.v_core))
             out["v_io_min"] = float(jnp.min(self.plane.v_io))
             out["comp_level_min"] = int(jnp.min(self.plane.comp_level))
+        if self.admission_gate:
+            out["decode_sheds"] = self.stats.decode_sheds
+            out["defer_time_s"] = self.stats.defer_time_s
+            if self.last_shed_reason is not None:
+                out["shed_reason"] = self.last_shed_reason
+        if self._sor_state is not None:
+            out["sor"] = sor_mod.summary(self._sor_state.estimate,
+                                         self.controller.sor)
+        else:
+            # a HostRailController(sor=...) learns on its own control_step;
+            # surface its view the same way
+            summarize = getattr(self.controller, "sor_summary", None)
+            s = summarize() if callable(summarize) else None
+            if s:
+                out["sor"] = s
         return out

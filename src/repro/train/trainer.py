@@ -163,6 +163,7 @@ class Trainer:
             # unified rail control plane (decide + PMBus-actuate)
             if cfg.controller is not None:
                 self.state["plane"] = cfg.controller.control_step(plane, metrics)
+                metrics = self._with_sor_metrics(metrics)
 
             self.log.append_from(step, metrics["loss"], metrics,
                                  self.state["plane"])
@@ -170,6 +171,18 @@ class Trainer:
             if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
                 self._save(step)
         return step
+
+    def _with_sor_metrics(self, metrics: dict[str, Any]) -> dict[str, Any]:
+        """Fold the controller's learned safe-operating-region view into the
+        step telemetry (`sor/...` scalar keys) so the TelemetryLog records
+        how the fleet's learned envelope evolves over training."""
+        summarize = getattr(self.cfg.controller, "sor_summary", None)
+        s = summarize() if callable(summarize) else None
+        if not s:
+            return metrics
+        return {**metrics,
+                **{f"sor/{k}": float(v) for k, v in s.items()
+                   if np.isfinite(v)}}
 
     # -- reporting -------------------------------------------------------------
     def summary(self) -> dict[str, Any]:
@@ -191,6 +204,10 @@ class Trainer:
             out["n_chips"] = last.n_chips
             if last.fleet:   # fleet run: surface the gating worst-chip view
                 out["fleet_last"] = dict(last.fleet)
+        summarize = getattr(self.cfg.controller, "sor_summary", None)
+        sor = summarize() if callable(summarize) else None
+        if sor:              # learned safe-operating-region state, if any
+            out["sor"] = sor
         return out
 
 
