@@ -41,8 +41,8 @@ from benchmarks.common import row, timed
 from repro.core import sor
 from repro.core.control_plane import HostRailController, InGraphRailController
 from repro.core.hwspec import FleetSpec
-from repro.core.policy import (BERBounded, ClosedLoop, StaticNominal,
-                               WorstChipGate)
+from repro.core.policy import (BERBounded, ClosedLoop, MultiRailClosedLoop,
+                               StaticNominal, WorstChipGate)
 from repro.core.power_plane import (PowerPlaneState, StepProfile,
                                     account_fleet_and_observe, step_time_s)
 from repro.core.rails import TPU_V5E_RAIL_MAP
@@ -175,58 +175,81 @@ def _host_rollout(n_chips: int, policy, rounds: int = HOST_ROUNDS,
 # Learned vs static safe-operating regions (core/sor.py, docs/sor.md)
 # ---------------------------------------------------------------------------
 #
-# The shared static envelope leaves the strong chips' headroom on the table:
-# every chip is clamped at the same platform VDD_IO floor even though each
-# has its own BER frontier. This comparison runs the same in-graph ClosedLoop
-# fleet twice — once against the static envelope, once with the SOR learner
-# threading FrameHistory/SorEstimate through the scan — and reports per-chip
-# recovered headroom: how far below the shared static floor each chip's
-# *learned* arbitrated floor lands, with the modeled error still at/below the
-# bound.
+# The shared static envelopes leave the strong chips' headroom on the table:
+# every chip is clamped at the same platform floors even though each has its
+# own frontier — on EVERY rail, with a different failure mode per rail
+# (paper §VII-B: per-rail envelopes; Khaleghi/Papadimitriou: rail- and
+# workload-specific margins). This comparison runs the same in-graph
+# MultiRailClosedLoop fleet twice — once against the static envelopes, once
+# with the three-rail SOR learner threading FrameHistory/SorEstimate through
+# the scan — in a synthetic per-rail frontier world: VDD_IO crosses the
+# bound on measured gradient-domain error (the BER analogue), VDD_CORE on
+# the straggler rate, VDD_HBM on the HBM interface error rate, each with its
+# own per-chip onset spread. Reported per rail: recovered headroom below the
+# shared static floor, with the modeled observable still at/below the bound.
 
 SOR_STEPS = 160
 SOR_FLEET_SIZES = (64,)
-SOR_POLICY_FLOOR = 0.70        # the shared static policy floor under test
-SOR_ONSET_BASE = 0.62          # strongest chip's BER onset voltage
-SOR_ONSET_SPREAD = 0.05        # weakest chip ~+60 mV (process variation)
 SOR_LOG_SLOPE = 30.0           # decades of error per volt below the onset
 #                                (the paper's ~5 mV Fig-12c transition band)
+# shared static policy floors under test (per rail)
+SOR_POLICY_FLOORS = {"VDD_CORE": 0.70, "VDD_HBM": 1.00, "VDD_IO": 0.70}
+# per-rail onset bands: (base = strongest chip's onset, spread) — chosen so
+# each band straddles its rail's platform floor (0.60/0.90/0.65): strong
+# chips have real headroom below the shared static envelope, weak chips'
+# frontiers sit above it
+SOR_ONSETS = {"VDD_CORE": (0.598, 0.05), "VDD_HBM": (0.878, 0.05),
+              "VDD_IO": (0.62, 0.05)}
 SOR_CFG = sor.SorConfig(capacity=32, refresh_every=4, decay=0.96,
                         error_bound=ERROR_BOUND, guard_v=0.004,
-                        max_extension_v=0.12, ingest="frames")
-_STATIC_IO_FLOOR = TPU_V5E_RAIL_MAP.by_name("VDD_IO").v_min
+                        max_extension_v=0.12, ingest="frames",
+                        rails=sor.ALL_RAIL_OBSERVABLES)
+_STATIC_FLOORS = {r: TPU_V5E_RAIL_MAP.by_name(r).v_min
+                  for r in SOR_POLICY_FLOORS}
 
 
-def _onset_voltages(fs: FleetSpec) -> jnp.ndarray:
-    """Per-chip BER onset voltage: the seeded error_sensitivity spread
-    mapped onto a Fig-12-style onset band (weak chips' frontiers sit above
-    the strong chips')."""
-    sens = jnp.asarray(fs.error_sensitivity)
-    return SOR_ONSET_BASE + SOR_ONSET_SPREAD * (sens - 1.0)
+def _onset_voltages(fs: FleetSpec, rail: str) -> jnp.ndarray:
+    """Per-chip frontier onset voltage for one rail: the seeded process
+    variation mapped onto a Fig-12-style onset band (weak chips' frontiers
+    sit above the strong chips'). VDD_IO/VDD_HBM ride the BER-curve offset,
+    VDD_CORE the leakage spread — per-rail orderings genuinely differ, as
+    they do across real failure modes."""
+    base, spread = SOR_ONSETS[rail]
+    src = (fs.leakage_scale if rail == "VDD_CORE" else fs.error_sensitivity)
+    return base + spread * (jnp.asarray(src) - 1.0)
 
 
-def _frontier_error(v_io, v_onset, key, n_chips):
-    """Synthetic frontier-shaped measured error: crosses ERROR_BOUND exactly
-    at each chip's own onset, log-linear below it (steep transition band)."""
+def _frontier_error(v, v_onset, key, n_chips):
+    """Synthetic frontier-shaped observable: crosses ERROR_BOUND exactly at
+    each chip's own onset, log-linear below it (steep transition band)."""
     noise = 1.0 + 0.05 * jax.random.normal(key, (n_chips,))
     return ERROR_BOUND * noise * 10.0 ** jnp.clip(
-        SOR_LOG_SLOPE * (v_onset - v_io), -6.0, 3.0)
+        SOR_LOG_SLOPE * (v_onset - v), -6.0, 3.0)
 
 
 def _sor_rollout_fn(n_chips: int, learned: bool, steps: int):
     key = ("sor", n_chips, learned, steps)
     if key in _ROLLOUT_CACHE:
         return _ROLLOUT_CACHE[key]
-    ctrl = InGraphRailController(ClosedLoop(v_io_floor=SOR_POLICY_FLOOR),
-                                 sor=SOR_CFG if learned else None)
+    ctrl = InGraphRailController(
+        MultiRailClosedLoop(floors=dict(SOR_POLICY_FLOORS)),
+        sor=SOR_CFG if learned else None)
     fs = FleetSpec.sample(n_chips, seed=FLEET_SEED)
-    v_on = _onset_voltages(fs)
+    v_on = {r: _onset_voltages(fs, r) for r in SOR_POLICY_FLOORS}
 
     def round_fn(carry, k):
         plane, ss = carry
         plane, frame, metrics = account_fleet_and_observe(PROFILE, plane, fs)
+        k_io, k_core, k_hbm = jax.random.split(k, 3)
         frame = dataclasses.replace(
-            frame, grad_error=_frontier_error(plane.v_io, v_on, k, n_chips))
+            frame,
+            grad_error=_frontier_error(plane.v_io, v_on["VDD_IO"], k_io,
+                                       n_chips),
+            extras={**frame.extras,
+                    "straggle_rate": _frontier_error(
+                        plane.v_core, v_on["VDD_CORE"], k_core, n_chips),
+                    "hbm_error_rate": _frontier_error(
+                        plane.v_hbm, v_on["VDD_HBM"], k_hbm, n_chips)})
         if learned:
             plane, ss = ctrl.control_step_sor(plane, frame, ss)
         else:
@@ -254,21 +277,19 @@ def _sor_rollout(n_chips: int, learned: bool, steps: int = SOR_STEPS):
 
 def run_learned(fleet_sizes=SOR_FLEET_SIZES, steps: int = SOR_STEPS):
     """Learned-vs-static envelope comparison: same fleet, same policy, same
-    error world — the only difference is whether the controller consumes the
-    static shared envelope or the online-fitted per-chip SOR."""
+    per-rail error world — the only difference is whether the controller
+    consumes the static shared envelopes or the online-fitted per-rail
+    per-chip SOR. Each returned row carries a machine-readable `record`
+    (rail-power saving, per-rail learned-vs-static floors, wall time) that
+    `benchmarks/run.py --json-out` accumulates into the bench trajectory."""
     rows = []
     for n in fleet_sizes:
-        fs = FleetSpec.sample(n, seed=FLEET_SEED)
         (p_st, _, h_st), us_st = timed(
             lambda n=n: _sor_rollout(n, False, steps), repeats=1)
         (p_ln, ss, h_ln), us_ln = timed(
             lambda n=n: _sor_rollout(n, True, steps), repeats=1)
         est = ss.estimate
-        env = sor.safe_envelope(est, SOR_CFG)
-        floors = np.asarray(env.floor(_STATIC_IO_FLOOR))
-        conf = np.asarray(est.confidence)
-        below = int((floors < _STATIC_IO_FLOOR - 1e-4).sum())
-        headroom = np.clip(_STATIC_IO_FLOOR - floors, 0.0, None)
+        envs = sor.rail_envelopes(est, SOR_CFG)
         # the paper's headline metric is rail POWER reduction; energy is
         # reported too but couples back through step time (undervolted ICI
         # slows collectives), so it can move either way per profile
@@ -277,24 +298,52 @@ def run_learned(fleet_sizes=SOR_FLEET_SIZES, steps: int = SOR_STEPS):
         p_mean_ln = float(jnp.mean(h_ln["power_w"][-tail:]))
         e_st = float(jnp.sum(p_st.energy_j))
         e_ln = float(jnp.sum(p_ln.energy_j))
-        # safety: the modeled error at the operating points the learned run
-        # actually holds stays at/below the configured bound
-        modeled = np.asarray(est.log10_error_at(p_ln.v_io))
-        worst_modeled = (float(modeled[conf > 0].max())
-                         if (conf > 0).any() else float("nan"))
-        rows.append(row(
+        saving_pct = 100 * (1 - p_mean_ln / p_mean_st)
+
+        rail_records = {}
+        derived_rails = []
+        for i, spec in enumerate(SOR_CFG.rails):
+            rail = spec.rail
+            static_floor = _STATIC_FLOORS[rail]
+            floors = np.asarray(envs[rail].floor(static_floor))
+            conf = np.asarray(est.confidence[i])
+            below = int((floors < static_floor - 1e-4).sum())
+            headroom = np.clip(static_floor - floors, 0.0, None)
+            # safety: the modeled observable at the operating points the
+            # learned run actually holds stays at/below the rail's bound
+            held = getattr(p_ln, spec.voltage)
+            modeled = np.asarray(est.rail(i).log10_error_at(held))
+            worst_modeled = (float(modeled[conf > 0].max())
+                             if (conf > 0).any() else float("nan"))
+            rail_records[rail] = {
+                "static_floor_v": float(static_floor),
+                "chips_below_static": below,
+                "headroom_mean_mv": float(1e3 * headroom.mean()),
+                "headroom_max_mv": float(1e3 * headroom.max()),
+                "conf_mean": float(conf.mean()),
+                "worst_modeled_log10err": worst_modeled,
+                "bound_log10": math.log10(ERROR_BOUND),
+            }
+            derived_rails.append(
+                f"{rail}:below={below}/{n} "
+                f"headroom={1e3 * headroom.mean():.1f}mV "
+                f"conf={conf.mean():.2f} "
+                f"log10err={worst_modeled:.2f}")
+
+        record = {
+            "n_chips": n, "steps": steps,
+            "power_saving_pct": saving_pct,
+            "energy_delta_pct": 100 * (e_ln / e_st - 1),
+            "wall_time_us": {"static": us_st, "learned": us_ln},
+            "rails": rail_records,
+        }
+        rows.append({**row(
             f"sor.{n}chips.learned_vs_static", us_ln,
-            f"power_saving={100 * (1 - p_mean_ln / p_mean_st):.1f}% "
+            f"power_saving={saving_pct:.1f}% "
             f"energy_delta={100 * (e_ln / e_st - 1):+.1f}% "
-            f"chips_below_static={below}/{n} "
-            f"headroom_mean={1e3 * headroom.mean():.1f}mV "
-            f"max={1e3 * headroom.max():.1f}mV "
-            f"conf_mean={conf.mean():.2f} "
-            f"worst_modeled_log10err={worst_modeled:.2f} "
-            f"(bound {math.log10(ERROR_BOUND):.2f}) "
-            f"v_io=[{float(jnp.min(p_ln.v_io)):.3f},"
-            f"{float(jnp.max(p_ln.v_io)):.3f}] "
-            f"static_floor={_STATIC_IO_FLOOR:.2f} steps={steps}"))
+            + " ".join(derived_rails)
+            + f" (bound {math.log10(ERROR_BOUND):.2f}) steps={steps}"),
+            "record": record})
     return rows
 
 

@@ -1,13 +1,21 @@
 """Benchmark harness (deliverable d): one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV and writes reports/bench_results.json.
+
+``--only SUBSTR`` runs just the modules whose name contains SUBSTR.
+``--json-out PATH`` additionally writes a structured perf record for the
+fleet-frontier learned-vs-static comparison (rail-power saving %, per-rail
+learned-vs-static floors, wall time) — ``reports/BENCH_fleet_frontier.json``
+by convention, so the bench trajectory accumulates across PRs.
 """
 
 from __future__ import annotations
 
+import argparse
 import importlib
 import json
 import os
 import sys
+import time
 import traceback
 
 MODULES = [
@@ -29,10 +37,22 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only modules whose name contains SUBSTR")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write the fleet_frontier structured perf record "
+                         "(e.g. reports/BENCH_fleet_frontier.json)")
+    args = ap.parse_args(argv)
+
+    modules = [m for m in MODULES if args.only is None or args.only in m]
+    if not modules:
+        sys.exit(f"no benchmark module matches {args.only!r}")
     all_rows = []
     failures = 0
-    for name in MODULES:
+    t0 = time.perf_counter()
+    for name in modules:
         try:
             # "module" runs module.run(); "module:fn" runs module.fn()
             mod_name, _, fn_name = name.partition(":")
@@ -44,14 +64,45 @@ def main() -> None:
             traceback.print_exc()
             all_rows.append({"name": f"{name}.FAILED", "us_per_call": 0.0,
                              "derived": "see traceback"})
+    wall_s = time.perf_counter() - t0
     print("\nname,us_per_call,derived")
     for r in all_rows:
         print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
     os.makedirs("reports", exist_ok=True)
-    with open("reports/bench_results.json", "w") as f:
-        json.dump(all_rows, f, indent=1)
-    print(f"\n{len(all_rows)} rows, {failures} module failures "
-          f"-> reports/bench_results.json")
+    if args.only is None:
+        # only a full run may overwrite the canonical results file — a
+        # filtered run would clobber it with a subset
+        with open("reports/bench_results.json", "w") as f:
+            json.dump(all_rows, f, indent=1)
+        print(f"\n{len(all_rows)} rows, {failures} module failures "
+              f"-> reports/bench_results.json")
+    else:
+        print(f"\n{len(all_rows)} rows, {failures} module failures "
+              f"(--only run: reports/bench_results.json left untouched)")
+
+    if args.json_out:
+        # the structured perf record: every row that carries a machine-
+        # readable `record` (fleet_frontier's learned-vs-static comparison)
+        # — the across-PR bench trajectory entry. Per-bench timing lives in
+        # each record's wall_time_us; run_wall_time_s covers whatever
+        # module set THIS invocation ran (named, so runs with different
+        # --only selections are not compared as if commensurate).
+        records = [{"name": r["name"], "us_per_call": r["us_per_call"],
+                    **r["record"]} for r in all_rows if "record" in r]
+        if records:
+            out = {"bench": "fleet_frontier", "modules_run": modules,
+                   "run_wall_time_s": round(wall_s, 3),
+                   "failures": failures, "records": records}
+            os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+            with open(args.json_out, "w") as f:
+                json.dump(out, f, indent=1)
+            print(f"perf record ({len(records)} entries) -> {args.json_out}")
+        else:
+            # a selection that ran no record-emitting module must not
+            # clobber the accumulated trajectory entry with an empty file
+            print(f"no perf records produced; {args.json_out} left "
+                  f"untouched")
+
     if failures:
         sys.exit(1)
 

@@ -81,6 +81,44 @@ def remap_plane(plane, target: FleetSpec):
     )
 
 
+def remap_sor(sor_state, target):
+    """Explicitly remap a restored `sor.SorState` onto a `target` fleet
+    (a FleetSpec or an int chip count) of a possibly different size — the
+    learned-region counterpart of `remap_plane`: chips 0..min(n_old,
+    n_new)-1 keep their learned telemetry window and fitted frontier;
+    joining chips start empty, which is ZERO confidence — the cold-start
+    pin — so a joiner runs at static envelopes until its own telemetry
+    accrues. Returns the state unchanged when the sizes already match."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    n_new = target.n_chips if hasattr(target, "n_chips") else int(target)
+    hist = sor_state.history
+    chip = hist.chip_shape
+    if not chip:
+        raise ValueError("remap_sor needs a fleet-shaped ([n_chips]) "
+                         "SorState; a scalar learner has nothing to remap")
+    n_old = chip[0]
+    if n_old == n_new:
+        return sor_state
+    k = min(n_old, n_new)
+
+    def take(a):
+        a = jnp.asarray(a)
+        z = jnp.zeros(a.shape[:-1] + (n_new,), a.dtype)
+        return z.at[..., :k].set(a[..., :k])
+
+    return _dc.replace(
+        sor_state,
+        history=_dc.replace(
+            hist, v=take(hist.v), obs=take(hist.obs),
+            age_s=take(hist.age_s), polled=take(hist.polled),
+            valid=take(hist.valid)),
+        estimate=jax.tree_util.tree_map(take, sor_state.estimate))
+
+
 def _path_key(k) -> str:
     """One path entry -> stable string: DictKey.key, GetAttrKey.name
     (registered dataclasses like PowerPlaneState), SequenceKey.idx. Falling
@@ -133,6 +171,16 @@ class CheckpointManager:
         host = {name: _flatten(tree) for name, tree in state.items()}
         bf16_mask = {name: {k: str(v.dtype) for k, v in flat.items()}
                      for name, flat in host.items()}
+        # learned-region groups (sor.SorState) record their full rail
+        # layout — names AND observable keys/bounds — so a restore under a
+        # different SorConfig.rails cannot silently misassign one rail's
+        # learned frontier to another, or relabel a frontier cut at one
+        # bound as an envelope for a different one
+        sor_rails = {name: {"rails": [dataclasses.asdict(s)
+                                      for s in tree.history.rails],
+                            "capacity": int(tree.history.capacity)}
+                     for name, tree in state.items()
+                     if hasattr(getattr(tree, "history", None), "rails")}
         fleet_arrays = ({f: np.asarray(getattr(fleet, f))
                          for f in _FLEET_FIELDS} if fleet is not None else None)
         fleet_meta = ({"n_chips": fleet.n_chips, "seed": fleet.seed,
@@ -143,6 +191,8 @@ class CheckpointManager:
             os.makedirs(path, exist_ok=True)
             arrays = {}
             manifest = {"step": step, "groups": {}, "time": time.time()}
+            if sor_rails:
+                manifest["sor_rails"] = sor_rails
             if fleet_meta is not None:
                 manifest["fleet"] = fleet_meta
                 for f, v in fleet_arrays.items():
@@ -218,10 +268,16 @@ class CheckpointManager:
         return FleetSpec(base=base, seed=int(meta["seed"]), **arrs)
 
     def restore(self, state_like: dict[str, Any], step: int | None = None,
-                shardings: dict[str, Any] | None = None) -> tuple[int, dict]:
+                shardings: dict[str, Any] | None = None,
+                optional: tuple = ()) -> tuple[int, dict]:
         """Restore into the structure of `state_like`. If `shardings` maps
         group name -> NamedSharding pytree, leaves are device_put sharded
-        (elastic restore onto a different mesh)."""
+        (elastic restore onto a different mesh). A group the checkpoint
+        never recorded raises KeyError — unless named in `optional`, in
+        which case it is skipped (absent from the returned dict): that is
+        how a SOR-enabled trainer restores a pre-SOR checkpoint and keeps
+        its in-memory cold start, without a missing REQUIRED group (renamed
+        key, truncated manifest) silently restarting from fresh state."""
         import jax.numpy as jnp
         if step is None:
             step = self.latest_step()
@@ -233,6 +289,31 @@ class CheckpointManager:
         with np.load(os.path.join(path, "arrays.npz")) as z:
             out = {}
             for name, tree in state_like.items():
+                if name not in manifest["groups"]:
+                    if name in optional:
+                        continue
+                    raise KeyError(
+                        f"checkpoint step_{step:08d} has no state group "
+                        f"{name!r} (has {sorted(manifest['groups'])}); "
+                        f"pass optional=({name!r},) if the caller can "
+                        f"genuinely proceed without it")
+                saved = manifest.get("sor_rails", {}).get(name)
+                if saved is not None:
+                    hist = getattr(tree, "history", None)
+                    want = {"rails": [dataclasses.asdict(s) for s in
+                                      getattr(hist, "rails", ())],
+                            "capacity": int(getattr(hist, "capacity", 0))}
+                    if saved != want:
+                        # substituting the arrays would index one rail's
+                        # learned frontier as another's, relabel a frontier
+                        # cut at a different bound, or hand a window of the
+                        # wrong depth to the ring arithmetic — refuse loudly
+                        raise ValueError(
+                            f"checkpoint group {name!r} was learned under "
+                            f"rails/capacity {saved} but this run's "
+                            f"SorConfig declares {want}; restore with the "
+                            f"config the state was learned under (or drop "
+                            f"the group)")
                 flat = {}
                 for k, meta in manifest["groups"][name].items():
                     v = z[f"{name}::{k}"]

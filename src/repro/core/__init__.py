@@ -12,9 +12,12 @@ from repro.core.control_plane import (
     InGraphRailController, RailController, as_controller, worst_chip_pinned,
 )
 from repro.core.sor import (
-    SafeEnvelope, SorConfig, SorEstimate, SorState, safe_envelope,
+    SafeEnvelope, SorConfig, SorEstimate, SorState, rail_envelopes,
+    safe_envelope,
 )
-from repro.core.telemetry import FrameHistory, TelemetryFrame
+from repro.core.telemetry import (
+    ALL_RAIL_OBSERVABLES, FrameHistory, RailObservable, TelemetryFrame,
+)
 from repro.core.fleet import FleetPowerManager, SegmentPollStats
 from repro.core.hwspec import V5E, ChipSpec, FleetSpec
 from repro.core.power_manager import ControlPath, Opcode, PowerManager, Thresholds
@@ -27,14 +30,15 @@ from repro.core.settling import settling_time
 from repro.core.transceiver import GtxLinkModel
 
 __all__ = [
-    "ChipSpec", "ControlPath", "FleetPowerManager", "FleetSpec",
-    "FrameHistory", "GtxLinkModel", "HostDecisionController",
+    "ALL_RAIL_OBSERVABLES", "ChipSpec", "ControlPath", "FleetPowerManager",
+    "FleetSpec", "FrameHistory", "GtxLinkModel", "HostDecisionController",
     "HostPowerController", "HostRailController", "InGraphRailController",
     "KC705_RAIL_MAP", "Opcode", "PowerManager", "PowerPlaneState",
-    "RailController", "RailMap", "SafeEnvelope", "SegmentPollStats",
-    "SorConfig", "SorEstimate", "SorState", "StepProfile",
-    "TPU_V5E_RAIL_MAP", "TelemetryFrame", "Thresholds", "V5E",
-    "account_step", "account_step_fleet", "as_controller", "fleet_summary",
-    "linear11_decode", "linear11_encode", "linear16_decode",
-    "linear16_encode", "safe_envelope", "settling_time", "worst_chip_pinned",
+    "RailController", "RailMap", "RailObservable", "SafeEnvelope",
+    "SegmentPollStats", "SorConfig", "SorEstimate", "SorState",
+    "StepProfile", "TPU_V5E_RAIL_MAP", "TelemetryFrame", "Thresholds",
+    "V5E", "account_step", "account_step_fleet", "as_controller",
+    "fleet_summary", "linear11_decode", "linear11_encode",
+    "linear16_decode", "linear16_encode", "rail_envelopes", "safe_envelope",
+    "settling_time", "worst_chip_pinned",
 ]

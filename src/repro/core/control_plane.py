@@ -113,6 +113,8 @@ def worst_chip_pinned(plane: PowerPlaneState, request: RailRequest | None,
     signal rather than letting the envelope absorb unbounded demand."""
     if request is None or request.v_io is None:
         return False
+    from repro.core.sor import envelope_for
+    envelope = envelope_for(envelope, "VDD_IO")   # dict or single spelling
     r = rail_map.by_name("VDD_IO")
     floor = (envelope.floor(r.v_min) if envelope is not None
              else jnp.float32(r.v_min))
@@ -129,6 +131,19 @@ def _has_decide(policy: Any) -> bool:
     return fn is not None and fn is not Policy.decide
 
 
+def require_decide_for_sor(policy: Any) -> None:
+    """A controller configured with sor= runs decide_env + envelope-clamped
+    arbitration — the legacy update_* path ignores envelopes entirely, so a
+    legacy policy under SOR would LEARN regions that are never consumed.
+    Reject loudly instead of silently no-op'ing the learned control."""
+    if policy is not None and not _has_decide(policy):
+        raise ValueError(
+            "sor= needs a decide(state, frame) policy; "
+            f"{getattr(policy, 'name', type(policy).__name__)} only "
+            "implements the legacy update_* API, which ignores learned "
+            "envelopes — the SOR state would be fitted but never consumed")
+
+
 def validate_in_graph_sor(cfg: Any) -> None:
     """In-graph SOR has no bus: the only observations it can learn from are
     the frames the decision consumes, so `ingest="polled"` (the host
@@ -139,6 +154,29 @@ def validate_in_graph_sor(cfg: Any) -> None:
             "in-graph SOR learns from the frames the decision consumes; "
             "use SorConfig(ingest='frames') (ingest='polled' is the "
             "HostRailController READ_VOUT path)")
+
+
+def with_sor(controller: Any, sor_cfg: Any) -> Any:
+    """One implementation of "give this in-graph controller a SorConfig"
+    for every consumer (fleet train step, serve engine): validates the
+    config and the policy, and NEVER mutates a caller-owned controller —
+    a controller without SOR is rebuilt with the config; one already
+    carrying the SAME config passes through; a different config is a loud
+    conflict."""
+    validate_in_graph_sor(sor_cfg)
+    if not hasattr(controller, "control_step_sor"):
+        raise ValueError(
+            "sor= needs an InGraphRailController (or a bare policy); got "
+            f"{type(controller).__name__}")
+    require_decide_for_sor(controller.policy)
+    if controller.sor is not None:
+        if controller.sor != sor_cfg:
+            raise ValueError(
+                "conflicting SorConfig: the controller already carries its "
+                "own sor=; configure it in one place")
+        return controller
+    return InGraphRailController(controller.policy, name=controller.name,
+                                 rail_map=controller.rail_map, sor=sor_cfg)
 
 
 def _concrete_or_none(tree):
@@ -164,14 +202,17 @@ def _run_policy(policy: Any, plane: PowerPlaneState, frame: TelemetryFrame,
     (arbitrated plane, the pre-arbitration request) — the request is None on
     the legacy path, which never speaks decision-as-data.
 
-    `envelope` is a learned VDD_IO `sor.SafeEnvelope`: it warm-starts the
-    decision (policy.decide_env) and tightens/extends the arbitration clamp
-    for that rail, in one place for both controllers."""
+    `envelope` is the learned `sor.SafeEnvelope` state — a single VDD_IO
+    envelope (historical spelling) or a {rail name: SafeEnvelope} dict
+    covering every fitted rail: it warm-starts the decision
+    (policy.decide_env) and tightens/extends the arbitration clamp for those
+    rails, in one place for both controllers."""
     if _has_decide(policy):
         if envelope is not None:
+            from repro.core.sor import as_envelopes
             request = policy.decide_env(plane, frame, envelope)
             arbitrated = arbitrate(plane, request, rail_map,
-                                   envelopes={"VDD_IO": envelope})
+                                   envelopes=as_envelopes(envelope))
         else:
             request = policy.decide(plane, frame)
             arbitrated = arbitrate(plane, request, rail_map)
@@ -254,6 +295,8 @@ class InGraphRailController:
         if policy is None:
             raise ValueError("InGraphRailController needs a policy")
         validate_in_graph_sor(sor)
+        if sor is not None:
+            require_decide_for_sor(policy)
         self.policy = policy
         self.rail_map = rail_map
         self.sor = sor
@@ -288,7 +331,7 @@ class InGraphRailController:
             raise ValueError("control_step_sor needs sor=SorConfig()")
         frame = as_frame(telemetry, state=plane)
         sor_state = _sor.observe(sor_state, frame, self.sor)
-        env = _sor.safe_envelope(sor_state.estimate, self.sor)
+        env = _sor.rail_envelopes(sor_state.estimate, self.sor)
         plane, request = _run_policy(
             self.policy, plane, frame, telemetry, self.rail_map, host=False,
             envelope=env)
@@ -379,6 +422,14 @@ class HostRailController:
                 "decide_from='poll' needs a decide(state, frame) policy; "
                 f"{getattr(policy, 'name', type(policy).__name__)} only "
                 "implements the legacy update_* API")
+        if sor is not None:
+            if policy is None:
+                # pure-actuation controllers never run decide(), so the
+                # learner would silently never see an observation
+                raise ValueError("sor= needs a policy: an actuate-only "
+                                 "HostRailController never decides, so "
+                                 "nothing would ever feed the learner")
+            require_decide_for_sor(policy)
         self.policy = policy
         self.spec = spec
         self.settle_band_frac = settle_band_frac
@@ -437,13 +488,18 @@ class HostRailController:
     def _sor_observe(self, plane: PowerPlaneState, frame: TelemetryFrame,
                      sampled: TelemetryFrame | None = None) -> Any:
         """Feed the SOR learner one observation and return the current
-        envelope. With `ingest="polled"` (default) the history ingests the
-        *raw* `FleetPowerManager.poll_frame` samples — NaN where a lane was
-        never sampled, so chips with no real READ_VOUT telemetry record
-        nothing and the envelope stays bit-exactly static (cold-start pin);
-        `ingest="frames"` learns from whatever frame the decision consumed
-        (EXACT oracle values included). `sampled` reuses a poll sweep the
-        caller already took this round instead of sweeping the bus twice."""
+        per-rail envelopes ({rail: sor.SafeEnvelope}). With
+        `ingest="polled"` (default) the history ingests the *raw*
+        `FleetPowerManager.poll_frame` samples — NaN where a lane was never
+        sampled, so chips with no real READ_VOUT telemetry record nothing
+        and the envelopes stay bit-exactly static (cold-start pin) — with
+        the per-rail failure observables the fit needs overlaid from the
+        decision frame (`sor.merge_observables`: a rail whose observable
+        the caller never reported records NaN and that rail's lane simply
+        stays invalid); `ingest="frames"` learns from whatever frame the
+        decision consumed (EXACT oracle values included). `sampled` reuses
+        a poll sweep the caller already took this round instead of sweeping
+        the bus twice."""
         from repro.core import sor as _sor
         batched = jnp.ndim(plane.v_core) >= 1
         if self.sor_state is None:
@@ -451,7 +507,7 @@ class HostRailController:
                 self.sor, plane.v_core.shape[0] if batched else None)
         if self.sor.ingest == "polled":
             raw = sampled if sampled is not None else self.fleet.poll_frame()
-            sample = dataclasses.replace(raw, grad_error=frame.grad_error)
+            sample = _sor.merge_observables(raw, frame, self.sor)
             if not batched:
                 sample = dataclasses.replace(
                     sample, v_core=sample.v_core[0], v_hbm=sample.v_hbm[0],
@@ -459,7 +515,7 @@ class HostRailController:
         else:
             sample = frame
         self.sor_state = _sor.observe(self.sor_state, sample, self.sor)
-        return _sor.safe_envelope(self.sor_state.estimate, self.sor)
+        return _sor.rail_envelopes(self.sor_state.estimate, self.sor)
 
     def sor_summary(self) -> dict | None:
         """Host-side view of the learned safe operating regions (None until

@@ -356,10 +356,19 @@ class FleetPowerManager:
         the SOR learner records the chip as having no sample).
 
         `grad_error` optionally merges the caller's measured-error telemetry
-        (the one non-electrical input the BER-frontier fit needs) onto the
-        sampled frame — this is how `poll_frame` feeds `telemetry.
-        FrameHistory` without pretending the error came off the bus."""
-        from repro.core.telemetry import Provenance, TelemetryFrame
+        (the non-electrical inputs the frontier fits need) onto the sampled
+        frame — this is how `poll_frame` feeds `telemetry.FrameHistory`
+        without pretending the error came off the bus. It is either the
+        historical scalar/array (the VDD_IO measured error, recorded under
+        the `grad_error` field alone) or a dict keyed by RAIL NAME mapping
+        each rail to its own failure observable
+        (`telemetry.RAIL_OBSERVABLE_KEYS` places them: VDD_IO ->
+        `grad_error`, VDD_CORE -> `straggle_rate`, VDD_HBM ->
+        `hbm_error_rate`). Rails missing from the dict record NaN — an
+        invalid sample for that rail's fit — instead of silently attributing
+        another rail's error to it."""
+        from repro.core.telemetry import (RAIL_OBSERVABLE_KEYS, Provenance,
+                                          TelemetryFrame)
         fields = {"VDD_CORE": "v_core", "VDD_HBM": "v_hbm", "VDD_IO": "v_io"}
         lanes, names = [], []
         for rail in self.rail_map:
@@ -369,13 +378,25 @@ class FleetPowerManager:
         vals, ages = self.poll_observation(lanes)
         kw = {name: vals[:, j].astype(np.float32)
               for j, name in enumerate(names)}
-        if grad_error is not None:
+        extras: dict = {}
+        if isinstance(grad_error, dict):
+            unknown = set(grad_error) - set(RAIL_OBSERVABLE_KEYS)
+            if unknown:
+                raise ValueError(
+                    f"unknown rail(s) {sorted(unknown)} in grad_error dict; "
+                    f"known: {sorted(RAIL_OBSERVABLE_KEYS)}")
+            # missing rails record NaN -> an invalid sample for that rail
+            kw["grad_error"] = grad_error.get("VDD_IO", math.nan)
+            for rail, key in RAIL_OBSERVABLE_KEYS.items():
+                if rail != "VDD_IO":
+                    extras[key] = grad_error.get(rail, math.nan)
+        elif grad_error is not None:
             kw["grad_error"] = grad_error
         # max over lanes, NaN-aware without the all-NaN-slice warning
         masked = np.where(np.isnan(ages), -np.inf, ages)
         age = masked.max(axis=1, initial=-np.inf)
         age = np.where(np.isinf(age), np.nan, age)
-        return TelemetryFrame(age_s=age.astype(np.float32),
+        return TelemetryFrame(age_s=age.astype(np.float32), extras=extras,
                               provenance=Provenance.POLLED, **kw)
 
     # -- telemetry --------------------------------------------------------------

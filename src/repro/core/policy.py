@@ -113,6 +113,16 @@ def _nom(anchor, fallback: float):
             else jnp.asarray(anchor, jnp.float32))
 
 
+def _rail_env(envelope, rail: str):
+    """Normalize a `decide_env` envelope argument: controllers pass either
+    the historical single VDD_IO `sor.SafeEnvelope` or the multi-rail
+    {rail name: SafeEnvelope} dict; policies read one rail's envelope (None
+    when that rail is unfitted). One implementation — sor.envelope_for —
+    so policies and arbitration can never disagree on the spelling."""
+    from repro.core.sor import envelope_for
+    return envelope_for(envelope, rail)
+
+
 def _obs(observed, state_value):
     """A rail observation from the frame, falling back to the oracle state
     when the frame carries none (pure-metrics legacy dicts)."""
@@ -133,11 +143,13 @@ class Policy:
 
     def decide_env(self, state: PowerPlaneState, frame: TelemetryFrame,
                    envelope=None) -> RailRequest:
-        """decide() under a learned per-chip `sor.SafeEnvelope`. Controllers
-        with a live SOR estimate call this; envelope-aware policies override
-        it to warm-start from the fitted frontier (confidence-blended so
-        zero confidence is bit-identical to decide()). The base simply
-        ignores the envelope, so every policy stays callable either way."""
+        """decide() under learned per-chip `sor.SafeEnvelope`s — a single
+        VDD_IO envelope (historical spelling) or a {rail name: SafeEnvelope}
+        dict covering every fitted rail. Controllers with a live SOR
+        estimate call this; envelope-aware policies override it to
+        warm-start from the fitted frontiers (confidence-blended so zero
+        confidence is bit-identical to decide()). The base simply ignores
+        the envelope, so every policy stays callable either way."""
         return self.decide(state, frame)
 
     def _decides(self) -> bool:
@@ -213,6 +225,7 @@ class BERBounded(Policy):
         return self.decide_env(state, frame, self.envelope)
 
     def decide_env(self, state, frame, envelope=None):
+        envelope = _rail_env(envelope, "VDD_IO")
         err = frame.grad_error
         # hysteresis: escalate when comfortably under bound, retreat when over
         lvl = state.comp_level
@@ -246,27 +259,36 @@ class PhaseAware(Policy):
     name: str = "phase-aware"
 
     def decide(self, state, frame):
+        return self.decide_env(state, frame, None)
+
+    def decide_env(self, state, frame, envelope=None):
         t_comp = frame.t_comp_s
         t_mem = frame.t_mem_s
         t_coll = frame.t_coll_s
         t_dom = jnp.maximum(t_comp, jnp.maximum(t_mem, t_coll))
         target = t_dom * (1.0 - self.margin)
 
-        def scaled(v_nom, v_min, t_mine):
+        def scaled(rail, v_nom, v_min, t_mine):
             # f ∝ v: slowing this rail by t_mine/target keeps it under the
-            # dominant term; clamp to the rail's platform safety envelope
-            # (paper §VII-B: per-rail envelopes are platform-defined).
+            # dominant term; clamp to the rail's safety envelope — the
+            # platform constant (paper §VII-B), or that rail's learned
+            # per-chip floor when the controller carries a fitted one
+            # (confidence-blended: zero confidence == the static clamp).
+            env = _rail_env(envelope, rail)
+            lo = jnp.float32(v_min) if env is None else env.floor(v_min)
             s = jnp.clip(t_mine / target, 0.0, 1.0)
-            return jnp.maximum(jnp.asarray(v_nom, jnp.float32) * s,
-                               jnp.float32(v_min))
+            return jnp.maximum(jnp.asarray(v_nom, jnp.float32) * s, lo)
 
         from repro.core.rails import TPU_V5E_RAIL_MAP as rm
         return RailRequest(
-            v_core=scaled(_nom(frame.v_nom_core, self.spec.nominal_v_core),
+            v_core=scaled("VDD_CORE",
+                          _nom(frame.v_nom_core, self.spec.nominal_v_core),
                           rm.by_name("VDD_CORE").v_min, t_comp),
-            v_hbm=scaled(_nom(frame.v_nom_hbm, self.spec.nominal_v_hbm),
+            v_hbm=scaled("VDD_HBM",
+                         _nom(frame.v_nom_hbm, self.spec.nominal_v_hbm),
                          rm.by_name("VDD_HBM").v_min, t_mem),
-            v_io=scaled(_nom(frame.v_nom_io, self.spec.nominal_v_io),
+            v_io=scaled("VDD_IO",
+                        _nom(frame.v_nom_io, self.spec.nominal_v_io),
                         rm.by_name("VDD_IO").v_min, t_coll),
             reason="phase-slack",
         )
@@ -296,6 +318,7 @@ class ClosedLoop(Policy):
         return self.decide_env(state, frame, self.envelope)
 
     def decide_env(self, state, frame, envelope=None):
+        envelope = _rail_env(envelope, "VDD_IO")
         err = frame.grad_error
         v_io_obs = _obs(frame.v_io, state.v_io)
         ok = err <= self.error_bound
@@ -320,6 +343,84 @@ class ClosedLoop(Policy):
 
 
 @dataclasses.dataclass
+class MultiRailClosedLoop(Policy):
+    """The AIMD feedback walk generalized to every PMBus-addressable rail —
+    the paper's per-rail architecture as one policy. Each rail walks on its
+    *own* failure observable (the `telemetry.RAIL_OBSERVABLE_KEYS` canon:
+    measured gradient-domain error for VDD_IO, straggler rate for VDD_CORE,
+    HBM error rate for VDD_HBM): under the bound the rail steps down
+    (warm-started to the rail's learned per-chip floor as SOR confidence
+    accrues), over the bound it backs off multiplicatively toward nominal.
+    A rail whose observable the frame does not carry — or carries as NaN —
+    *holds position*: no blind walking on missing telemetry, and no
+    attributing another rail's error to it. Caveat: VDD_IO's observable is
+    the first-class `grad_error` field, which defaults to 0.0 rather than
+    absent — a frame built with no error telemetry therefore walks VDD_IO
+    down exactly as `ClosedLoop` always has (zero measured error == zero
+    measured error); pass `grad_error=nan` (what
+    `poll_frame(grad_error={...})` records for a missing VDD_IO entry) to
+    hold that rail too."""
+    error_bound: float = 5e-3
+    step_v: float = 0.005
+    backoff: float = 1.05
+    spec: ChipSpec = V5E
+    name: str = "multi-rail-closed-loop"
+    # per-rail static floors the walks stop at without a learned envelope;
+    # rails omitted from this dict are never walked (scoped control)
+    floors: dict = dataclasses.field(default_factory=lambda: {
+        "VDD_CORE": 0.65, "VDD_HBM": 0.95, "VDD_IO": 0.75})
+
+    def decide(self, state, frame):
+        return self.decide_env(state, frame, None)
+
+    def decide_env(self, state, frame, envelope=None):
+        from repro.core.telemetry import RAIL_OBSERVABLE_KEYS
+        rails = (
+            ("VDD_CORE", "v_core",
+             _nom(frame.v_nom_core, self.spec.nominal_v_core)),
+            ("VDD_HBM", "v_hbm",
+             _nom(frame.v_nom_hbm, self.spec.nominal_v_hbm)),
+            ("VDD_IO", "v_io",
+             _nom(frame.v_nom_io, self.spec.nominal_v_io)),
+        )
+        kw: dict[str, Any] = {}
+        for rail, field, v_nom in rails:
+            obs = frame.get(RAIL_OBSERVABLE_KEYS[rail])
+            if obs is None or rail not in self.floors:
+                # no observable, or the caller scoped `floors` to a subset
+                # of rails ("only walk VDD_IO"): hold this rail
+                continue
+            err = jnp.asarray(obs, jnp.float32)
+            v_obs = jnp.asarray(
+                _obs(getattr(frame, field), getattr(state, field)),
+                jnp.float32)
+            floor = jnp.float32(self.floors[rail])
+            env = _rail_env(envelope, rail)
+            if env is None:
+                v_down = jnp.maximum(v_obs - self.step_v, floor)
+            else:
+                floor_eff = env.floor(floor)
+                c = jnp.asarray(env.confidence, jnp.float32)
+                walk = v_obs - self.step_v
+                v_down = jnp.maximum(walk + c * (floor_eff - walk), floor_eff)
+            v_up = jnp.minimum(v_obs * self.backoff, v_nom)
+            v = jnp.where(err <= self.error_bound, v_down, v_up)
+            # NaN observable == "not measured this round": hold, don't walk
+            kw[field] = jnp.where(jnp.isnan(err), v_obs, v)
+        # compression escalates on the link observable, like ClosedLoop —
+        # and holds (not resets) when that observable is NaN/unmeasured,
+        # matching the voltage walks' hold-on-missing-telemetry contract
+        io_err = jnp.asarray(frame.grad_error, jnp.float32)
+        lvl = jnp.where(io_err <= self.error_bound,
+                        jnp.minimum(state.comp_level + 1,
+                                    ecollectives.LEVEL_INT8),
+                        jnp.int32(ecollectives.LEVEL_LOSSLESS))
+        lvl = jnp.where(jnp.isnan(io_err), state.comp_level, lvl)
+        return RailRequest(comp_level=lvl.astype(jnp.int32),
+                           reason="multi-rail-aimd", **kw)
+
+
+@dataclasses.dataclass
 class WorstChipGate(Policy):
     """Fleet-level reduction wrapper: every chip's decision is gated on the
     *worst* chip's error telemetry (the fleet version of the paper's bounded-
@@ -327,7 +428,10 @@ class WorstChipGate(Policy):
     margins this is the conservative fleet policy: no chip undervolts past
     what the worst chip's measured error allows."""
     inner: Policy = dataclasses.field(default_factory=lambda: BERBounded())
-    reduce_keys: tuple[str, ...] = ("grad_error",)
+    # every canonical rail observable reduces (keys absent from the frame
+    # are skipped, so single-rail telemetry behaves exactly as before)
+    reduce_keys: tuple[str, ...] = ("grad_error", "straggle_rate",
+                                    "hbm_error_rate")
     name: str = "worst-chip"
     # learned per-chip SOR envelope, forwarded to the inner policy: the
     # worst chip's *telemetry* gates everyone, but each chip keeps its own
@@ -412,4 +516,5 @@ class StalenessGuard(Policy):
 
 POLICIES = {p.name: p for p in
             (StaticNominal(), BERBounded(), PhaseAware(), ClosedLoop(),
-             WorstChipGate(BERBounded()), StalenessGuard(ClosedLoop()))}
+             MultiRailClosedLoop(), WorstChipGate(BERBounded()),
+             StalenessGuard(ClosedLoop()))}

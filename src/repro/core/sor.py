@@ -1,35 +1,45 @@
-"""Learned per-chip safe operating regions (paper §VIII future work, at
-fleet scale).
+"""Learned per-chip, per-rail safe operating regions (paper §VIII future
+work, at fleet scale).
 
 VolTune's headline result is a *bounded operating region*: undervolt the
 transceiver rail as far as the measured BER frontier allows (≈29.3% rail
 power at 10 Gbps with BER <= 1e-6) — and its future-work section asks for
-learning that region at runtime instead of hard-coding it. This module is
-that subsystem for the TPU adaptation (docs/sor.md):
+learning that region at runtime instead of hard-coding it. The paper's
+architecture is explicitly per-rail: every PMBus-addressable supply gets the
+same control path, and the bounded region exists on each rail with a
+different failure mode (BER on the SerDes rail, stragglers on the core rail,
+memory errors on the HBM rail). This module is that subsystem for the TPU
+adaptation (docs/sor.md):
 
     FrameHistory  ->  SorEstimate  ->  SafeEnvelope  ->  arbitration
-    (telemetry)       (fitted frontier)  (per-chip v_min)   (control_plane)
+    (telemetry)       (fitted frontiers)  (per-rail v_min)   (control_plane)
 
-* `telemetry.FrameHistory` — fixed-capacity ring of (voltage, measured
-  error, age, provenance) samples per chip, stacked jnp arrays so the whole
-  store jits/vmaps and rides a scan carry.
-* `SorEstimate` — each chip's fitted log10(error)-vs-voltage frontier:
-  slope + intercept from exponentially-weighted least squares over the
-  history window, the frontier voltage where the modeled error meets a
-  caller-chosen bound, and a confidence in [0, 1] that gates everything
-  downstream. All math is elementwise jnp over `[n_chips]` (Pallas-friendly:
-  the same streaming-reduction shape as kernels/fleet_telemetry.py).
-* `SafeEnvelope` — per-chip v_min/v_max derived from the fit at the bound,
-  *blended with the caller's static envelope by confidence*: at zero
-  confidence the envelope IS the static one (bit-exact — the cold-start
-  no-behavior-change pin), and the learned floor may extend below the static
-  floor by at most `max_extension_v` (bounded exploration).
+* `telemetry.FrameHistory` — fixed-capacity ring of (voltage, observable,
+  age, provenance) samples per rail x chip, stacked jnp arrays so the whole
+  store jits/vmaps and rides a scan carry. Which rails are fitted — and
+  which telemetry field each rail's failure observable comes from — is a
+  declarative `telemetry.RailObservable` tuple (`SorConfig.rails`).
+* `SorEstimate` — each (rail, chip)'s fitted log10(observable)-vs-voltage
+  frontier: slope + intercept from exponentially-weighted least squares over
+  the history window, the frontier voltage where the modeled observable
+  meets the rail's bound, and a confidence in [0, 1] that gates everything
+  downstream. All math is elementwise jnp over `[n_rails, *chip]`; the
+  per-chip x per-rail x per-window weighted sums run through the fused
+  streaming reduction `ops.sor_accumulate` (Pallas on TPU, the identical
+  jnp reference elsewhere).
+* `SafeEnvelope` — per-chip v_min/v_max for ONE rail, derived from the fit
+  at that rail's bound, *blended with the caller's static envelope by
+  confidence*: at zero confidence the envelope IS the static one (bit-exact
+  — the cold-start no-behavior-change pin), and the learned floor may extend
+  below the static floor by at most `max_extension_v` (bounded
+  exploration). `rail_envelopes` maps a multi-rail estimate to the
+  {rail: SafeEnvelope} dict `control_plane.arbitrate(envelopes=)` consumes.
 
-Consumers: `policy.BERBounded/ClosedLoop/WorstChipGate` warm-start their
-decisions from the envelope (`decide_env`), `control_plane.arbitrate` clamps
-requests against per-chip envelopes instead of the one shared rail envelope,
-and both controllers maintain the history/estimate on a configurable cadence
-(`SorConfig.refresh_every`).
+Consumers: `policy.BERBounded/ClosedLoop/WorstChipGate/MultiRailClosedLoop`
+warm-start their decisions from the envelopes (`decide_env`),
+`control_plane.arbitrate` clamps requests against per-chip envelopes instead
+of the shared rail envelopes, and both controllers maintain the
+history/estimate on a configurable cadence (`SorConfig.refresh_every`).
 """
 
 from __future__ import annotations
@@ -42,7 +52,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.telemetry import FrameHistory, TelemetryFrame
+from repro.core import telemetry as _telemetry
+from repro.core.telemetry import (ALL_RAIL_OBSERVABLES,
+                                  DEFAULT_RAIL_OBSERVABLES, FrameHistory,
+                                  RailObservable, TelemetryFrame)
+from repro.kernels import ops
 
 LOG10_ERR_FLOOR = -8.0   # zero-error samples clamp here (detection floor)
 LOG10_ERR_CEIL = 2.0
@@ -52,14 +66,19 @@ LOG10_ERR_CEIL = 2.0
 class SorConfig:
     """Knobs of the safe-operating-region learner.
 
-    `error_bound` is the measured-error bound the frontier is cut at (the
-    gradient-domain analogue of the paper's BER <= 1e-6); `guard_v` is the
-    guard band added above the fitted frontier voltage; `max_extension_v`
-    bounds how far below a consumer's *static* floor the learned floor may
-    reach (confidence-gated exploration, never a free fall)."""
+    `rails` declares the fitted rails and their observables (default: the
+    VDD_IO BER frontier alone — the single-rail learner; pass
+    `telemetry.ALL_RAIL_OBSERVABLES` for the full three-rail fit).
+    `error_bound` is the measured-observable bound each frontier is cut at
+    (the gradient-domain analogue of the paper's BER <= 1e-6), overridable
+    per rail via `RailObservable.error_bound`; `guard_v` is the guard band
+    added above the fitted frontier voltage (per-rail override:
+    `RailObservable.guard_v`); `max_extension_v` bounds how far below a
+    consumer's *static* floor the learned floor may reach (confidence-gated
+    exploration, never a free fall)."""
     capacity: int = 32           # history window (samples per chip)
     refresh_every: int = 4       # observations between estimate refreshes
-    error_bound: float = 5e-3    # frontier cut: modeled error == this bound
+    error_bound: float = 5e-3    # frontier cut: modeled observable == this
     guard_v: float = 0.010       # volts of guard band above the frontier
     decay: float = 0.92          # per-slot recency decay of the EWLS weights
     update_gain: float = 1.0     # EW blend of a refit into the running fit
@@ -73,6 +92,7 @@ class SorConfig:
     ingest: str = "polled"       # "polled": learn only from READ_VOUT
     #                              samples; "frames": learn from whatever
     #                              frame the decision consumed (EXACT ok)
+    rails: tuple = DEFAULT_RAIL_OBSERVABLES   # RailObservable per fitted rail
 
     def __post_init__(self):
         if self.ingest not in ("polled", "frames"):
@@ -82,6 +102,14 @@ class SorConfig:
             raise ValueError(f"decay must be in (0, 1], got {self.decay}")
         if self.refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
+        object.__setattr__(self, "rails", _telemetry.validate_rails(self.rails))
+
+    @property
+    def n_rails(self) -> int:
+        return len(self.rails)
+
+    def rail_index(self, name: str) -> int:
+        return _telemetry.rail_index(self.rails, name)
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -90,55 +118,74 @@ class SorConfig:
          meta_fields=[])
 @dataclasses.dataclass(frozen=True)
 class SorEstimate:
-    """One chip's (or `[n_chips]`-batched) fitted BER frontier:
-    log10(error)(v) ~= intercept + slope * v, with `v_frontier` the voltage
-    where the model meets the configured bound and `confidence` in [0, 1]
-    gating every consumer. Zero confidence == no opinion (cold start)."""
-    intercept: Any    # f32 [] or [n_chips]
-    slope: Any        # f32 — d log10(err)/dV, negative when healthy
-    v_frontier: Any   # f32 — modeled log10(err) == log10(bound) here
+    """The fitted frontiers, `[n_rails]` or `[n_rails, n_chips]`:
+    log10(observable)(v) ~= intercept + slope * v per (rail, chip), with
+    `v_frontier` the voltage where the model meets the rail's configured
+    bound and `confidence` in [0, 1] gating every consumer. Zero confidence
+    == no opinion (cold start)."""
+    intercept: Any    # f32 [n_rails, *chip]
+    slope: Any        # f32 — d log10(obs)/dV, negative when healthy
+    v_frontier: Any   # f32 — modeled log10(obs) == log10(bound) here
     confidence: Any   # f32 in [0, 1]
     n_eff: Any        # f32 — effective (decayed) sample count behind the fit
 
     @staticmethod
-    def init(n_chips: int | None = None) -> "SorEstimate":
-        shape = () if n_chips is None else (n_chips,)
+    def init(n_chips: int | None = None, n_rails: int = 1) -> "SorEstimate":
+        shape = (n_rails,) if n_chips is None else (n_rails, n_chips)
         z = jnp.zeros(shape, jnp.float32)
         return SorEstimate(intercept=z, slope=z, v_frontier=z,
                            confidence=z, n_eff=z)
 
+    @property
+    def n_rails(self) -> int:
+        return self.confidence.shape[0]
+
+    def rail(self, i: int) -> "SorEstimate":
+        """One rail's estimate (fields shaped [*chip])."""
+        return jax.tree_util.tree_map(lambda a: a[i], self)
+
     def log10_error_at(self, v) -> jnp.ndarray:
-        """Modeled log10(error) at rail voltage `v` (elementwise)."""
+        """Modeled log10(observable) at voltage `v` (elementwise)."""
         return self.intercept + self.slope * jnp.asarray(v, jnp.float32)
 
 
+def _rail_bounds(cfg: SorConfig, chip_ndim: int) -> jnp.ndarray:
+    """[n_rails, 1...] log10 frontier bounds, per-rail overrides applied."""
+    b = np.log10([s.error_bound if s.error_bound is not None
+                  else cfg.error_bound for s in cfg.rails])
+    return jnp.asarray(b, jnp.float32).reshape(
+        (len(cfg.rails),) + (1,) * chip_ndim)
+
+
 def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
-    """Exponentially-weighted least squares of log10(error) against the
-    VDD_IO observation over the history window — elementwise per chip, pure
-    jnp (jit/vmap/scan safe; the same [window, n_chips] streaming-reduction
-    shape the Pallas fleet-telemetry kernel handles at scale).
+    """Exponentially-weighted least squares of log10(observable) against the
+    rail-voltage observation over the history window — elementwise per
+    (rail, chip), pure jnp (jit/vmap/scan safe). The five weighted sums are
+    one fused streaming reduction over the window axis (`ops.sor_accumulate`
+    — the Pallas fleet-telemetry kernel on TPU, bit-identical jnp reference
+    elsewhere).
 
     Confidence gates on three things at once: enough effective samples
     (`conf_samples` ramp), enough voltage spread to identify a slope
     (`min_spread_v`), and a frontier with the right sign and steepness
-    (`min_slope`; error must *grow* as voltage drops)."""
+    (`min_slope`; the observable must *grow* as voltage drops)."""
     eps = jnp.float32(1e-9)
     w = history.recency_weights(cfg.decay)
     if cfg.age_halflife_s is not None:
         # POLLED samples that were already stale when observed carry less
         # weight (halving per age_halflife_s of recorded staleness)
-        w = w * 0.5 ** (history.age_s / jnp.float32(cfg.age_halflife_s))
-    x = jnp.where(history.valid, history.v_io, 0.0)
+        w = w * 0.5 ** (history.age_s[:, None]
+                        / jnp.float32(cfg.age_halflife_s))
+    x = jnp.where(history.valid, history.v, 0.0)
     y = jnp.clip(
-        jnp.log10(jnp.maximum(history.error, 10.0 ** LOG10_ERR_FLOOR)),
+        jnp.log10(jnp.maximum(history.obs, 10.0 ** LOG10_ERR_FLOOR)),
         LOG10_ERR_FLOOR, LOG10_ERR_CEIL)
     y = jnp.where(history.valid, y, 0.0)
 
-    sw = jnp.sum(w, axis=0)
-    sx = jnp.sum(w * x, axis=0)
-    sy = jnp.sum(w * y, axis=0)
-    sxx = jnp.sum(w * x * x, axis=0)
-    sxy = jnp.sum(w * x * y, axis=0)
+    shape = x.shape[1:]                      # [n_rails, *chip]
+    flat = lambda a: a.reshape(history.capacity, -1)
+    sw, sx, sy, sxx, sxy = (s.reshape(shape) for s in ops.sor_accumulate(
+        flat(x), flat(y), flat(w)))
 
     denom = sw * sxx - sx * sx
     slope = (sw * sxy - sx * sy) / jnp.maximum(denom, eps)
@@ -150,7 +197,7 @@ def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
     spread = var_x > jnp.float32(cfg.min_spread_v) ** 2
     usable = steep & spread & (denom > eps)
 
-    log10_bound = jnp.float32(np.log10(cfg.error_bound))
+    log10_bound = _rail_bounds(cfg, len(history.chip_shape))
     v_frontier = jnp.where(
         usable, (log10_bound - intercept) / jnp.where(usable, slope, -1.0),
         0.0)
@@ -168,10 +215,10 @@ def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
 def update_estimate(old: SorEstimate, history: FrameHistory,
                     cfg: SorConfig) -> SorEstimate:
     """Online refresh: refit the window, then blend into the running
-    estimate with `update_gain` (1.0 == adopt the refit). A window that
-    yields no usable fit keeps the previous estimate — a chip whose polls
-    stopped does not forget its learned region, and a cold chip stays at
-    zero confidence."""
+    estimate with `update_gain` (1.0 == adopt the refit). A (rail, chip)
+    lane that yields no usable fit keeps the previous estimate — a chip
+    whose polls stopped does not forget its learned region, and a cold lane
+    stays at zero confidence."""
     fit = fit_history(history, cfg)
     gain = jnp.where(old.confidence > 0.0, jnp.float32(cfg.update_gain), 1.0)
     return jax.tree_util.tree_map(
@@ -181,12 +228,12 @@ def update_estimate(old: SorEstimate, history: FrameHistory,
 
 
 # ---------------------------------------------------------------------------
-# SafeEnvelope: the fit, expressed as per-chip operating limits
+# SafeEnvelope: the fit, expressed as per-chip operating limits per rail
 # ---------------------------------------------------------------------------
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["v_min", "v_max", "confidence"],
-         meta_fields=["max_extension_v"])
+         meta_fields=["max_extension_v", "rail"])
 @dataclasses.dataclass(frozen=True)
 class SafeEnvelope:
     """Per-chip learned operating limits for one rail, confidence-blended
@@ -194,11 +241,15 @@ class SafeEnvelope:
     `v_io_floor`, arbitration's rail `v_min`): at zero confidence the
     blended limit is bit-exactly the static one, at full confidence it is
     the learned frontier. The learned floor may reach below the static one
-    by at most `max_extension_v` — conservative, bounded exploration."""
+    by at most `max_extension_v` — conservative, bounded exploration.
+    `rail` records which rail the fit belongs to, so a bare envelope handed
+    around outside the {rail: env} dict can never be silently applied to a
+    different rail's voltage levels (`envelope_for` checks it)."""
     v_min: Any          # f32 [] or [n_chips] — learned minimum safe voltage
     v_max: Any = None   # f32 or None — learned ceiling (None: static only)
     confidence: Any = 0.0
     max_extension_v: float = 0.05
+    rail: str = "VDD_IO"
 
     def floor(self, static_v_min) -> jnp.ndarray:
         s = jnp.asarray(static_v_min, jnp.float32)
@@ -215,12 +266,53 @@ class SafeEnvelope:
         return jnp.minimum(blended, s + jnp.float32(self.max_extension_v))
 
 
+def rail_envelopes(est: SorEstimate, cfg: SorConfig
+                   ) -> dict[str, SafeEnvelope]:
+    """The estimate as {rail name: SafeEnvelope} — the shape
+    `control_plane.arbitrate(envelopes=)` and `policy.decide_env` consume:
+    each rail's floor is its fitted frontier plus that rail's guard band,
+    ceiling left to the consumer's static limit."""
+    out = {}
+    for i, spec in enumerate(cfg.rails):
+        guard = spec.guard_v if spec.guard_v is not None else cfg.guard_v
+        out[spec.rail] = SafeEnvelope(
+            v_min=est.v_frontier[i] + jnp.float32(guard),
+            v_max=None, confidence=est.confidence[i],
+            max_extension_v=cfg.max_extension_v, rail=spec.rail)
+    return out
+
+
 def safe_envelope(est: SorEstimate, cfg: SorConfig) -> SafeEnvelope:
-    """The estimate as a rail envelope: floor at the fitted frontier plus
-    the guard band, ceiling left to the consumer's static limit."""
-    return SafeEnvelope(v_min=est.v_frontier + jnp.float32(cfg.guard_v),
-                        v_max=None, confidence=est.confidence,
-                        max_extension_v=cfg.max_extension_v)
+    """Back-compat single-envelope view: the VDD_IO rail's envelope (or the
+    sole fitted rail's, for a 1-rail config on another rail)."""
+    envs = rail_envelopes(est, cfg)
+    if "VDD_IO" in envs:
+        return envs["VDD_IO"]
+    if len(envs) == 1:
+        return next(iter(envs.values()))
+    raise KeyError("safe_envelope needs a VDD_IO (or single) rail; "
+                   "use rail_envelopes for multi-rail estimates")
+
+
+def envelope_for(envelope, rail: str = "VDD_IO"):
+    """Normalize an envelope argument: a {rail: SafeEnvelope} dict yields
+    that rail's envelope (None if unfitted); a bare SafeEnvelope applies
+    only to the rail its `rail` tag names (the historical bare spelling
+    defaults to VDD_IO — an envelope fitted on another rail is never
+    silently blended into a different rail's voltage levels); None passes
+    through."""
+    if envelope is None:
+        return None
+    if isinstance(envelope, dict):
+        return envelope.get(rail)
+    return envelope if getattr(envelope, "rail", "VDD_IO") == rail else None
+
+
+def as_envelopes(envelope) -> "dict[str, SafeEnvelope] | None":
+    """Normalize to the {rail: SafeEnvelope} dict arbitration consumes."""
+    if envelope is None or isinstance(envelope, dict):
+        return envelope
+    return {getattr(envelope, "rail", "VDD_IO"): envelope}
 
 
 # ---------------------------------------------------------------------------
@@ -234,16 +326,20 @@ def safe_envelope(est: SorEstimate, cfg: SorConfig) -> SafeEnvelope:
 class SorState:
     """(history, estimate, tick): what a controller threads through its
     loop. `InGraphRailController.control_step_sor` carries it through the
-    jitted scan; `HostRailController` holds it between decisions."""
+    jitted scan (and `make_fleet_train_step` through the trainer state);
+    `HostRailController` holds it between decisions. A registered pytree, so
+    `ckpt.save` persists it like any other state group and learned regions
+    survive restarts (`ckpt.remap_sor` resizes it across fleets)."""
     history: FrameHistory
     estimate: SorEstimate
     tick: Any   # i32 [] — observations seen
 
 
 def init_state(cfg: SorConfig, n_chips: int | None = None) -> SorState:
-    return SorState(history=FrameHistory.create(cfg.capacity, n_chips),
-                    estimate=SorEstimate.init(n_chips),
-                    tick=jnp.int32(0))
+    return SorState(
+        history=FrameHistory.create(cfg.capacity, n_chips, rails=cfg.rails),
+        estimate=SorEstimate.init(n_chips, n_rails=cfg.n_rails),
+        tick=jnp.int32(0))
 
 
 def observe(state: SorState, frame: TelemetryFrame,
@@ -267,24 +363,82 @@ def observe(state: SorState, frame: TelemetryFrame,
     return SorState(history=hist, estimate=est, tick=tick)
 
 
+def merge_observables(sample: TelemetryFrame, src: TelemetryFrame,
+                      cfg: SorConfig) -> TelemetryFrame:
+    """Overlay the per-rail failure observables the fit needs (named by
+    `cfg.rails`) from `src` (the frame the decision consumed) onto `sample`
+    (e.g. a raw `poll_frame` sweep). A rail whose observable `src` does not
+    carry records NaN — that rail's lane is simply invalid for this sample,
+    instead of silently attributing another rail's error to it."""
+    kw: dict[str, Any] = {}
+    extras = dict(sample.extras)
+    for spec in cfg.rails:
+        v = src.get(spec.key)
+        v = jnp.nan if v is None else v
+        if spec.key in TelemetryFrame.__dataclass_fields__:
+            kw[spec.key] = v
+        else:
+            extras[spec.key] = v
+    return dataclasses.replace(sample, extras=extras, **kw)
+
+
 def summary(est: SorEstimate, cfg: SorConfig) -> dict[str, float]:
-    """Host-side telemetry view of an estimate (trainer/serve summaries)."""
-    conf = np.atleast_1d(np.asarray(jax.device_get(est.confidence),
-                                    np.float64))
-    front = np.atleast_1d(np.asarray(jax.device_get(est.v_frontier),
-                                     np.float64))
-    n_eff = np.atleast_1d(np.asarray(jax.device_get(est.n_eff), np.float64))
-    learned = conf > 0.0
-    floor = front + cfg.guard_v
-    out = {
-        "n_chips": int(conf.size),
-        "chips_learned": int(learned.sum()),
+    """Host-side telemetry view of an estimate (trainer/serve summaries).
+    Single-rail configs keep the historical flat keys; multi-rail configs
+    additionally emit per-rail `<RAIL>/...` keys (all values numeric)."""
+    if est.n_rails != cfg.n_rails:
+        # a mismatched config would silently fold rails into the chip axis
+        # below — refuse instead (e.g. TrainerConfig.sor disagreeing with
+        # the FleetStepConfig.sor the state was actually learned under)
+        raise ValueError(
+            f"estimate carries {est.n_rails} rail(s) but the SorConfig "
+            f"declares {cfg.n_rails} ({[s.rail for s in cfg.rails]}); "
+            f"summarize with the config the state was learned under")
+    conf = np.asarray(jax.device_get(est.confidence), np.float64)
+    front = np.asarray(jax.device_get(est.v_frontier), np.float64)
+    n_eff = np.asarray(jax.device_get(est.n_eff), np.float64)
+    # [n_rails] (scalar chip) and [n_rails, n_chips] both -> [n_rails, chips]
+    conf, front, n_eff = (a.reshape(cfg.n_rails, -1)
+                          for a in (conf, front, n_eff))
+
+    def rail_stats(i: int, spec: RailObservable) -> dict[str, float]:
+        c, f, n = conf[i], front[i], n_eff[i]
+        learned = c > 0.0
+        guard = spec.guard_v if spec.guard_v is not None else cfg.guard_v
+        floor = f + guard
+        out = {
+            "n_chips": int(c.size),
+            "chips_learned": int(learned.sum()),
+            "confidence_mean": float(c.mean()),
+            "confidence_min": float(c.min()),
+            "n_eff_mean": float(n.mean()),
+        }
+        if learned.any():
+            out["floor_min_v"] = float(floor[learned].min())
+            out["floor_max_v"] = float(floor[learned].max())
+            out["floor_mean_v"] = float(floor[learned].mean())
+        return out
+
+    if cfg.n_rails == 1:
+        return rail_stats(0, cfg.rails[0])
+    out: dict[str, float] = {
+        "n_chips": int(conf.shape[1]),
+        "n_rails": cfg.n_rails,
+        "chips_learned": int((conf > 0.0).any(axis=0).sum()),
         "confidence_mean": float(conf.mean()),
-        "confidence_min": float(conf.min()),
-        "n_eff_mean": float(n_eff.mean()),
     }
-    if learned.any():
-        out["floor_min_v"] = float(floor[learned].min())
-        out["floor_max_v"] = float(floor[learned].max())
-        out["floor_mean_v"] = float(floor[learned].mean())
+    for i, spec in enumerate(cfg.rails):
+        for k, v in rail_stats(i, spec).items():
+            if k != "n_chips":
+                out[f"{spec.rail}/{k}"] = v
     return out
+
+
+# re-exported for consumers that configure rails through this module
+__all__ = [
+    "ALL_RAIL_OBSERVABLES", "DEFAULT_RAIL_OBSERVABLES", "RailObservable",
+    "SorConfig", "SorEstimate", "SafeEnvelope", "SorState",
+    "fit_history", "update_estimate", "rail_envelopes", "safe_envelope",
+    "envelope_for", "as_envelopes", "init_state", "observe",
+    "merge_observables", "summary",
+]

@@ -178,18 +178,27 @@ class TelemetryFrame:
 
     def reduce_worst(self, keys: tuple[str, ...]) -> "TelemetryFrame":
         """Broadcast the fleet-worst (max) value of each named observation to
-        every chip — the WorstChipGate reduction, now a frame transform."""
+        every chip — the WorstChipGate reduction, now a frame transform.
+        NaN lanes mean "not measured this round" (the per-rail observable
+        convention), so the worst is taken over *measured* lanes only —
+        one unmeasured chip must not NaN-poison the reduction and mask a
+        genuinely over-bound chip; all-NaN stays NaN (nothing measured)."""
+        def worst(v):
+            masked = jnp.where(jnp.isnan(v), -jnp.inf, v)
+            m = jnp.max(masked)
+            return jnp.where(jnp.isneginf(m), jnp.nan, m)
+
         kw: dict[str, Any] = {}
         extras = dict(self.extras)
         for k in keys:
             if k in extras:
                 v = extras[k]
                 if jnp.ndim(v) >= 1:
-                    extras[k] = jnp.broadcast_to(jnp.max(v), v.shape)
+                    extras[k] = jnp.broadcast_to(worst(v), v.shape)
                 continue
             v = getattr(self, k, None)
             if v is not None and jnp.ndim(v) >= 1:
-                kw[k] = jnp.broadcast_to(jnp.max(v), v.shape)
+                kw[k] = jnp.broadcast_to(worst(v), v.shape)
         return dataclasses.replace(self, extras=extras, **kw)
 
 
@@ -207,62 +216,139 @@ def as_frame(telemetry, *, state=None) -> TelemetryFrame:
 
 
 # ---------------------------------------------------------------------------
-# FrameHistory: the jit/vmap-safe per-chip telemetry window (SOR stage 0)
+# RailObservable + FrameHistory: the jit/vmap-safe per-rail x per-chip
+# telemetry window (SOR stage 0)
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class RailObservable:
+    """Declarative spec of what a safe-operating-region learner fits for one
+    rail: which frame field carries the rail's voltage observation and which
+    field/extras key carries the failure observable whose log10 is regressed
+    against it. `error_bound`/`guard_v` optionally override the SorConfig
+    globals for this rail (each rail's failure mode has its own bound: BER
+    for the SerDes rail, straggler rate for the core rail)."""
+    rail: str                        # rail name ("VDD_IO", ...)
+    voltage: str                     # TelemetryFrame field with the voltage
+    key: str                         # frame field/extras key of the observable
+    error_bound: "float | None" = None   # None -> SorConfig.error_bound
+    guard_v: "float | None" = None       # None -> SorConfig.guard_v
+
+
+# The three TPU logical rails with their paper-grounded failure observables:
+# VDD_IO keeps the BER-frontier analogue (measured gradient-domain error);
+# VDD_CORE/VDD_HBM fit the fleet step's margin-coupled injection observables
+# (straggler rate, HBM error rate) against their own rails.
+VDD_IO_BER = RailObservable("VDD_IO", "v_io", "grad_error")
+VDD_CORE_STRAGGLE = RailObservable("VDD_CORE", "v_core", "straggle_rate")
+VDD_HBM_ERROR = RailObservable("VDD_HBM", "v_hbm", "hbm_error_rate")
+
+DEFAULT_RAIL_OBSERVABLES = (VDD_IO_BER,)
+ALL_RAIL_OBSERVABLES = (VDD_CORE_STRAGGLE, VDD_HBM_ERROR, VDD_IO_BER)
+
+# rail name -> canonical observable key (fleet.poll_frame uses this to place
+# per-rail error telemetry supplied as a {rail: value} dict)
+RAIL_OBSERVABLE_KEYS = {s.rail: s.key for s in ALL_RAIL_OBSERVABLES}
+
+
+def validate_rails(rails) -> tuple:
+    """Shared validation of a RailObservable tuple (FrameHistory and
+    SorConfig both declare one — ONE rule set): non-empty, unique names."""
+    rails = tuple(rails)
+    if not rails:
+        raise ValueError("need at least one RailObservable")
+    names = [s.rail for s in rails]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate rails in {names}")
+    return rails
+
+
+def rail_index(rails, name: str) -> int:
+    """Index of a rail name within a RailObservable tuple."""
+    for i, s in enumerate(rails):
+        if s.rail == name:
+            return i
+    raise KeyError(f"rail {name!r} not tracked; "
+                   f"have {[s.rail for s in rails]}")
+
+
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["v_core", "v_hbm", "v_io", "error", "age_s", "polled",
+         data_fields=["v", "obs", "age_s", "polled",
                       "valid", "cursor", "count"],
-         meta_fields=["capacity"])
+         meta_fields=["capacity", "rails"])
 @dataclasses.dataclass(frozen=True)
 class FrameHistory:
     """Fixed-capacity ring buffer of `TelemetryFrame` samples, stored as
-    stacked jnp arrays `[capacity, *chip_shape]` so the whole store jits,
-    vmaps, and rides a `lax.scan` carry (the in-graph SOR path needs exactly
-    that — see core/sor.py and docs/sor.md).
+    stacked jnp arrays `[capacity, n_rails, *chip_shape]` so the whole store
+    jits, vmaps, and rides a `lax.scan` carry (the in-graph SOR path needs
+    exactly that — see core/sor.py and docs/sor.md).
 
-    Per sample and per chip it keeps the full observation record: the
-    rail-voltage observations (the VDD_IO frontier fit reads `v_io`;
-    `v_core`/`v_hbm` are stored for the road-mapped cross-rail fits), the
-    measured error (`grad_error`, the BER analogue), the observation
+    The rail axis is declared by `rails` (a tuple of `RailObservable`): per
+    sample, per rail and per chip it keeps the rail-voltage observation and
+    the rail's failure observable (the BER analogue for VDD_IO, straggler /
+    HBM error rates for the margin-coupled rails), plus the observation
     staleness (`age_s` — down-weighted by the fit when
-    `SorConfig.age_halflife_s` is set), and a POLLED/EXACT provenance flag
-    (the record of *where* each sample came from). `valid` masks chips whose
-    voltage or error observation was NaN at push time (e.g. a
-    `FleetPowerManager.poll_frame` lane that was never sampled) — cold start
-    therefore records *nothing*, which is what pins learned-envelope
+    `SorConfig.age_halflife_s` is set) and a POLLED/EXACT provenance flag
+    (an observability record of where each sample came from; the fit itself
+    weighs samples by recency and `age_s` only).
+    `valid` masks (rail, chip) lanes whose voltage or observable was NaN at
+    push time (e.g. a `FleetPowerManager.poll_frame` lane that was never
+    sampled, or a rail whose observable the caller did not report) — cold
+    start therefore records *nothing*, which is what pins learned-envelope
     controllers to static behavior until real telemetry arrives."""
-    v_core: Any       # f32 [capacity, *chip]
-    v_hbm: Any        # f32 [capacity, *chip]
-    v_io: Any         # f32 [capacity, *chip]
-    error: Any        # f32 [capacity, *chip] — measured error (BER analogue)
+    v: Any            # f32 [capacity, n_rails, *chip] — voltage observations
+    obs: Any          # f32 [capacity, n_rails, *chip] — failure observables
     age_s: Any        # f32 [capacity, *chip] — staleness at observation time
     polled: Any       # f32 [capacity, *chip] — 1.0 POLLED, 0.0 EXACT
-    valid: Any        # bool [capacity, *chip]
+    valid: Any        # bool [capacity, n_rails, *chip]
     cursor: Any       # i32 [] — next slot to write
     count: Any        # i32 [] — total pushes (not capped)
     capacity: int
+    rails: tuple = DEFAULT_RAIL_OBSERVABLES
 
     @staticmethod
-    def create(capacity: int, n_chips: int | None = None) -> "FrameHistory":
-        """Empty history. `n_chips=None` -> scalar (single-chip) samples."""
+    def create(capacity: int, n_chips: int | None = None,
+               rails: tuple = DEFAULT_RAIL_OBSERVABLES) -> "FrameHistory":
+        """Empty history. `n_chips=None` -> scalar (single-chip) samples;
+        `rails` declares the fitted rails (default: the VDD_IO BER frontier
+        alone — the single-rail learner)."""
         if capacity < 2:
             raise ValueError(f"capacity must be >= 2, got {capacity}")
-        shape = (capacity,) if n_chips is None else (capacity, n_chips)
-        z = jnp.zeros(shape, jnp.float32)
+        rails = validate_rails(rails)
+        chip = () if n_chips is None else (n_chips,)
+        zr = jnp.zeros((capacity, len(rails)) + chip, jnp.float32)
+        zc = jnp.zeros((capacity,) + chip, jnp.float32)
         return FrameHistory(
-            v_core=z, v_hbm=z, v_io=z, error=z, age_s=z, polled=z,
-            valid=jnp.zeros(shape, bool),
-            cursor=jnp.int32(0), count=jnp.int32(0), capacity=capacity)
+            v=zr, obs=zr, age_s=zc, polled=zc,
+            valid=jnp.zeros(zr.shape, bool),
+            cursor=jnp.int32(0), count=jnp.int32(0), capacity=capacity,
+            rails=rails)
 
     @property
     def chip_shape(self) -> tuple[int, ...]:
-        return self.v_io.shape[1:]
+        return self.v.shape[2:]
+
+    @property
+    def n_rails(self) -> int:
+        return len(self.rails)
+
+    def rail_index(self, name: str) -> int:
+        return rail_index(self.rails, name)
+
+    # back-compat single-rail views (the PR-4 layout's field names)
+    @property
+    def v_io(self):
+        return self.v[:, self.rail_index("VDD_IO")]
+
+    @property
+    def error(self):
+        return self.obs[:, self.rail_index("VDD_IO")]
 
     def push(self, frame: TelemetryFrame) -> "FrameHistory":
         """Functional append of one observation (pure jnp: jit/vmap/scan
-        safe). Chips whose voltage or error observation is non-finite record
-        as invalid — they carry no weight in any downstream fit."""
+        safe). (rail, chip) lanes whose voltage or observable is non-finite
+        record as invalid — they carry no weight in any downstream fit, so a
+        rail the frame says nothing about simply records nothing."""
         shape = self.chip_shape
 
         def val(x, default=None):
@@ -270,36 +356,41 @@ class FrameHistory:
                 x = jnp.nan if default is None else default
             return jnp.broadcast_to(jnp.asarray(x, jnp.float32), shape)
 
-        v_core, v_hbm, v_io = val(frame.v_core), val(frame.v_hbm), val(frame.v_io)
-        err = val(frame.grad_error)
+        v = jnp.stack([val(frame.get(s.voltage)) for s in self.rails])
+        obs = jnp.stack([val(frame.get(s.key)) for s in self.rails])
         age = val(frame.age_s, default=0.0)
-        ok = jnp.isfinite(v_io) & jnp.isfinite(err)
+        ok = jnp.isfinite(v) & jnp.isfinite(obs)
         polled = jnp.broadcast_to(
             jnp.float32(frame.provenance is Provenance.POLLED), shape)
 
         def put(buf, x):
             return jax.lax.dynamic_update_index_in_dim(buf, x, self.cursor, 0)
 
+        # unknown staleness (the documented NaN sentinel) records as +inf —
+        # under SorConfig.age_halflife_s that is ZERO fit weight (the
+        # conservative reading, matching StalenessGuard's maximally-stale
+        # treatment), not the perfectly-fresh 0.0 a silent coercion would
+        # claim; staleness-blind configs ignore age entirely
         return dataclasses.replace(
             self,
-            v_core=put(self.v_core, v_core),
-            v_hbm=put(self.v_hbm, v_hbm),
-            v_io=put(self.v_io, v_io),
-            error=put(self.error, err),
-            age_s=put(self.age_s, jnp.where(jnp.isfinite(age), age, 0.0)),
+            v=put(self.v, v),
+            obs=put(self.obs, obs),
+            age_s=put(self.age_s, jnp.where(jnp.isfinite(age), age,
+                                            jnp.inf)),
             polled=put(self.polled, polled),
             valid=put(self.valid, ok),
             cursor=(self.cursor + 1) % self.capacity,
             count=self.count + 1)
 
     def recency_weights(self, decay: float) -> jnp.ndarray:
-        """`[capacity, *chip]` exponential recency weights: the newest valid
-        sample weighs 1, each older slot `decay`x less, invalid slots 0 —
-        the weighting of the SOR exponentially-weighted least squares."""
+        """`[capacity, n_rails, *chip]` exponential recency weights: the
+        newest valid sample weighs 1, each older slot `decay`x less, invalid
+        (rail, chip) lanes 0 — the weighting of the SOR exponentially-
+        weighted least squares."""
         slots = jnp.arange(self.capacity)
         rank = (self.cursor - 1 - slots) % self.capacity   # 0 == newest
         w = jnp.asarray(decay, jnp.float32) ** rank
-        w = w.reshape((self.capacity,) + (1,) * len(self.chip_shape))
+        w = w.reshape((self.capacity,) + (1,) * (1 + len(self.chip_shape)))
         return w * self.valid.astype(jnp.float32)
 
 

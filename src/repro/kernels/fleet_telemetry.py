@@ -48,6 +48,57 @@ def _kernel(x_ref, max_ref, min_ref, sum_ref, *, n_valid: int, tile: int):
         sum_ref[...] = sum_ref[...] + t_sum
 
 
+def _sor_kernel(x_ref, y_ref, w_ref,
+                sw_ref, sx_ref, sy_ref, sxx_ref, sxy_ref):
+    x = x_ref[...].astype(jnp.float32)                     # [window, L]
+    y = y_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    wx = w * x
+    sw_ref[...] = jnp.sum(w, axis=0, keepdims=True)
+    sx_ref[...] = jnp.sum(wx, axis=0, keepdims=True)
+    sy_ref[...] = jnp.sum(w * y, axis=0, keepdims=True)
+    sxx_ref[...] = jnp.sum(wx * x, axis=0, keepdims=True)
+    sxy_ref[...] = jnp.sum(wx * y, axis=0, keepdims=True)
+
+
+SOR_ROWS_ALIGN = 8   # sublane alignment for the window axis
+
+
+def sor_accumulate(x, y, w, *, interpret: bool = False):
+    """Fused EWLS accumulation for the safe-operating-region fit: one pass
+    over the `[window, n]` telemetry window computes all five weighted sums
+    (sum w, w·x, w·y, w·x², w·x·y), each `[n]` f32 — `n` is the flattened
+    n_rails x n_chips lane axis, so at O(1000) chips x 3 rails x 32-deep
+    windows this is the same bandwidth-bound streaming reduction as
+    `fleet_reduce`, with the five accumulators materialized in VMEM in a
+    single read of the data. Row padding carries zero weight (every term is
+    w-multiplied), so no in-kernel masking is needed; column padding only
+    pollutes lanes that are sliced off afterwards."""
+    window, n = x.shape
+    rpad = (-window) % SOR_ROWS_ALIGN
+    cpad = (-n) % LANES
+
+    def pad(a):
+        return jnp.pad(a.astype(jnp.float32), ((0, rpad), (0, cpad)))
+
+    xm, ym, wm = pad(x), pad(y), pad(w)
+    rows, cols = xm.shape
+    n_steps = cols // LANES
+
+    in_spec = pl.BlockSpec((rows, LANES), lambda i: (0, i))
+    out_spec = pl.BlockSpec((1, LANES), lambda i: (0, i))
+    out_shape = jax.ShapeDtypeStruct((1, cols), jnp.float32)
+    outs = pl.pallas_call(
+        _sor_kernel,
+        grid=(n_steps,),
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=(out_spec,) * 5,
+        out_shape=(out_shape,) * 5,
+        interpret=interpret,
+    )(xm, ym, wm)
+    return tuple(o[0, :n] for o in outs)
+
+
 def fleet_reduce(x, *, interpret: bool = False):
     """x [n_chips, n_fields] f32 -> (max, min, sum), each [n_fields] f32."""
     n_chips, n_fields = x.shape

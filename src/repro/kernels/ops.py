@@ -169,6 +169,19 @@ def fleet_reduce(x):
     return ref.fleet_reduce_reference(x)
 
 
+@jax.jit
+def sor_accumulate(x, y, w):
+    """x/y/w [window, n] -> the five EWLS sums (Σw, Σwx, Σwy, Σwx², Σwxy),
+    each [n] f32 — the safe-operating-region fit's accumulation
+    (core/sor.py), fused into one streaming pass on TPU
+    (fleet_telemetry.sor_accumulate); XLA reference elsewhere."""
+    mode = _pallas_mode()
+    if mode != "off":
+        from repro.kernels import fleet_telemetry as ft
+        return ft.sor_accumulate(x, y, w, interpret=(mode == "interpret"))
+    return ref.sor_accumulate_reference(x, y, w)
+
+
 def _shard_map(fn, mesh, in_specs, out_specs):
     """Version-portable shard_map (jax >= 0.5 top-level vs experimental)."""
     if hasattr(jax, "shard_map"):

@@ -157,3 +157,17 @@ def fleet_reduce_reference(x):
     """x [n_chips, n_fields] -> (max, min, sum), each [n_fields] f32."""
     xf = x.astype(jnp.float32)
     return jnp.max(xf, axis=0), jnp.min(xf, axis=0), jnp.sum(xf, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# SOR EWLS accumulation oracle (safe-operating-region fit hot path)
+# ---------------------------------------------------------------------------
+
+def sor_accumulate_reference(x, y, w):
+    """x/y/w [window, n] -> the five EWLS sums (Σw, Σwx, Σwy, Σwx², Σwxy),
+    each [n] f32 — exactly the weighted sums `core.sor.fit_history` solves
+    its per-(rail, chip) least squares from (invalid lanes carry w == 0)."""
+    xf, yf, wf = (a.astype(jnp.float32) for a in (x, y, w))
+    return (jnp.sum(wf, axis=0), jnp.sum(wf * xf, axis=0),
+            jnp.sum(wf * yf, axis=0), jnp.sum(wf * xf * xf, axis=0),
+            jnp.sum(wf * xf * yf, axis=0))

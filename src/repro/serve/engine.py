@@ -27,8 +27,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import sor as sor_mod
 from repro.core.control_plane import (InGraphRailController, as_controller,
-                                      validate_in_graph_sor,
-                                      worst_chip_pinned)
+                                      with_sor, worst_chip_pinned)
 from repro.core.hwspec import FleetSpec
 from repro.core.policy import WorstChipGate
 from repro.core.power_plane import (PowerPlaneState, StepProfile,
@@ -86,13 +85,10 @@ class ServeEngine:
                                  "InGraphRailController.control_step_sor); "
                                  "for a HostRailController pass sor= to the "
                                  "controller itself")
-            if (self.controller.sor is not None
-                    and self.controller.sor != sor):
-                raise ValueError(
-                    "conflicting SorConfig: the controller already carries "
-                    "its own sor=; configure it in one place")
-            validate_in_graph_sor(sor)
-            self.controller.sor = sor
+            # shared semantics with make_fleet_train_step (control_plane.
+            # with_sor): validate, reject legacy policies, never mutate a
+            # caller-owned controller, conflict loudly
+            self.controller = with_sor(self.controller, sor)
         self._sor_state = None
         # admission gate: shed/defer decode batches while the arbitrated
         # request shows the worst chip pinned at its VDD_IO envelope floor

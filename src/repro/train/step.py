@@ -65,6 +65,20 @@ class FleetStepConfig:
     straggler_prob: float = 0.0
     straggler_factor: float = 4.0
     straggler_margin_gain: float = 8.0
+    # margin-coupled HBM interface error rate (the VDD_HBM failure
+    # observable): base rate amplified by the chip's VDD_HBM undervolt
+    # margin. Base 0.0 (default) records a zero observable — inert for
+    # control, but honest telemetry.
+    hbm_error_base: float = 0.0
+    hbm_error_gain: float = 24.0
+    # in-graph safe-operating-region learning (core/sor.py): when set, the
+    # step threads a functional `sor.SorState` through its signature —
+    # train_step(params, opt, plane, ef, sor_state, batch) -> (..., sor_state',
+    # metrics) — so per-rail frontiers are learned DURING training, not just
+    # by the host controller, and the state checkpoints next to the plane
+    # (ckpt.save / ckpt.remap_sor). Requires an in-graph policy
+    # (StepConfig.policy) and ingest="frames".
+    sor: Any = None
     seed: int = 0
 
 
@@ -170,11 +184,31 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
     The model itself is SPMD-replicated (every chip computes the same
     grads); what varies per chip is the *power/telemetry* world: measured
     gradient-domain error scales with the chip's BER-curve offset and its
-    VDD_IO undervolt margin, and stragglers fire preferentially on chips
-    whose VDD_CORE margin is thinnest. Per-step randomness derives from
+    VDD_IO undervolt margin, stragglers fire preferentially on chips whose
+    VDD_CORE margin is thinnest, and the HBM interface error rate grows with
+    each chip's VDD_HBM margin. Per-step randomness derives from
     `fold_in(seed, plane.step)` so the trainer's call signature — and
-    checkpoint/restart determinism — are unchanged."""
+    checkpoint/restart determinism — are unchanged.
+
+    With `fleet_cfg.sor` set, the returned step instead has the signature
+    train_step(params, opt_state, plane, ef_resid, sor_state, batch) ->
+    (params', opt_state', plane', ef_resid', sor_state', metrics): the
+    in-graph controller pushes every step's frame (per-rail voltages + the
+    margin-coupled failure observables above) into the `sor.SorState`
+    threaded through the carry, refreshes the per-rail frontier estimates on
+    the configured cadence, and decides/arbitrates under the learned
+    envelopes — learning happens DURING training, and the state persists
+    through `ckpt.save` like any other group (the Trainer does this when its
+    init_state carries a "sor" entry)."""
     controller = as_controller(step_cfg.policy)
+    sor_cfg = fleet_cfg.sor
+    if sor_cfg is not None:
+        from repro.core.control_plane import with_sor
+        if controller is None:
+            raise ValueError("FleetStepConfig.sor needs an in-graph policy "
+                             "(StepConfig.policy) to consume the learned "
+                             "envelopes")
+        controller = with_sor(controller, sor_cfg)
     fs = fleet_cfg.spec
     n = fs.n_chips
     v_nom_core = jnp.asarray(fs.v_core_nominal, jnp.float32)
@@ -182,7 +216,8 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
     v_nom_io = jnp.asarray(fs.v_io_nominal, jnp.float32)
     sens = jnp.asarray(fs.error_sensitivity, jnp.float32)
 
-    def train_step(params, opt_state, plane: PowerPlaneState, ef_resid, batch):
+    def _step_body(params, opt_state, plane: PowerPlaneState, ef_resid,
+                   sor_state, batch):
         (params, opt_state, ef_resid, loss, metrics, opt_metrics,
          grad_error) = _grads_and_update(loss_fn, opt_cfg, schedule_fn,
                                          step_cfg, params, opt_state,
@@ -203,7 +238,9 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
         err = ((grad_error + fleet_cfg.link_ber_floor) * sens * noise
                * (1.0 + fleet_cfg.error_gain * margin_io))
 
-        # per-chip stragglers: thin VDD_CORE margin -> higher odds
+        # per-chip stragglers: thin VDD_CORE margin -> higher odds. The
+        # margin-coupled *rate* is the VDD_CORE failure observable the SOR
+        # learner fits (the realized 0/1 draw is far too noisy to regress).
         margin_core = jnp.maximum(0.0, v_nom_core - plane.v_core) / v_nom_core
         p_straggle = jnp.clip(
             fleet_cfg.straggler_prob
@@ -212,15 +249,27 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
         t_chip = power_metrics["t_step_s"] * jnp.where(
             straggle, fleet_cfg.straggler_factor, 1.0)
 
+        # per-chip HBM interface errors: thin VDD_HBM margin -> higher rate
+        # (the VDD_HBM failure observable)
+        margin_hbm = jnp.maximum(0.0, v_nom_hbm - plane.v_hbm) / v_nom_hbm
+        hbm_rate = (jnp.float32(fleet_cfg.hbm_error_base) * sens
+                    * (1.0 + fleet_cfg.hbm_error_gain * margin_hbm))
+
         # the frame is already anchored to the FleetSpec per-chip nominals;
-        # overlay the per-chip measured error + straggler-stretched times
+        # overlay the per-chip measured error + straggler-stretched times +
+        # the per-rail failure observables (telemetry.RAIL_OBSERVABLE_KEYS)
         frame = dataclasses.replace(
             frame, grad_error=err,
-            extras={**frame.extras, "t_chip_s": t_chip})
+            extras={**frame.extras, "t_chip_s": t_chip,
+                    "straggle_rate": p_straggle, "hbm_error_rate": hbm_rate})
         telemetry = {**power_metrics, "grad_error": err, "t_chip_s": t_chip,
+                     "straggle_rate": p_straggle, "hbm_error_rate": hbm_rate,
                      "v_nom_core": v_nom_core, "v_nom_hbm": v_nom_hbm,
                      "v_nom_io": v_nom_io}
-        if controller is not None:
+        if sor_cfg is not None:
+            plane, sor_state = controller.control_step_sor(
+                plane, frame, sor_state)
+        elif controller is not None:
             plane = controller.control_step(plane, frame)
 
         # fleet reductions through the Pallas telemetry-reduction hot path:
@@ -245,13 +294,29 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
         fleet_metrics["fleet/straggler_frac"] = jnp.mean(
             straggle.astype(jnp.float32))
 
+        if sor_cfg is not None:
+            # learned-region telemetry: how much of the fleet trusts a fit
+            fleet_metrics["fleet/sor_conf_mean"] = jnp.mean(
+                sor_state.estimate.confidence)
+            fleet_metrics["fleet/sor_conf_min"] = jnp.min(
+                sor_state.estimate.confidence)
+
         # v_nom_* are static per-run FleetSpec constants — policy inputs,
         # not telemetry worth logging every step
         logged = {k: v for k, v in telemetry.items()
                   if not k.startswith("v_nom_")}
         out_metrics = {"loss": loss, **metrics, **opt_metrics, **logged,
                        **fleet_metrics}
-        return params, opt_state, plane, ef_resid, out_metrics
+        return params, opt_state, plane, ef_resid, sor_state, out_metrics
+
+    if sor_cfg is not None:
+        def train_step(params, opt_state, plane, ef_resid, sor_state, batch):
+            return _step_body(params, opt_state, plane, ef_resid, sor_state,
+                              batch)
+    else:
+        def train_step(params, opt_state, plane, ef_resid, batch):
+            out = _step_body(params, opt_state, plane, ef_resid, None, batch)
+            return out[:4] + (out[5],)
 
     return train_step
 

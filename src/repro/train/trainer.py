@@ -23,7 +23,8 @@ from repro.core.hwspec import FleetSpec
 from repro.core.power_plane import PowerPlaneState
 from repro.core.telemetry import TelemetryLog
 from repro.core import ecollectives
-from repro.checkpoint.ckpt import CheckpointManager, remap_plane
+from repro.core import sor as sor_mod
+from repro.checkpoint.ckpt import CheckpointManager, remap_plane, remap_sor
 
 
 class SimulatedNodeFailure(RuntimeError):
@@ -55,6 +56,13 @@ class TrainerConfig:
     # Fleet provenance: checkpointed alongside the plane so elastic restarts
     # onto a different fleet size remap per-chip state explicitly.
     fleet: FleetSpec | None = None
+    # In-graph learned safe operating regions: the SorConfig the train step
+    # was built with (train.step.FleetStepConfig.sor). When set — and
+    # init_state carries a "sor" entry — the trainer threads the functional
+    # SorState through the (6-arg) step, checkpoints it next to the plane,
+    # remaps it across fleet sizes on elastic restore, and folds the learned
+    # per-rail view into summary()["sor"].
+    sor: Any = None
 
     def __post_init__(self):
         self.controller = as_controller(self.controller, host=True)
@@ -76,13 +84,30 @@ class Trainer:
         self.ckpt_writes = 0
         self._rng = np.random.default_rng(cfg.faults.seed)
         self._step_times: list[float] = []
+        # fail fast on SOR misconfiguration — otherwise it only surfaces as
+        # an opaque step-arity TypeError on the first training step (the
+        # 6-arg SOR step and the "sor" state entry must come together), or
+        # as a summary() error after the whole run (rails mismatch)
+        ss = self.state.get("sor")
+        if (cfg.sor is None) != (ss is None):
+            raise ValueError(
+                "TrainerConfig.sor and init_state['sor'] must be set "
+                "together: the SOR train step (FleetStepConfig.sor) takes "
+                "the 6-arg signature and threads the state the trainer "
+                "carries — configure both or neither")
+        if ss is not None and ss.history.rails != cfg.sor.rails:
+            raise ValueError(
+                f"TrainerConfig.sor declares rails "
+                f"{[s.rail for s in cfg.sor.rails]} but init_state['sor'] "
+                f"was built with {[s.rail for s in ss.history.rails]}; "
+                f"pass the same SorConfig as FleetStepConfig.sor")
 
     # -- checkpoint/restart ----------------------------------------------------
     def maybe_restore(self) -> bool:
         latest = self.ckpt.latest_step()
         if latest is None:
             return False
-        step, restored = self.ckpt.restore(self.state)
+        step, restored = self.ckpt.restore(self.state, optional=("sor",))
         self.state.update(restored)
         self._remap_restored_plane()
         self.start_step = step
@@ -92,13 +117,19 @@ class Trainer:
         """Elastic fleet restore: when this run's FleetSpec differs in size
         from the checkpoint's, remap the restored `[n_old]` plane onto the
         current fleet explicitly (surviving chips keep their per-chip state,
-        joiners start at their own nominal point)."""
+        joiners start at their own nominal point). A restored SorState is
+        remapped the same way — survivors keep their learned regions,
+        joiners start at the cold-start static pin."""
         if self.cfg.fleet is None:
             return
+        n_target = self.cfg.fleet.n_chips
         plane = self.state["plane"]
-        if plane.is_fleet and plane.n_chips == self.cfg.fleet.n_chips:
-            return
-        self.state["plane"] = remap_plane(plane, self.cfg.fleet)
+        if not (plane.is_fleet and plane.n_chips == n_target):
+            self.state["plane"] = remap_plane(plane, self.cfg.fleet)
+        ss = self.state.get("sor")
+        if ss is not None and ss.history.chip_shape \
+                and ss.history.chip_shape[0] != n_target:
+            self.state["sor"] = remap_sor(ss, self.cfg.fleet)
 
     def _save(self, step: int):
         self.ckpt.save(step, self.state, fleet=self.cfg.fleet)
@@ -136,7 +167,8 @@ class Trainer:
                 self.ckpt.wait()
                 latest = self.ckpt.latest_step()
                 if latest is not None:
-                    s, restored = self.ckpt.restore(self.state)
+                    s, restored = self.ckpt.restore(self.state,
+                                                    optional=("sor",))
                     self.state.update(restored)
                     self._remap_restored_plane()
                     step = s
@@ -149,15 +181,26 @@ class Trainer:
         while step < cfg.total_steps:
             batch = self.data.jax_batch(step)
             t0 = time.perf_counter()
-            params, opt, plane, ef, metrics = self.train_step(
-                self.state["params"], self.state["opt"], self.state["plane"],
-                self.state["ef"], batch)
+            if "sor" in self.state:
+                # in-graph SOR step: the functional SorState rides the
+                # trainer state like any other carry (and checkpoints)
+                params, opt, plane, ef, sor_state, metrics = self.train_step(
+                    self.state["params"], self.state["opt"],
+                    self.state["plane"], self.state["ef"],
+                    self.state["sor"], batch)
+            else:
+                sor_state = None
+                params, opt, plane, ef, metrics = self.train_step(
+                    self.state["params"], self.state["opt"],
+                    self.state["plane"], self.state["ef"], batch)
             jax.block_until_ready(metrics["loss"])
             wall = time.perf_counter() - t0
             wall = self._inject_faults(step, wall)
             self._step_times.append(wall)
 
             self.state.update(params=params, opt=opt, plane=plane, ef=ef)
+            if sor_state is not None:
+                self.state["sor"] = sor_state
 
             # host-path control (SW analogue): one control_step through the
             # unified rail control plane (decide + PMBus-actuate)
@@ -206,6 +249,10 @@ class Trainer:
                 out["fleet_last"] = dict(last.fleet)
         summarize = getattr(self.cfg.controller, "sor_summary", None)
         sor = summarize() if callable(summarize) else None
+        if sor is None and self.cfg.sor is not None \
+                and self.state.get("sor") is not None:
+            # in-graph learner: summarize the state threaded through the step
+            sor = sor_mod.summary(self.state["sor"].estimate, self.cfg.sor)
         if sor:              # learned safe-operating-region state, if any
             out["sor"] = sor
         return out

@@ -59,20 +59,23 @@ def _frontier_frames(v_onsets, v_points, slope=30.0):
 def test_frame_history_ring_and_nan_masking():
     h = FrameHistory.create(4, n_chips=3)
     assert h.chip_shape == (3,)
+    assert h.n_rails == 1   # default: the VDD_IO BER frontier alone
     for i in range(6):
         v = jnp.asarray([0.9 - 0.01 * i, 0.8, np.nan], jnp.float32)
         h = h.push(TelemetryFrame(grad_error=jnp.asarray([1e-3, 2e-3, 3e-3]),
                                   v_io=v, v_core=v, v_hbm=v))
     assert int(h.count) == 6 and int(h.cursor) == 2
-    # the NaN-voltage chip never records a valid sample
-    assert not np.asarray(h.valid)[:, 2].any()
-    assert np.asarray(h.valid)[:, :2].all()
-    # newest sample (slot cursor-1) holds the last push
+    # the NaN-voltage chip never records a valid sample (valid is
+    # [capacity, n_rails, n_chips] — rail-indexed)
+    assert not np.asarray(h.valid)[:, 0, 2].any()
+    assert np.asarray(h.valid)[:, 0, :2].all()
+    # newest sample (slot cursor-1) holds the last push (v_io is the
+    # back-compat rail slice)
     assert float(h.v_io[1, 0]) == pytest.approx(0.85)
     # recency weights: newest == 1, invalid chips == 0
     w = np.asarray(h.recency_weights(0.9))
-    assert w[1, 0] == pytest.approx(1.0)
-    assert (w[:, 2] == 0).all()
+    assert w[1, 0, 0] == pytest.approx(1.0)
+    assert (w[:, 0, 2] == 0).all()
 
 
 def test_frame_history_push_pure_under_jit():
@@ -121,8 +124,8 @@ def test_fit_recovers_error_sensitivity_ordering():
     for f in _frontier_frames(v_on, np.linspace(0.74, 0.60, 24)):
         h = h.push(f)
     est = sor.fit_history(h, cfg)
-    conf = np.asarray(est.confidence)
-    front = np.asarray(est.v_frontier)
+    conf = np.asarray(est.confidence)[0]   # [n_rails, n_chips], rail 0
+    front = np.asarray(est.v_frontier)[0]
     assert (conf > 0.5).all()
     assert (np.asarray(est.slope) < -10.0).all()
     np.testing.assert_allclose(front, np.asarray(v_on), atol=5e-3)
@@ -150,7 +153,8 @@ def test_fit_matches_per_chip_fits():
         one = sor.fit_history(hi, cfg)
         for field in ("intercept", "slope", "v_frontier", "confidence"):
             np.testing.assert_allclose(
-                float(getattr(full, field)[i]), float(getattr(one, field)),
+                float(getattr(full, field)[0, i]),
+                float(getattr(one, field)[0]),
                 rtol=1e-4, atol=1e-4, err_msg=f"chip {i} {field}")
 
 
@@ -244,7 +248,8 @@ def test_host_controller_learns_from_polls():
     # true onset 0.78: the learned floor lands just above it...
     assert 0.775 < s["floor_mean_v"] < 0.80
     # ...and the blended floor tightens ABOVE the policy's static 0.70/0.75
-    assert float(hc.last_envelope.floor(0.70)) > 0.70
+    # (last_envelope is the per-rail dict now)
+    assert float(hc.last_envelope["VDD_IO"].floor(0.70)) > 0.70
 
 
 # -- envelope arbitration -------------------------------------------------------
@@ -406,30 +411,40 @@ def test_serve_admission_gate_quiet_when_unpinned():
 # -- the learned-vs-static frontier smoke ---------------------------------------
 
 def test_learned_envelope_fleet_frontier_smoke():
-    """Acceptance: after one learned rollout on a spread fleet, at least one
-    chip's arbitrated floor drops below the shared static floor, no chip's
-    modeled log10-error exceeds the configured bound at the operating points
-    it holds, and the fleet's rail power drops vs the static envelope."""
+    """Acceptance: after one learned multi-rail rollout on a spread fleet,
+    every rail's learner converges, chips recover headroom below the shared
+    static floors, no chip's modeled observable exceeds the configured
+    bound at the operating points it holds, and the fleet's rail power
+    drops vs the static envelopes."""
     from benchmarks import fleet_frontier as ff
 
     n, steps = 8, 120
     p_st, _, h_st = ff._sor_rollout(n, False, steps)
     p_ln, ss, h_ln = ff._sor_rollout(n, True, steps)
     est = ss.estimate
-    env = sor.safe_envelope(est, ff.SOR_CFG)
-    floors = np.asarray(env.floor(STATIC_IO_FLOOR))
+    envs = sor.rail_envelopes(est, ff.SOR_CFG)
     conf = np.asarray(est.confidence)
-    assert (conf > 0.5).all()
+    assert conf.shape[0] == 3 and (conf > 0.5).all()   # all rails learned
+
+    floors = np.asarray(envs["VDD_IO"].floor(STATIC_IO_FLOOR))
     # strong chips recover headroom below the shared static floor
     assert (floors < STATIC_IO_FLOOR - 1e-3).any()
     # weak chips tighten above it (per-chip regions, not a global loosening)
     assert (floors > STATIC_IO_FLOOR + 1e-3).any()
-    # safety: modeled error at the held operating points stays bounded
-    modeled = np.asarray(est.log10_error_at(p_ln.v_io))
-    assert (modeled[conf > 0] <= np.log10(BOUND) + 0.05).all()
+    # safety, on every rail: modeled observable at the held operating
+    # points stays at/below the bound
+    for rail, held in (("VDD_CORE", p_ln.v_core), ("VDD_HBM", p_ln.v_hbm),
+                       ("VDD_IO", p_ln.v_io)):
+        i = ff.SOR_CFG.rail_index(rail)
+        modeled = np.asarray(est.rail(i).log10_error_at(held))
+        assert (modeled[conf[i] > 0] <= np.log10(BOUND) + 0.05).all(), rail
     # the static run never went below its shared floor; the learned one did
-    assert float(jnp.min(p_st.v_io)) >= ff.SOR_POLICY_FLOOR - 1e-4
-    assert float(jnp.min(p_ln.v_io)) < ff.SOR_POLICY_FLOOR - 1e-3
+    io_floor = ff.SOR_POLICY_FLOORS["VDD_IO"]
+    assert float(jnp.min(p_st.v_io)) >= io_floor - 1e-4
+    assert float(jnp.min(p_ln.v_io)) < io_floor - 1e-3
+    # the CORE rail recovered headroom too (the cross-rail point of PR 5)
+    assert (float(jnp.min(p_ln.v_core))
+            < float(jnp.min(p_st.v_core)) - 1e-3)
     # rail power drops (the paper's headline metric)
     tail = steps // 4
     assert (float(jnp.mean(h_ln["power_w"][-tail:]))

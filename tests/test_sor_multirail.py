@@ -1,0 +1,562 @@
+"""Multi-rail SOR refactor coverage (core/sor.py, docs/sor.md):
+
+  * independence — the per-rail fits are elementwise over the rail axis:
+    perturbing one rail's samples never moves another rail's frontier;
+  * kernel — `ops.sor_accumulate` / the Pallas `sor_accumulate` body match
+    the pure-jnp EWLS sums to f32 tolerance under jit and vmap;
+  * the PR-4 pin — a 1-rail (VDD_IO-only) config reproduces the
+    pre-refactor scalar learner's fit bit-exactly (and the cold-start
+    static pin is covered by tests/test_sor.py);
+  * persistence — `SorState` survives ckpt.save -> restore -> `remap_sor`
+    across fleet sizes (survivors keep learned regions, joiners cold-start);
+  * plumbing — per-rail observables through `poll_frame(grad_error={rail:
+    ...})`, the host controller's polled ingest, `MultiRailClosedLoop`, and
+    the SOR-threaded fleet train step.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager, remap_sor
+from repro.core import sor
+from repro.core.control_plane import HostRailController, InGraphRailController
+from repro.core.fleet import FleetPowerManager
+from repro.core.policy import ClosedLoop, MultiRailClosedLoop
+from repro.core.power_plane import PowerPlaneState, StepProfile
+from repro.core.telemetry import (ALL_RAIL_OBSERVABLES, FrameHistory,
+                                  Provenance, RailObservable, TelemetryFrame)
+from repro.kernels import ops, ref
+
+BOUND = 5e-3
+RAILS3 = ALL_RAIL_OBSERVABLES   # (VDD_CORE, VDD_HBM, VDD_IO)
+
+
+def _frames3(n_chips, v_points, onsets, rng=None, drop=()):
+    """Synthetic 3-rail stream: every rail at voltage v with its own
+    frontier-shaped observable; rails named in `drop` omit their observable
+    (that rail's lane records as invalid)."""
+    frames = []
+    for v in v_points:
+        vv = jnp.full((n_chips,), float(v), jnp.float32)
+
+        def obs(rail):
+            on = jnp.asarray(onsets[rail], jnp.float32)
+            return BOUND * 10.0 ** jnp.clip(30.0 * (on - vv), -6.0, 3.0)
+
+        extras = {}
+        if "VDD_CORE" not in drop:
+            extras["straggle_rate"] = obs("VDD_CORE")
+        if "VDD_HBM" not in drop:
+            extras["hbm_error_rate"] = obs("VDD_HBM")
+        err = (obs("VDD_IO") if "VDD_IO" not in drop
+               else jnp.full((n_chips,), jnp.nan))
+        frames.append(TelemetryFrame(
+            grad_error=err, v_io=vv, v_core=vv, v_hbm=vv,
+            age_s=jnp.zeros((n_chips,)), extras=extras,
+            provenance=Provenance.POLLED))
+    return frames
+
+
+# -- independence ---------------------------------------------------------------
+
+def test_multirail_fits_are_independent():
+    """Perturbing the VDD_CORE samples must never move the VDD_IO frontier:
+    the rail axis is elementwise through history, fit and envelopes."""
+    cfg = sor.SorConfig(refresh_every=1, rails=RAILS3, ingest="frames")
+    onsets_a = {"VDD_CORE": [0.66, 0.70], "VDD_HBM": [0.90, 0.95],
+                "VDD_IO": [0.63, 0.67]}
+    # same IO/HBM world, very different CORE onsets
+    onsets_b = {**onsets_a, "VDD_CORE": [0.72, 0.75]}
+
+    def learn(onsets):
+        st = sor.init_state(cfg, n_chips=2)
+        for f in _frames3(2, np.linspace(0.95, 0.60, 24), onsets):
+            st = sor.observe(st, f, cfg)
+        return st.estimate
+
+    ea, eb = learn(onsets_a), learn(onsets_b)
+    i_core = cfg.rail_index("VDD_CORE")
+    i_io = cfg.rail_index("VDD_IO")
+    i_hbm = cfg.rail_index("VDD_HBM")
+    # the CORE frontier moved with its onsets...
+    assert not np.allclose(np.asarray(ea.v_frontier[i_core]),
+                           np.asarray(eb.v_frontier[i_core]))
+    # ...while IO and HBM are bit-identical
+    for i in (i_io, i_hbm):
+        for field in ("intercept", "slope", "v_frontier", "confidence",
+                      "n_eff"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ea, field)[i]),
+                np.asarray(getattr(eb, field)[i]), err_msg=field)
+
+
+def test_rail_without_observable_stays_cold():
+    """A rail whose observable the frames never carry records nothing:
+    zero confidence (the cold-start static pin), while the other rails
+    learn normally."""
+    cfg = sor.SorConfig(refresh_every=1, rails=RAILS3, ingest="frames")
+    onsets = {"VDD_CORE": [0.66], "VDD_HBM": [0.90], "VDD_IO": [0.64]}
+    st = sor.init_state(cfg, n_chips=1)
+    for f in _frames3(1, np.linspace(0.95, 0.60, 24), onsets,
+                      drop=("VDD_HBM",)):
+        st = sor.observe(st, f, cfg)
+    conf = np.asarray(st.estimate.confidence)
+    assert conf[cfg.rail_index("VDD_HBM")] == 0.0
+    assert conf[cfg.rail_index("VDD_CORE")] > 0.5
+    assert conf[cfg.rail_index("VDD_IO")] > 0.5
+    envs = sor.rail_envelopes(st.estimate, cfg)
+    # the cold rail's envelope IS the static one, bit-exactly
+    np.testing.assert_array_equal(
+        np.asarray(envs["VDD_HBM"].floor(0.90)), np.float32(0.90))
+
+
+# -- the kernel -----------------------------------------------------------------
+
+@pytest.mark.parametrize("window,n", [(8, 16), (32, 128), (32, 130),
+                                      (17, 384)])
+def test_sor_accumulate_kernel_matches_reference(window, n):
+    """Interpret-mode Pallas accumulation vs the jnp oracle, padded and
+    unpadded shapes."""
+    from repro.kernels.fleet_telemetry import sor_accumulate
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0.5, 1.0, (window, n)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(window, n)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.0, 1.0, (window, n)), jnp.float32)
+    got = sor_accumulate(x, y, w, interpret=True)
+    want = ref.sor_accumulate_reference(x, y, w)
+    for g, t in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(t),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_sor_accumulate_under_jit_and_vmap():
+    """The ops dispatch path is jit/vmap-pure and matches the reference to
+    f32 tolerance (acceptance criterion)."""
+    rng = np.random.default_rng(1)
+    xb = jnp.asarray(rng.uniform(0.5, 1.0, (3, 16, 32)), jnp.float32)
+    yb = jnp.asarray(rng.normal(size=(3, 16, 32)), jnp.float32)
+    wb = jnp.asarray(rng.uniform(0.0, 1.0, (3, 16, 32)), jnp.float32)
+    jitted = jax.jit(ops.sor_accumulate)(xb[0], yb[0], wb[0])
+    want0 = ref.sor_accumulate_reference(xb[0], yb[0], wb[0])
+    for g, t in zip(jitted, want0):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(t),
+                                   rtol=1e-5, atol=1e-5)
+    vmapped = jax.vmap(ops.sor_accumulate)(xb, yb, wb)
+    for i in range(3):
+        want = ref.sor_accumulate_reference(xb[i], yb[i], wb[i])
+        for g, t in zip(vmapped, want):
+            np.testing.assert_allclose(np.asarray(g[i]), np.asarray(t),
+                                       rtol=1e-5, atol=1e-5)
+
+
+# -- the PR-4 pin: 1-rail config == the pre-refactor scalar learner -------------
+
+def _pr4_fit(v_io, error, valid, cursor, capacity, cfg):
+    """The pre-refactor (PR-4) EWLS fit, verbatim: operates on the flat
+    [capacity, n_chips] arrays the old FrameHistory stored."""
+    eps = jnp.float32(1e-9)
+    slots = jnp.arange(capacity)
+    rank = (cursor - 1 - slots) % capacity
+    w = jnp.asarray(cfg.decay, jnp.float32) ** rank
+    w = w.reshape((capacity,) + (1,) * (v_io.ndim - 1))
+    w = w * valid.astype(jnp.float32)
+    x = jnp.where(valid, v_io, 0.0)
+    y = jnp.clip(jnp.log10(jnp.maximum(error, 10.0 ** sor.LOG10_ERR_FLOOR)),
+                 sor.LOG10_ERR_FLOOR, sor.LOG10_ERR_CEIL)
+    y = jnp.where(valid, y, 0.0)
+    sw = jnp.sum(w, axis=0)
+    sx = jnp.sum(w * x, axis=0)
+    sy = jnp.sum(w * y, axis=0)
+    sxx = jnp.sum(w * x * x, axis=0)
+    sxy = jnp.sum(w * x * y, axis=0)
+    denom = sw * sxx - sx * sx
+    slope = (sw * sxy - sx * sy) / jnp.maximum(denom, eps)
+    intercept = (sy - slope * sx) / jnp.maximum(sw, eps)
+    var_x = jnp.maximum(sxx / jnp.maximum(sw, eps)
+                        - (sx / jnp.maximum(sw, eps)) ** 2, 0.0)
+    steep = slope < -jnp.float32(cfg.min_slope)
+    spread = var_x > jnp.float32(cfg.min_spread_v) ** 2
+    usable = steep & spread & (denom > eps)
+    log10_bound = jnp.float32(np.log10(cfg.error_bound))
+    v_frontier = jnp.where(
+        usable, (log10_bound - intercept) / jnp.where(usable, slope, -1.0),
+        0.0)
+    v_frontier = jnp.clip(v_frontier, 0.0, 2.0)
+    confidence = jnp.where(
+        usable, 1.0 - jnp.exp(-sw / jnp.float32(cfg.conf_samples)), 0.0)
+    return {
+        "intercept": jnp.where(usable, intercept, 0.0).astype(jnp.float32),
+        "slope": jnp.where(usable, slope, 0.0).astype(jnp.float32),
+        "v_frontier": v_frontier.astype(jnp.float32),
+        "confidence": confidence.astype(jnp.float32),
+        "n_eff": sw.astype(jnp.float32),
+    }
+
+
+def test_one_rail_fit_bit_identical_to_pr4():
+    """Acceptance: with the default 1-rail (VDD_IO-only) config, the
+    rail-indexed fit reproduces the PR-4 scalar learner bit-exactly — the
+    [n_rails=1] axis and the ops.sor_accumulate routing change nothing."""
+    cfg = sor.SorConfig(refresh_every=1, decay=0.96, error_bound=BOUND)
+    n = 5
+    v_on = jnp.asarray(np.linspace(0.62, 0.70, n), jnp.float32)
+    h = FrameHistory.create(cfg.capacity, n_chips=n)
+    rng = np.random.default_rng(7)
+    for v in np.linspace(0.76, 0.58, 40):   # wraps the ring, mixed validity
+        vv = jnp.full((n,), float(v), jnp.float32)
+        err = BOUND * 10.0 ** jnp.clip(30.0 * (v_on - vv), -6.0, 3.0)
+        if rng.random() < 0.2:              # occasional dead chip 0 lane
+            vv = vv.at[0].set(jnp.nan)
+        h = h.push(TelemetryFrame(grad_error=err, v_io=vv, v_core=vv,
+                                  v_hbm=vv, provenance=Provenance.POLLED))
+    est = sor.fit_history(h, cfg)
+    want = _pr4_fit(h.v_io, h.error, h.valid[:, 0], h.cursor,
+                    cfg.capacity, cfg)
+    for field, w in want.items():
+        np.testing.assert_array_equal(
+            np.asarray(getattr(est, field)[0]), np.asarray(w),
+            err_msg=field)
+    assert (np.asarray(est.confidence) > 0).any()   # the fit really ran
+
+
+# -- persistence: checkpoint round-trip + remap across fleet sizes --------------
+
+def _learned_state(cfg, n_chips, onsets=None):
+    onsets = onsets or {
+        "VDD_CORE": np.linspace(0.62, 0.68, n_chips),
+        "VDD_HBM": np.linspace(0.88, 0.93, n_chips),
+        "VDD_IO": np.linspace(0.61, 0.67, n_chips)}
+    st = sor.init_state(cfg, n_chips)
+    for f in _frames3(n_chips, np.linspace(0.95, 0.58, 24), onsets):
+        st = sor.observe(st, f, cfg)
+    return st
+
+
+def test_sor_state_checkpoint_roundtrip(tmp_path):
+    cfg = sor.SorConfig(refresh_every=1, rails=RAILS3, ingest="frames")
+    st = _learned_state(cfg, 4)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, {"sor": st})
+    step, restored = mgr.restore({"sor": sor.init_state(cfg, 4)})
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(restored["sor"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # meta (capacity, rails) comes from the template, not the npz
+    assert restored["sor"].history.rails == RAILS3
+
+
+def test_remap_sor_across_fleet_sizes():
+    cfg = sor.SorConfig(refresh_every=1, rails=RAILS3, ingest="frames")
+    st = _learned_state(cfg, 4)
+    grown = remap_sor(st, 6)
+    assert grown.history.chip_shape == (6,)
+    conf = np.asarray(grown.estimate.confidence)
+    # survivors keep their learned regions bit-exactly...
+    np.testing.assert_array_equal(conf[:, :4],
+                                  np.asarray(st.estimate.confidence))
+    # ...joiners start at the cold-start pin (no history, zero confidence)
+    assert (conf[:, 4:] == 0).all()
+    assert not np.asarray(grown.history.valid)[:, :, 4:].any()
+    envs = sor.rail_envelopes(grown.estimate, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(envs["VDD_IO"].floor(0.65))[4:], np.float32(0.65))
+    # shrink keeps the surviving prefix
+    shrunk = remap_sor(st, 2)
+    np.testing.assert_array_equal(
+        np.asarray(shrunk.estimate.v_frontier),
+        np.asarray(st.estimate.v_frontier)[:, :2])
+    # same size is a no-op; scalar states have nothing to remap
+    assert remap_sor(st, 4) is st
+    with pytest.raises(ValueError, match="fleet-shaped"):
+        remap_sor(sor.init_state(cfg), 4)
+
+
+def test_restore_rejects_mismatched_rail_layout(tmp_path):
+    """A SorState learned under one rails layout must never restore into a
+    config with a different layout — the arrays would index one rail's
+    learned frontier as another's (safety, not just shape hygiene)."""
+    cfg3 = sor.SorConfig(refresh_every=1, rails=RAILS3, ingest="frames")
+    st = _learned_state(cfg3, 2)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"sor": st})
+    cfg1 = sor.SorConfig()                    # default 1-rail VDD_IO
+    with pytest.raises(ValueError, match="rails"):
+        mgr.restore({"sor": sor.init_state(cfg1, 2)})
+    # same rail NAMES but a different bound is still a layout mismatch (the
+    # frontier was cut at the old bound; relabeling it would be silent)
+    respec = tuple(dataclasses.replace(s, error_bound=1e-6) for s in RAILS3)
+    with pytest.raises(ValueError, match="rails"):
+        mgr.restore({"sor": sor.init_state(
+            dataclasses.replace(cfg3, rails=respec), 2)})
+    # a different window capacity would break the ring arithmetic
+    with pytest.raises(ValueError, match="capacity"):
+        mgr.restore({"sor": sor.init_state(
+            dataclasses.replace(cfg3, capacity=16), 2)})
+    # the matching layout still round-trips
+    step, restored = mgr.restore({"sor": sor.init_state(cfg3, 2)})
+    assert step == 1 and restored["sor"].history.rails == RAILS3
+
+
+def test_restore_skips_groups_missing_from_checkpoint(tmp_path):
+    """A pre-SOR checkpoint restores into a SOR-enabled state template when
+    the caller marks the group optional (the trainer does); a missing
+    REQUIRED group still raises loudly instead of silently restarting that
+    state from fresh."""
+    cfg = sor.SorConfig(rails=RAILS3, ingest="frames")
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"plane": PowerPlaneState.fleet(2)})
+    fresh = sor.init_state(cfg, 2)
+    template = {"plane": PowerPlaneState.fleet(2), "sor": fresh}
+    step, restored = mgr.restore(template, optional=("sor",))
+    assert step == 1 and "sor" not in restored and "plane" in restored
+    with pytest.raises(KeyError, match="sor"):
+        mgr.restore(template)   # not marked optional -> loud
+
+
+# -- per-rail observable plumbing -----------------------------------------------
+
+def test_poll_frame_per_rail_dict():
+    """poll_frame(grad_error={rail: value}) places each rail's observable
+    under its canonical key; missing rails record NaN (invalid sample)."""
+    fpm = FleetPowerManager(2)
+    f = fpm.poll_frame(grad_error={"VDD_IO": np.full(2, 1e-3),
+                                   "VDD_CORE": np.full(2, 2e-3)})
+    np.testing.assert_allclose(np.asarray(f.grad_error), 1e-3)
+    np.testing.assert_allclose(np.asarray(f.extras["straggle_rate"]), 2e-3)
+    assert np.isnan(np.asarray(f.extras["hbm_error_rate"])).all()
+    # VDD_IO missing from the dict -> NaN grad_error, not silent attribution
+    f2 = fpm.poll_frame(grad_error={"VDD_CORE": np.full(2, 2e-3)})
+    assert np.isnan(np.asarray(f2.grad_error)).all()
+    with pytest.raises(ValueError, match="unknown rail"):
+        fpm.poll_frame(grad_error={"VDD_OOPS": 1.0})
+    # legacy scalar spelling unchanged: attributed to grad_error alone
+    f3 = fpm.poll_frame(grad_error=np.full(2, 5e-4))
+    np.testing.assert_allclose(np.asarray(f3.grad_error), 5e-4)
+    assert "straggle_rate" not in f3.extras
+
+
+def test_host_polled_ingest_multirail():
+    """The poll-fed host loop learns each rail from its own observable; a
+    rail whose observable the caller never reports stays at the static
+    pin instead of inheriting the VDD_IO error."""
+    cfg = sor.SorConfig(capacity=24, refresh_every=2, decay=0.96,
+                        guard_v=0.004, max_extension_v=0.12, rails=RAILS3)
+    hc = HostRailController(
+        MultiRailClosedLoop(floors={"VDD_CORE": 0.70, "VDD_HBM": 1.00,
+                                    "VDD_IO": 0.70}),
+        settle_band_frac=0.001, decide_from="poll", sor=cfg)
+    hc.enable_polling(interval_s=1e-3)
+    plane = PowerPlaneState.nominal()
+    for _ in range(40):
+        hc.fleet.idle(5e-3)
+        err = BOUND * 10.0 ** jnp.clip(30.0 * (0.78 - plane.v_io), -6.0, 3.0)
+        sr = BOUND * 10.0 ** jnp.clip(30.0 * (0.72 - plane.v_core), -6.0, 3.0)
+        plane = hc.control_step(
+            plane, {"grad_error": err, "straggle_rate": sr})
+    s = hc.sor_summary()
+    assert s["VDD_IO/chips_learned"] == 1
+    assert s["VDD_CORE/chips_learned"] == 1
+    assert s["VDD_HBM/chips_learned"] == 0     # never reported -> cold
+    assert 0.775 < s["VDD_IO/floor_mean_v"] < 0.80
+    assert 0.715 < s["VDD_CORE/floor_mean_v"] < 0.74
+    assert float(hc.last_envelope["VDD_HBM"].floor(1.00)) == 1.00
+
+
+def test_multirail_policy_holds_unobserved_rails():
+    """MultiRailClosedLoop walks only rails with observables; NaN or absent
+    observables hold that rail in place."""
+    pol = MultiRailClosedLoop()
+    plane = PowerPlaneState.nominal()
+    frame = TelemetryFrame(grad_error=jnp.float32(1e-4), v_io=plane.v_io,
+                           v_core=plane.v_core, v_hbm=plane.v_hbm)
+    req = pol.decide(plane, frame)
+    # IO walks down (observable under bound); CORE/HBM have no observable
+    assert float(req.v_io) == pytest.approx(float(plane.v_io) - pol.step_v)
+    assert req.v_core is None and req.v_hbm is None
+    # NaN observable: the rail holds position instead of walking blind
+    f2 = dataclasses.replace(
+        frame, extras={"straggle_rate": jnp.float32(np.nan)})
+    req2 = pol.decide(plane, f2)
+    assert float(req2.v_core) == pytest.approx(float(plane.v_core))
+    # over-bound observable backs off toward nominal
+    f3 = dataclasses.replace(
+        frame, extras={"straggle_rate": jnp.float32(1.0)})
+    req3 = pol.decide(plane, f3)
+    assert float(req3.v_core) > float(plane.v_core) - 1e-6
+    # a floors dict scoped to a subset of rails never walks the others,
+    # even when their observable is present in the frame
+    scoped = MultiRailClosedLoop(floors={"VDD_IO": 0.75})
+    f4 = dataclasses.replace(
+        frame, extras={"straggle_rate": jnp.float32(1e-4)})
+    req4 = scoped.decide(plane, f4)
+    assert req4.v_core is None and req4.v_io is not None
+    # NaN grad_error holds the compression level too (never resets to
+    # lossless on missing telemetry)
+    escalated = dataclasses.replace(plane, comp_level=jnp.int32(2))
+    f5 = dataclasses.replace(frame, grad_error=jnp.float32(np.nan))
+    assert int(pol.decide(escalated, f5).comp_level) == 2
+
+
+def test_unknown_age_carries_zero_fit_weight():
+    """A sample pushed with the documented NaN staleness sentinel records
+    as infinitely stale: zero weight under age_halflife_s (conservative,
+    matching StalenessGuard), not the perfectly-fresh 0.0 of a silent
+    coercion."""
+    cfg = sor.SorConfig(refresh_every=1, age_halflife_s=1.0)
+    h = FrameHistory.create(4)
+    h = h.push(TelemetryFrame(grad_error=jnp.float32(1e-3),
+                              v_io=jnp.float32(0.9),
+                              age_s=jnp.float32(np.nan),
+                              provenance=Provenance.POLLED))
+    assert np.isinf(np.asarray(h.age_s)[0])
+    w = np.asarray(h.recency_weights(cfg.decay)
+                   * 0.5 ** (np.asarray(h.age_s)[:, None]
+                             / cfg.age_halflife_s))
+    assert w[0, 0] == 0.0
+
+
+def test_host_actuate_only_with_sor_rejected():
+    """sor= on a policy-less (pure actuation) host controller would never
+    observe anything — reject instead of silently never learning."""
+    with pytest.raises(ValueError, match="actuate-only"):
+        HostRailController(None, sor=sor.SorConfig())
+
+
+def test_reduce_worst_ignores_nan_lanes():
+    """One unmeasured (NaN) chip must not poison the worst-chip reduction:
+    the genuinely over-bound chip still gates the fleet; all-NaN stays NaN
+    (nothing measured -> every chip holds)."""
+    f = TelemetryFrame(
+        grad_error=jnp.asarray([np.nan, 1e-2, 1e-4], jnp.float32),
+        extras={"straggle_rate": jnp.asarray([np.nan, np.nan, np.nan],
+                                             jnp.float32)})
+    r = f.reduce_worst(("grad_error", "straggle_rate"))
+    np.testing.assert_allclose(np.asarray(r.grad_error),
+                               np.full(3, 1e-2), rtol=1e-6)
+    assert np.isnan(np.asarray(r.extras["straggle_rate"])).all()
+
+
+def test_bare_envelope_never_crosses_rails():
+    """A bare SafeEnvelope carries its rail tag: an envelope fitted on
+    VDD_CORE is never silently blended into VDD_IO decisions (and the
+    untagged historical spelling still means VDD_IO)."""
+    core_env = sor.SafeEnvelope(v_min=jnp.float32(0.66),
+                                confidence=jnp.float32(1.0),
+                                rail="VDD_CORE")
+    assert sor.envelope_for(core_env, "VDD_CORE") is core_env
+    assert sor.envelope_for(core_env, "VDD_IO") is None
+    assert sor.as_envelopes(core_env) == {"VDD_CORE": core_env}
+    legacy = sor.SafeEnvelope(v_min=jnp.float32(0.70),
+                              confidence=jnp.float32(1.0))
+    assert sor.envelope_for(legacy, "VDD_IO") is legacy
+    # safe_envelope() on a 1-rail non-IO config tags its rail
+    cfg = sor.SorConfig(rails=(sor.DEFAULT_RAIL_OBSERVABLES[0]
+                               .__class__("VDD_CORE", "v_core",
+                                          "straggle_rate"),),
+                        ingest="frames")
+    env = sor.safe_envelope(sor.SorEstimate.init(2), cfg)
+    assert env.rail == "VDD_CORE"
+    assert sor.envelope_for(env, "VDD_IO") is None
+
+
+# -- the SOR-threaded fleet train step ------------------------------------------
+
+def test_fleet_train_step_threads_sor_state():
+    """make_fleet_train_step(fleet_cfg.sor=...) returns the 6-arg step that
+    learns in-graph: confidence accrues during training and the per-rail
+    envelopes clamp arbitration — all inside one jitted step."""
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.optim import adamw
+    from repro.optim.schedule import wsd
+    from repro.train.step import (FleetStepConfig, StepConfig,
+                                  jit_train_step, make_fleet_train_step)
+    from repro.train.trainer import initial_plane_and_ef
+    from repro.data.pipeline import SyntheticLM, DataConfig
+    from repro.core.hwspec import FleetSpec
+
+    cfg_m = get_config("minicpm_2b", tiny=True)
+    api = registry.build(cfg_m, remat="none")
+    params = api.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(grad_clip_norm=1.0)
+    opt = adamw.init_state(params, opt_cfg)
+    sched = lambda s: wsd(s, peak_lr=1e-3, warmup_steps=2, stable_steps=50,
+                          decay_steps=50)
+    n = 3
+    fs = FleetSpec.sample(n, seed=7)
+    scfg = sor.SorConfig(capacity=16, refresh_every=2, ingest="frames",
+                         rails=RAILS3)
+    fleet_cfg = FleetStepConfig(spec=fs, hbm_error_base=1e-4, sor=scfg)
+    profile = StepProfile(flops_per_chip=2e12, hbm_bytes_per_chip=8e9,
+                          ici_bytes_per_chip=4e9, grad_bytes_per_chip=3e9)
+    step = jit_train_step(
+        make_fleet_train_step(lambda p, b: api.loss_fn(p, b), opt_cfg,
+                              sched, profile,
+                              StepConfig(policy=MultiRailClosedLoop()),
+                              fleet_cfg),
+        donate=False)
+    data = SyntheticLM(DataConfig(vocab_size=cfg_m.vocab_size, seq_len=32,
+                                  global_batch=4, seed=0))
+    plane, ef = initial_plane_and_ef(params, fleet=fs)
+    ss = sor.init_state(scfg, n)
+    for i in range(6):
+        params, opt, plane, ef, ss, metrics = step(
+            params, opt, plane, ef, ss, data.jax_batch(i))
+    assert int(ss.tick) == 6
+    # the walked rails accrued confidence in-graph (VDD_HBM walks on the
+    # margin-coupled injection observable)
+    conf = np.asarray(ss.estimate.confidence)
+    assert conf.shape == (3, n)
+    assert (conf > 0).any()
+    assert float(metrics["fleet/sor_conf_mean"]) > 0.0
+    # polled ingest is rejected up front for the bus-less in-graph step
+    with pytest.raises(ValueError, match="ingest"):
+        make_fleet_train_step(
+            lambda p, b: api.loss_fn(p, b), opt_cfg, sched, profile,
+            StepConfig(policy=MultiRailClosedLoop()),
+            dataclasses.replace(fleet_cfg, sor=sor.SorConfig(rails=RAILS3)))
+    # and a SOR config with no policy to consume it is an error, not a no-op
+    with pytest.raises(ValueError, match="policy"):
+        make_fleet_train_step(
+            lambda p, b: api.loss_fn(p, b), opt_cfg, sched, profile,
+            StepConfig(policy=None), fleet_cfg)
+    # a caller-owned controller is never mutated: the step clones it with
+    # the SOR config instead of assigning into the user's instance
+    mine = InGraphRailController(MultiRailClosedLoop())
+    make_fleet_train_step(lambda p, b: api.loss_fn(p, b), opt_cfg, sched,
+                          profile, StepConfig(policy=mine), fleet_cfg)
+    assert mine.sor is None
+
+
+def test_sor_rejects_legacy_update_only_policy():
+    """A legacy update_*-only policy under sor= would learn envelopes the
+    legacy decision path never consumes — both controllers refuse loudly
+    instead of silently running static control."""
+    from repro.core.policy import Policy
+
+    class Legacy(Policy):
+        name = "legacy-only"
+
+        def update_jax(self, state, telemetry):
+            return state
+
+    scfg = sor.SorConfig(ingest="frames")
+    with pytest.raises(ValueError, match="legacy"):
+        InGraphRailController(Legacy(), sor=scfg)
+    with pytest.raises(ValueError, match="legacy"):
+        HostRailController(Legacy(), sor=sor.SorConfig())
+    # decide() policies are accepted as before
+    InGraphRailController(ClosedLoop(), sor=scfg)
+
+
+def test_summary_rejects_mismatched_rail_config():
+    """summary() with a config whose rail count disagrees with the estimate
+    must refuse instead of folding rails into the chip axis."""
+    est = sor.SorEstimate.init(4, n_rails=3)
+    with pytest.raises(ValueError, match="rail"):
+        sor.summary(est, sor.SorConfig())   # 1-rail default cfg, 3-rail est

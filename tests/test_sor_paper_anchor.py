@@ -1,0 +1,97 @@
+"""Paper-model cross-check (ROADMAP open item): fit the SOR learner against
+`transceiver.GtxLinkModel` sweeps — the *measured* BER including the
+deterministic Poisson-ish jitter and the detection floor (zero errors below
+~0.5 expected counts) — and assert the learned VDD_IO onset lands within
+tolerance of the static Fig 12/14 anchors the model was built from.
+
+The anchor per line rate: the RX BER onset voltage (Fig 12/14) minus the
+5 mV transition band, i.e. the voltage where the modeled log10(BER) ramp
+reaches the paper's BER <= 1e-6 boundary (Fig 12c: 0.864 V at 10 Gbps —
+the operating point behind the headline 29.3% rail-power saving)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sor
+from repro.core.telemetry import (FrameHistory, Provenance, RailObservable,
+                                  TelemetryFrame)
+from repro.core.transceiver import RX_BER_ONSET_V, GtxLinkModel
+
+BER_BOUND = 1e-6          # the paper's bounded-region cut
+TOL_V = 0.008             # learned onset within 8 mV of the static anchor
+
+# one fitted rail: VDD_IO (MGTAVCC analogue), frontier cut at BER <= 1e-6
+_SPEC = (RailObservable("VDD_IO", "v_io", "grad_error",
+                        error_bound=BER_BOUND),)
+
+
+def _fit_sweep(model: GtxLinkModel, speed: float, v_hi: float, v_lo: float,
+               step: float = 0.001) -> sor.SorEstimate:
+    """Sweep RX-side voltage (TX at nominal, the §VI-B procedure), push the
+    *measured* BER of each point through the learner, fit."""
+    vs = np.arange(v_hi, v_lo - 1e-9, -step)
+    cfg = sor.SorConfig(capacity=max(32, len(vs)), refresh_every=1,
+                        decay=1.0, error_bound=BER_BOUND, guard_v=0.0,
+                        min_slope=5.0, rails=_SPEC)
+    h = FrameHistory.create(cfg.capacity, rails=_SPEC)
+    for v in vs:
+        r = model.run_link_test(1.0, float(v), speed)
+        h = h.push(TelemetryFrame(grad_error=jnp.float32(r.ber),
+                                  v_io=jnp.float32(v),
+                                  provenance=Provenance.POLLED))
+    return sor.fit_history(h, cfg)
+
+
+def _anchor(speed: float) -> float:
+    """Where the model's Fig-12c ramp meets BER == 1e-6: the static onset
+    minus the 5 mV transition band."""
+    return RX_BER_ONSET_V[speed] - 0.005
+
+
+@pytest.mark.parametrize("speed", [10.0, 5.0])
+def test_learned_onset_matches_fig12_14_anchor(speed):
+    model = GtxLinkModel(seed=0)
+    onset = RX_BER_ONSET_V[speed]
+    est = _fit_sweep(model, speed, v_hi=onset - 0.001, v_lo=onset - 0.017)
+    conf = float(est.confidence[0])
+    front = float(est.v_frontier[0])
+    assert conf > 0.5, "the sweep must yield a trusted fit"
+    assert float(est.slope[0]) < -50.0   # decades/V: a real BER wall
+    # the learned frontier lands at the static Fig 12/14 anchor
+    assert abs(front - _anchor(speed)) <= TOL_V, (front, _anchor(speed))
+    # and below the detection onset: the learner never claims BER <= 1e-6
+    # ABOVE the voltage where errors first appear
+    assert front < onset
+
+
+def test_learned_onsets_ordered_like_the_paper():
+    """Fig 14: higher line rates need more voltage — the learned onsets
+    must come back in the same order as the static anchors."""
+    model = GtxLinkModel(seed=0)
+    fronts = {}
+    for speed in (5.0, 7.5, 10.0):
+        onset = RX_BER_ONSET_V[speed]
+        est = _fit_sweep(model, speed, v_hi=onset - 0.001,
+                         v_lo=onset - 0.017)
+        assert float(est.confidence[0]) > 0.5
+        fronts[speed] = float(est.v_frontier[0])
+    assert fronts[10.0] > fronts[7.5] > fronts[5.0]
+
+
+def test_detection_floor_points_pull_the_fit_conservatively():
+    """Sweeping from ABOVE the onset includes zero-error points (the
+    detection floor clamps them at the log floor). They flatten the fitted
+    slope, which moves the frontier DOWN (conservative: claims less
+    headroom, never more) and must not break the fit."""
+    model = GtxLinkModel(seed=0)
+    onset = RX_BER_ONSET_V[10.0]
+    with_floor = _fit_sweep(model, 10.0, v_hi=onset + 0.006,
+                            v_lo=onset - 0.017)
+    below_only = _fit_sweep(model, 10.0, v_hi=onset - 0.001,
+                            v_lo=onset - 0.017)
+    assert float(with_floor.confidence[0]) > 0.5
+    assert (float(with_floor.v_frontier[0])
+            <= float(below_only.v_frontier[0]) + 1e-6)
+    # still anchored: within a widened tolerance of the Fig 12c point
+    assert abs(float(with_floor.v_frontier[0]) - _anchor(10.0)) <= 0.012
