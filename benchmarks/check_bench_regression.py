@@ -1,0 +1,81 @@
+"""CI bench-smoke regression gate for the fused learned control path.
+
+Compares a fresh ``benchmarks/run.py --only fleet_frontier:run_learned
+--json-out`` record against the committed baseline
+(``reports/BENCH_smoke_baseline.json``) and fails if the learned path got
+slower. Raw microseconds are machine-dependent — CI runners and dev boxes
+differ by integer factors — so the gated quantity is the *learned/static
+wall-time ratio* within the same run: static and learned rollouts share the
+machine, the fleet, and the jit cache, so their ratio isolates what the
+learned path adds (the thing PR 6's fused round collapsed). A >20% ratio
+regression means someone un-fused the round or re-introduced the
+every-step refit.
+
+Usage::
+
+    python benchmarks/check_bench_regression.py \
+        reports/bench_smoke.json reports/BENCH_smoke_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TOLERANCE = 0.20    # allowed relative growth of the learned/static ratio
+
+
+def load_record(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    recs = [r for r in data.get("records", []) if "wall_time_us" in r]
+    if not recs:
+        sys.exit(f"{path}: no learned-vs-static record (expected a "
+                 f"fleet_frontier:run_learned --json-out file)")
+    if len(recs) > 1:
+        print(f"{path}: {len(recs)} records; gating on the first "
+              f"({recs[0].get('name')})")
+    return recs[0]
+
+
+def ratio(rec: dict) -> float:
+    wt = rec["wall_time_us"]
+    return wt["learned"] / max(wt["static"], 1e-9)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh bench-smoke json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed relative ratio growth (default 0.20)")
+    args = ap.parse_args(argv)
+
+    cur, base = load_record(args.current), load_record(args.baseline)
+    for k in ("n_chips", "steps"):
+        if cur.get(k) != base.get(k):
+            sys.exit(f"config mismatch: current {k}={cur.get(k)} vs "
+                     f"baseline {k}={base.get(k)} — the ratio gate only "
+                     f"holds for identical sweep configs (set "
+                     f"REPRO_BENCH_SOR_CHIPS/REPRO_BENCH_SOR_STEPS to the "
+                     f"baseline's, or refresh the baseline)")
+
+    r_cur, r_base = ratio(cur), ratio(base)
+    limit = r_base * (1.0 + args.tolerance)
+    print(f"learned/static wall-time ratio: current={r_cur:.3f} "
+          f"baseline={r_base:.3f} limit={limit:.3f} "
+          f"(n_chips={cur['n_chips']} steps={cur['steps']})")
+    print(f"learned path: {cur['wall_time_us']['learned']:.0f}us "
+          f"({cur['us_per_step']['learned']:.0f}us/step), "
+          f"power_saving={cur.get('power_saving_pct', float('nan')):.1f}%")
+    if r_cur > limit:
+        sys.exit(f"REGRESSION: learned/static ratio {r_cur:.3f} exceeds "
+                 f"{limit:.3f} (baseline {r_base:.3f} "
+                 f"+{100 * args.tolerance:.0f}%) — the learned control "
+                 f"path got slower relative to the static rollout")
+    print("bench-smoke regression gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,14 +9,73 @@ reported like Table VI."""
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, timed
-from repro.core import overhead
+from repro.core import overhead, sor
 from repro.core.control_plane import HostRailController, InGraphRailController
-from repro.core.policy import PhaseAware
-from repro.core.power_plane import PowerPlaneState, StepProfile, account_step
+from repro.core.hwspec import FleetSpec
+from repro.core.policy import MultiRailClosedLoop, PhaseAware
+from repro.core.power_plane import (PowerPlaneState, StepProfile,
+                                    account_fleet_and_observe, account_step)
+
+LEARNED_ROUND_CHIPS = 64
+
+
+def _learned_round_rows() -> list:
+    """Fused vs unfused learned control round at fleet scale: the SAME
+    SorState/frame through `InGraphRailController.control_round` compiled
+    two ways. Unfused is the PR-5 composition (full windowed EWLS refit
+    computed every round, off-cadence results discarded by select); fused
+    is the single-pass round (one-kernel accumulate+solve, refit gated by
+    `lax.cond` on the refresh cadence). The amortized fused number weights
+    the on-cadence (refit) and hold rounds by the cadence — that is what a
+    scanned rollout actually pays per round."""
+    n = LEARNED_ROUND_CHIPS
+    from benchmarks.fleet_frontier import (FLEET_SEED, PROFILE, SOR_CFG,
+                                           SOR_POLICY_FLOORS)
+    fs = FleetSpec.sample(n, seed=FLEET_SEED)
+    ctrl = InGraphRailController(
+        MultiRailClosedLoop(floors=dict(SOR_POLICY_FLOORS)), sor=SOR_CFG)
+    plane = PowerPlaneState.from_fleet(fs)
+    plane, frame, _ = account_fleet_and_observe(PROFILE, plane, fs)
+    ss = sor.init_state(SOR_CFG, n)
+    for _ in range(SOR_CFG.refresh_every * 2):
+        ss = sor.observe(ss, frame, SOR_CFG)
+
+    fused = jax.jit(lambda p, f, s: ctrl.control_round(p, f, s, fused=True))
+    unfused = jax.jit(
+        lambda p, f, s: ctrl.control_round(p, f, s, fused=False))
+    r = SOR_CFG.refresh_every
+    on = dataclasses.replace(ss, tick=jnp.int32(r))        # refit round
+    off = dataclasses.replace(ss, tick=jnp.int32(r + 1))   # hold round
+
+    def bench(fn, s):
+        return timed(lambda: jax.block_until_ready(
+            fn(plane, frame, s)[0].v_io), repeats=20)[1]
+
+    us_on, us_off = bench(fused, on), bench(fused, off)
+    us_fused = (us_on + (r - 1) * us_off) / r
+    us_unfused = bench(unfused, on)
+    record = {
+        "n_chips": n, "refresh_every": r,
+        "us_per_round": {
+            "fused_amortized": us_fused,
+            "fused_refit_round": us_on,
+            "fused_hold_round": us_off,
+            "unfused": us_unfused,
+        },
+        "speedup": us_unfused / us_fused,
+    }
+    return [{**row(
+        f"ours.learned_round.{n}chips.fused_vs_unfused", us_fused,
+        f"fused={us_fused:.0f}us (refit={us_on:.0f} hold={us_off:.0f} "
+        f"/{r}) unfused={us_unfused:.0f}us "
+        f"speedup={us_unfused / us_fused:.1f}x"),
+        "bench": "controller_overhead", "record": record}]
 
 
 def run():
@@ -57,10 +116,14 @@ def run():
     # host path (SW analogue): PMBus actuation cost per adjustment
     hc = HostRailController()
     st = PowerPlaneState.nominal()
-    import dataclasses
     st2 = dataclasses.replace(st, v_io=jnp.float32(0.85))
     _, us_host = timed(lambda: hc.actuate(st2), repeats=1)
     rows.append(row("ours.host_controller_actuation", us_host,
                     f"simulated_pmbus_latency={hc.actuation_seconds*1e3:.2f}ms "
                     f"(ms-scale, matches paper §VII-C)"))
+
+    # fused in-graph learned round vs the unfused PR-5 composition —
+    # emits the structured record run.py routes to
+    # reports/BENCH_controller_overhead.json
+    rows.extend(_learned_round_rows())
     return rows

@@ -2,10 +2,13 @@
 Prints ``name,us_per_call,derived`` CSV and writes reports/bench_results.json.
 
 ``--only SUBSTR`` runs just the modules whose name contains SUBSTR.
-``--json-out PATH`` additionally writes a structured perf record for the
-fleet-frontier learned-vs-static comparison (rail-power saving %, per-rail
-learned-vs-static floors, wall time) — ``reports/BENCH_fleet_frontier.json``
-by convention, so the bench trajectory accumulates across PRs.
+``--json-out PATH`` additionally writes structured perf records, grouped by
+each row's ``bench`` tag: the fleet-frontier learned-vs-static comparison
+(rail-power saving %, per-rail floors, phase-split wall time) goes to PATH
+itself — ``reports/BENCH_fleet_frontier.json`` by convention — and every
+other tagged group (e.g. ``controller_overhead``'s fused-vs-unfused round)
+to ``BENCH_<bench>.json`` next to it, so the bench trajectory accumulates
+across PRs.
 """
 
 from __future__ import annotations
@@ -81,22 +84,35 @@ def main(argv=None) -> None:
               f"(--only run: reports/bench_results.json left untouched)")
 
     if args.json_out:
-        # the structured perf record: every row that carries a machine-
-        # readable `record` (fleet_frontier's learned-vs-static comparison)
-        # — the across-PR bench trajectory entry. Per-bench timing lives in
-        # each record's wall_time_us; run_wall_time_s covers whatever
-        # module set THIS invocation ran (named, so runs with different
-        # --only selections are not compared as if commensurate).
-        records = [{"name": r["name"], "us_per_call": r["us_per_call"],
-                    **r["record"]} for r in all_rows if "record" in r]
-        if records:
-            out = {"bench": "fleet_frontier", "modules_run": modules,
-                   "run_wall_time_s": round(wall_s, 3),
-                   "failures": failures, "records": records}
-            os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
-            with open(args.json_out, "w") as f:
-                json.dump(out, f, indent=1)
-            print(f"perf record ({len(records)} entries) -> {args.json_out}")
+        # structured perf records: every row that carries a machine-
+        # readable `record` — the across-PR bench trajectory entries.
+        # Rows are grouped by their `bench` tag (untagged rows are the
+        # fleet_frontier learned-vs-static comparison, the original
+        # emitter): the fleet_frontier group writes to --json-out itself
+        # (e.g. reports/BENCH_fleet_frontier.json), every other group to
+        # BENCH_<bench>.json next to it. Per-bench timing lives in each
+        # record; run_wall_time_s covers whatever module set THIS
+        # invocation ran (named, so runs with different --only selections
+        # are not compared as if commensurate).
+        by_bench: dict[str, list] = {}
+        for r in all_rows:
+            if "record" in r:
+                by_bench.setdefault(r.get("bench", "fleet_frontier"),
+                                    []).append(
+                    {"name": r["name"], "us_per_call": r["us_per_call"],
+                     **r["record"]})
+        if by_bench:
+            out_dir = os.path.dirname(args.json_out) or "."
+            os.makedirs(out_dir, exist_ok=True)
+            for bench, records in by_bench.items():
+                path = (args.json_out if bench == "fleet_frontier"
+                        else os.path.join(out_dir, f"BENCH_{bench}.json"))
+                out = {"bench": bench, "modules_run": modules,
+                       "run_wall_time_s": round(wall_s, 3),
+                       "failures": failures, "records": records}
+                with open(path, "w") as f:
+                    json.dump(out, f, indent=1)
+                print(f"perf record ({len(records)} entries) -> {path}")
         else:
             # a selection that ran no record-emitting module must not
             # clobber the accumulated trajectory entry with an empty file

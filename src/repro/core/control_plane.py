@@ -192,6 +192,13 @@ def _concrete_or_none(tree):
     return tree
 
 
+def _all_concrete(tree) -> bool:
+    """True when no leaf is a tracer — i.e. the caller is eager, so a cached
+    jitted round may be dispatched instead of retracing through op-by-op."""
+    return not any(isinstance(leaf, jax.core.Tracer)
+                   for leaf in jax.tree_util.tree_leaves(tree))
+
+
 def _run_policy(policy: Any, plane: PowerPlaneState, frame: TelemetryFrame,
                 telemetry: Any, rail_map: RailMap, *, host: bool,
                 envelope: Any = None
@@ -237,6 +244,10 @@ class ControlPlaneStats:
     polls: int = 0                   # periodic READ_VOUT rounds completed
     polls_deferred: int = 0          # poll rounds that slipped (back-pressure)
     poll_decisions: int = 0          # decisions made from POLLED frames
+    skipped_actuations: int = 0      # PMBus writes skipped by the deadband
+    #                                  scheduler (target pinned at a learned
+    #                                  floor within the confidence-scaled
+    #                                  deadband) — saved bus transactions
 
 
 @runtime_checkable
@@ -303,6 +314,7 @@ class InGraphRailController:
         self.name = name or f"in-graph[{getattr(policy, 'name', 'policy')}]"
         self.last_request: RailRequest | None = None
         self.last_envelope: Any = None
+        self._round_jit = None   # cached jit of control_round (eager callers)
 
     def control_step(self, plane: PowerPlaneState,
                      telemetry: Telemetry) -> PowerPlaneState:
@@ -321,20 +333,46 @@ class InGraphRailController:
                              "before init_sor()")
         return _sor.init_state(self.sor, n_chips)
 
-    def control_step_sor(self, plane: PowerPlaneState, telemetry: Telemetry,
-                         sor_state):
-        """One SOR-aware control round: observe -> refresh-on-cadence ->
-        envelope-driven decide + arbitrate. Returns (plane', sor_state').
-        Pure jnp — thread `sor_state` through the caller's scan carry."""
+    def control_round(self, plane: PowerPlaneState, frame: TelemetryFrame,
+                      sor_state, fused: bool = True):
+        """ONE fused SOR control round, pure jnp: ingest the frame, refresh
+        the frontier estimate on the batched `refresh_every` cadence
+        (`lax.cond` — the refit graph executes only on-cadence instead of
+        every round), derive the per-rail envelopes, and run the
+        envelope-warm-started decide + envelope-clamped arbitration.
+        Returns (plane', sor_state', request, envelopes). `fused=False`
+        runs the historical per-observation-refit graph — the
+        bit-equivalence oracle the fused path is pinned against."""
         from repro.core import sor as _sor
         if self.sor is None:
             raise ValueError("control_step_sor needs sor=SorConfig()")
-        frame = as_frame(telemetry, state=plane)
-        sor_state = _sor.observe(sor_state, frame, self.sor)
+        sor_state = _sor.observe(sor_state, frame, self.sor, fused=fused)
         env = _sor.rail_envelopes(sor_state.estimate, self.sor)
         plane, request = _run_policy(
-            self.policy, plane, frame, telemetry, self.rail_map, host=False,
+            self.policy, plane, frame, frame, self.rail_map, host=False,
             envelope=env)
+        return plane, sor_state, request, env
+
+    def control_step_sor(self, plane: PowerPlaneState, telemetry: Telemetry,
+                         sor_state):
+        """One SOR-aware control round: observe -> refresh-on-cadence ->
+        envelope-driven decide + arbitrate, all one fused `control_round`.
+        Returns (plane', sor_state'). Pure jnp — thread `sor_state` through
+        the caller's scan carry (the round inlines into the caller's trace);
+        eager callers (serve engine, host-side loops) dispatch a cached
+        jitted compilation of the round instead of retracing op-by-op."""
+        if self.sor is None:
+            raise ValueError("control_step_sor needs sor=SorConfig()")
+        frame = as_frame(telemetry, state=plane)
+        if _all_concrete((plane, frame, sor_state)):
+            if self._round_jit is None:
+                self._round_jit = jax.jit(
+                    lambda p, f, s: self.control_round(p, f, s))
+            plane, sor_state, request, env = self._round_jit(
+                plane, frame, sor_state)
+        else:
+            plane, sor_state, request, env = self.control_round(
+                plane, frame, sor_state)
         self.last_request = _concrete_or_none(request)
         self.last_envelope = _concrete_or_none(env)
         return plane, sor_state
@@ -409,6 +447,7 @@ class HostRailController:
         decide_from: str = "telemetry",
         rail_map: RailMap = TPU_V5E_RAIL_MAP,
         sor: "Any | None" = None,
+        deadband_v: float = 0.0,
     ):
         if decide_from not in ("telemetry", "poll"):
             raise ValueError(f"decide_from must be 'telemetry' or 'poll', "
@@ -449,6 +488,14 @@ class HostRailController:
         # the first decide (scalar vs [n_chips] follows the plane)
         self.sor = sor
         self.sor_state = None
+        # deadband actuation scheduling (docs/sor.md "fused control round"):
+        # a lane whose arbitrated target sits within a confidence-scaled
+        # deadband of its learned floor — and whose regulator already holds
+        # that target — is a steady-state lane pinned by the envelope; its
+        # PMBus write is skipped (counted in stats().skipped_actuations).
+        # 0.0 (default) disables the scheduler: every lane writes, as before.
+        self.deadband_v = deadband_v
+        self.skipped_actuations = 0
 
     # -- observe --------------------------------------------------------------
     def observed_frame(self, plane: PowerPlaneState,
@@ -550,10 +597,43 @@ class HostRailController:
         return plane
 
     # -- actuate --------------------------------------------------------------
+    def _deadband_skips(self, want: dict[str, np.ndarray],
+                        n: int) -> dict[str, np.ndarray]:
+        """Per-rail [n] bool masks of lanes the deadband scheduler holds
+        back from the bus this round: the target sits within
+        `confidence * deadband_v` of the rail's learned floor AND the
+        regulator already holds it (within the same band) — a steady-state
+        envelope-pinned lane whose write would be a no-op transaction.
+        Rails without a learned envelope (or at zero confidence) never
+        skip, so cold start actuates every lane, exactly as before."""
+        skips = {name: np.zeros(n, bool) for name in RAIL_LANES}
+        if self.deadband_v <= 0.0 or self.last_envelope is None:
+            return skips
+        from repro.core.sor import envelope_for
+        for name, lane in RAIL_LANES.items():
+            env = envelope_for(self.last_envelope, name)
+            if env is None:
+                continue
+            r = self.rail_map.by_name(name)
+            conf = np.broadcast_to(np.asarray(
+                jax.device_get(env.confidence), np.float64), (n,))
+            floor = np.broadcast_to(np.asarray(
+                jax.device_get(env.floor(r.v_min)), np.float64), (n,))
+            held = np.array([self.fleet.segments[i].rail_voltage(lane)
+                             for i in range(n)], np.float64)
+            band = conf * self.deadband_v
+            skips[name] = ((conf > 0.0)
+                           & (np.abs(want[name] - floor) <= band)
+                           & (np.abs(held - want[name]) <= band))
+        return skips
+
     def actuate(self, plane: PowerPlaneState) -> PowerPlaneState:
         """Push the state's rail voltages through PMBus on every board;
         returns the state with voltages replaced by what the regulators
-        actually achieved (clamp + LINEAR16 quantization + settling)."""
+        actually achieved (clamp + LINEAR16 quantization + settling).
+        Lanes held back by the deadband scheduler (`deadband_v` > 0 with a
+        learned envelope) are omitted from the bus round entirely and read
+        back as the voltage the regulator already holds."""
         batched = jnp.ndim(plane.v_core) >= 1
         want = {name: np.atleast_1d(np.asarray(jax.device_get(
                     getattr(plane, field)), dtype=np.float64))
@@ -563,12 +643,18 @@ class HostRailController:
             raise ValueError(
                 f"state has {n} chip(s) but the fleet bus has "
                 f"{self.fleet.n_boards} board(s)")
+        skips = self._deadband_skips(want, n)
+        self.skipped_actuations += int(sum(s.sum() for s in skips.values()))
         setpoints = [{RAIL_LANES[name]: float(want[name][i])
-                      for name in RAIL_LANES} for i in range(n)]
+                      for name in RAIL_LANES if not skips[name][i]}
+                     for i in range(n)]
         achieved, self.last_report = self.fleet.apply_setpoints(
             setpoints, settle_band_frac=self.settle_band_frac)
-        got = {name: np.array([achieved[i][lane] for i in range(n)],
-                              dtype=np.float32)
+        # skipped lanes read back whatever the regulator holds
+        got = {name: np.array(
+                   [achieved[i].get(lane,
+                                    self.fleet.segments[i].rail_voltage(lane))
+                    for i in range(n)], dtype=np.float32)
                for name, lane in RAIL_LANES.items()}
         if not batched:
             return dataclasses.replace(
@@ -629,7 +715,8 @@ class HostRailController:
             polls=sum(st.polls for st in self.fleet.poll_stats.values()),
             polls_deferred=sum(st.deferred
                                for st in self.fleet.poll_stats.values()),
-            poll_decisions=self.poll_decisions)
+            poll_decisions=self.poll_decisions,
+            skipped_actuations=self.skipped_actuations)
 
 
 class HostPowerController(HostRailController):

@@ -35,6 +35,7 @@ class FleetActuationReport:
     serialized_s: float         # what one shared bus would have cost (sum)
     failed_writes: int = 0      # rejected requests (e.g. outside envelope)
     errors: tuple[str, ...] = ()
+    deadband_skipped: int = 0   # lanes already within deadband_v (no write)
 
     @property
     def ok(self) -> bool:
@@ -150,6 +151,7 @@ class FleetPowerManager:
         self.serialized_seconds = 0.0      # sum-over-segments total
         self.lane_writes = 0
         self.failed_writes = 0
+        self.deadband_skips = 0            # lanes held by the write deadband
         # periodic READ_VOUT telemetry polling (paper Table VI intervals)
         self._polling = False
         self._poll_gen = 0   # invalidates stale periodic events on restart
@@ -205,11 +207,12 @@ class FleetPowerManager:
         achieved: list[dict[int, float]] = [dict() for _ in self.segments]
         touched = 0
         writes = 0
+        skipped = 0
         errors: list[str] = []
 
         def make_actuation(seg: BusSegment, wanted: dict[int, float]):
             def fire(t_fire: float, seg=seg, wanted=wanted):
-                nonlocal writes
+                nonlocal writes, skipped
                 seg.catch_up(t_fire)
                 for lane, volts in sorted(wanted.items()):
                     if abs(seg.rail_voltage(lane) - volts) > deadband_v:
@@ -222,6 +225,7 @@ class FleetPowerManager:
                             errors.append(
                                 f"board {seg.board_id} lane {lane}: {err}")
                     else:
+                        skipped += 1
                         achieved[seg.board_id][lane] = seg.rail_voltage(lane)
             return fire
 
@@ -245,9 +249,11 @@ class FleetPowerManager:
         self.serialized_seconds += serialized
         self.lane_writes += writes
         self.failed_writes += len(errors)
+        self.deadband_skips += skipped
         return achieved, FleetActuationReport(touched, writes, elapsed,
                                               serialized, len(errors),
-                                              tuple(errors))
+                                              tuple(errors),
+                                              deadband_skipped=skipped)
 
     # -- periodic telemetry polling ---------------------------------------------
     def start_polling(self, interval_s: float | None = None,

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from repro.core import ecollectives
 from repro.core.hwspec import V5E, ChipSpec
 from repro.core.power_plane import PowerPlaneState
-from repro.core.telemetry import TelemetryFrame
+from repro.core.telemetry import RAIL_OBSERVABLE_KEYS, TelemetryFrame
 
 
 class ControlAPIDeprecationWarning(DeprecationWarning):
@@ -374,7 +374,9 @@ class MultiRailClosedLoop(Policy):
         return self.decide_env(state, frame, None)
 
     def decide_env(self, state, frame, envelope=None):
-        from repro.core.telemetry import RAIL_OBSERVABLE_KEYS
+        # traces inside InGraphRailController.control_round: everything here
+        # must stay jnp-only so the fused jitted round (observe + refit +
+        # decide + arbitrate) compiles as one program
         rails = (
             ("VDD_CORE", "v_core",
              _nom(frame.v_nom_core, self.spec.nominal_v_core)),

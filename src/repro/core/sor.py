@@ -157,19 +157,18 @@ def _rail_bounds(cfg: SorConfig, chip_ndim: int) -> jnp.ndarray:
         (len(cfg.rails),) + (1,) * chip_ndim)
 
 
-def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
-    """Exponentially-weighted least squares of log10(observable) against the
-    rail-voltage observation over the history window — elementwise per
-    (rail, chip), pure jnp (jit/vmap/scan safe). The five weighted sums are
-    one fused streaming reduction over the window axis (`ops.sor_accumulate`
-    — the Pallas fleet-telemetry kernel on TPU, bit-identical jnp reference
-    elsewhere).
+def _rail_guards(cfg: SorConfig, chip_ndim: int) -> jnp.ndarray:
+    """[n_rails, 1...] guard bands, per-rail overrides applied — the +guard
+    the fused kernel adds onto v_frontier to emit the envelope floor."""
+    g = [s.guard_v if s.guard_v is not None else cfg.guard_v
+         for s in cfg.rails]
+    return jnp.asarray(g, jnp.float32).reshape(
+        (len(cfg.rails),) + (1,) * chip_ndim)
 
-    Confidence gates on three things at once: enough effective samples
-    (`conf_samples` ramp), enough voltage spread to identify a slope
-    (`min_spread_v`), and a frontier with the right sign and steepness
-    (`min_slope`; the observable must *grow* as voltage drops)."""
-    eps = jnp.float32(1e-9)
+
+def _fit_inputs(history: FrameHistory, cfg: SorConfig):
+    """The (x, y, w) EWLS inputs of the window: masked voltages, clipped
+    log10 observables, recency (x optional staleness) weights."""
     w = history.recency_weights(cfg.decay)
     if cfg.age_halflife_s is not None:
         # POLLED samples that were already stale when observed carry less
@@ -181,9 +180,58 @@ def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
         jnp.log10(jnp.maximum(history.obs, 10.0 ** LOG10_ERR_FLOOR)),
         LOG10_ERR_FLOOR, LOG10_ERR_CEIL)
     y = jnp.where(history.valid, y, 0.0)
+    return x, y, w
 
+
+def fit_history(history: FrameHistory, cfg: SorConfig,
+                fused: "bool | None" = None) -> SorEstimate:
+    """Exponentially-weighted least squares of log10(observable) against the
+    rail-voltage observation over the history window — elementwise per
+    (rail, chip), pure jnp (jit/vmap/scan safe).
+
+    `fused=True`: the accumulation AND the per-lane solve (plus the
+    envelope floor) are carried out of ONE streaming pass over the window
+    (`ops.sor_fit` — the fused Pallas fleet-telemetry kernel on TPU; the
+    composed jnp reference elsewhere). `fused=False` is the historical
+    two-stage split — `ops.sor_accumulate` then a host-graph solve. Under
+    a trace the two compile to the same optimized graph, so trajectories
+    are bit-equal (pinned by tests/test_fused_control_round.py).
+
+    `fused=None` (default) resolves by context: fused under a trace (where
+    every hot path lives and the two are bit-identical anyway), the
+    historical split on eager host calls — an eagerly-dispatched fused op
+    would see different XLA contraction (FMA) choices than the op-by-op
+    eager solve, and the PR-4 eager fit pin is bit-exact.
+
+    Confidence gates on three things at once: enough effective samples
+    (`conf_samples` ramp), enough voltage spread to identify a slope
+    (`min_spread_v`), and a frontier with the right sign and steepness
+    (`min_slope`; the observable must *grow* as voltage drops)."""
+    if fused is None:
+        fused = any(isinstance(leaf, jax.core.Tracer)
+                    for leaf in jax.tree_util.tree_leaves(history))
+    x, y, w = _fit_inputs(history, cfg)
     shape = x.shape[1:]                      # [n_rails, *chip]
+    chip_ndim = len(history.chip_shape)
     flat = lambda a: a.reshape(history.capacity, -1)
+
+    if fused:
+        full = lambda a: jnp.broadcast_to(a, shape).reshape(-1)
+        intercept, slope, v_frontier, confidence, n_eff, _floor = (
+            s.reshape(shape) for s in ops.sor_fit(
+                flat(x), flat(y), flat(w),
+                full(_rail_bounds(cfg, chip_ndim)),
+                full(_rail_guards(cfg, chip_ndim)),
+                min_slope=cfg.min_slope, min_spread_v=cfg.min_spread_v,
+                conf_samples=cfg.conf_samples))
+        # the fused pass also emits the envelope floor (v_frontier + guard);
+        # SorEstimate keeps its 5-field checkpoint layout and
+        # `rail_envelopes` re-derives the identical f32 add
+        return SorEstimate(intercept=intercept, slope=slope,
+                           v_frontier=v_frontier, confidence=confidence,
+                           n_eff=n_eff)
+
+    eps = jnp.float32(1e-9)
     sw, sx, sy, sxx, sxy = (s.reshape(shape) for s in ops.sor_accumulate(
         flat(x), flat(y), flat(w)))
 
@@ -197,7 +245,7 @@ def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
     spread = var_x > jnp.float32(cfg.min_spread_v) ** 2
     usable = steep & spread & (denom > eps)
 
-    log10_bound = _rail_bounds(cfg, len(history.chip_shape))
+    log10_bound = _rail_bounds(cfg, chip_ndim)
     v_frontier = jnp.where(
         usable, (log10_bound - intercept) / jnp.where(usable, slope, -1.0),
         0.0)
@@ -213,13 +261,14 @@ def fit_history(history: FrameHistory, cfg: SorConfig) -> SorEstimate:
 
 
 def update_estimate(old: SorEstimate, history: FrameHistory,
-                    cfg: SorConfig) -> SorEstimate:
+                    cfg: SorConfig,
+                    fused: "bool | None" = None) -> SorEstimate:
     """Online refresh: refit the window, then blend into the running
     estimate with `update_gain` (1.0 == adopt the refit). A (rail, chip)
     lane that yields no usable fit keeps the previous estimate — a chip
     whose polls stopped does not forget its learned region, and a cold lane
     stays at zero confidence."""
-    fit = fit_history(history, cfg)
+    fit = fit_history(history, cfg, fused=fused)
     gain = jnp.where(old.confidence > 0.0, jnp.float32(cfg.update_gain), 1.0)
     return jax.tree_util.tree_map(
         lambda o, f: jnp.where(fit.confidence > 0.0, o + gain * (f - o),
@@ -343,21 +392,36 @@ def init_state(cfg: SorConfig, n_chips: int | None = None) -> SorState:
 
 
 def observe(state: SorState, frame: TelemetryFrame,
-            cfg: SorConfig) -> SorState:
+            cfg: SorConfig, fused: "bool | None" = None) -> SorState:
     """Push one observation and refresh the estimate on the configured
-    cadence. Under a trace the refresh is computed every step and selected
-    by tick (one graph serves every step of a scan); on the eager host path
-    the off-cadence refits are skipped outright instead of computed and
-    discarded."""
+    cadence. On the eager host path the off-cadence refits are skipped
+    outright. Under a trace, the default batches the refits: one
+    `lax.cond` per round means the refit graph executes only on every
+    `refresh_every`-th round instead of being computed every step and
+    discarded — the amortization that closes the learned-control-path gap
+    (docs/sor.md "fused control round"). `fused=False` keeps the historical
+    compute-always + select-by-tick graph as the bit-equivalence oracle:
+    on-cadence rounds adopt the identical refit, off-cadence rounds keep
+    the identical prior, so the two compiled trajectories are bit-equal
+    (pinned by tests/test_fused_control_round.py)."""
     hist = state.history.push(frame)
     tick = state.tick + 1
     if isinstance(tick, jax.core.Tracer):
-        refreshed = update_estimate(state.estimate, hist, cfg)
         do = (tick % cfg.refresh_every) == 0
-        est = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(do, b, a), state.estimate, refreshed)
+        if fused is not False:
+            est = jax.lax.cond(
+                do,
+                lambda est_h: update_estimate(est_h[0], est_h[1], cfg,
+                                              fused=True),
+                lambda est_h: est_h[0],
+                (state.estimate, hist))
+        else:
+            refreshed = update_estimate(state.estimate, hist, cfg,
+                                        fused=False)
+            est = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(do, b, a), state.estimate, refreshed)
     elif int(tick) % cfg.refresh_every == 0:
-        est = update_estimate(state.estimate, hist, cfg)
+        est = update_estimate(state.estimate, hist, cfg, fused=fused)
     else:
         est = state.estimate
     return SorState(history=hist, estimate=est, tick=tick)

@@ -64,6 +64,96 @@ def _sor_kernel(x_ref, y_ref, w_ref,
 SOR_ROWS_ALIGN = 8   # sublane alignment for the window axis
 
 
+def _sor_fit_kernel(x_ref, y_ref, w_ref, bound_ref, guard_ref,
+                    int_ref, slope_ref, front_ref, conf_ref, neff_ref,
+                    floor_ref, *, min_slope: float, min_spread_v: float,
+                    conf_samples: float):
+    """One lane tile of the fused SOR fit: the five EWLS sums accumulate in
+    VMEM exactly as `_sor_kernel`, then the per-lane solve + envelope floor
+    run on the accumulators before anything leaves the chip — the estimate
+    (6 x [1, L]) is the only thing written back, not the O(window) sums."""
+    x = x_ref[...].astype(jnp.float32)                     # [window, L]
+    y = y_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    wx = w * x
+    sw = jnp.sum(w, axis=0, keepdims=True)                 # [1, L]
+    sx = jnp.sum(wx, axis=0, keepdims=True)
+    sy = jnp.sum(w * y, axis=0, keepdims=True)
+    sxx = jnp.sum(wx * x, axis=0, keepdims=True)
+    sxy = jnp.sum(wx * y, axis=0, keepdims=True)
+
+    # the solve — the identical elementwise f32 op sequence as
+    # ref.sor_solve_reference (bit-equivalence is pinned by tests)
+    eps = jnp.float32(1e-9)
+    denom = sw * sxx - sx * sx
+    slope = (sw * sxy - sx * sy) / jnp.maximum(denom, eps)
+    intercept = (sy - slope * sx) / jnp.maximum(sw, eps)
+    var_x = jnp.maximum(sxx / jnp.maximum(sw, eps)
+                        - (sx / jnp.maximum(sw, eps)) ** 2, 0.0)
+
+    steep = slope < -jnp.float32(min_slope)
+    spread = var_x > jnp.float32(min_spread_v) ** 2
+    usable = steep & spread & (denom > eps)
+
+    bound = bound_ref[...].astype(jnp.float32)             # [1, L]
+    v_frontier = jnp.where(
+        usable, (bound - intercept) / jnp.where(usable, slope, -1.0), 0.0)
+    v_frontier = jnp.clip(v_frontier, 0.0, 2.0)
+    confidence = jnp.where(
+        usable, 1.0 - jnp.exp(-sw / jnp.float32(conf_samples)), 0.0)
+
+    int_ref[...] = jnp.where(usable, intercept, 0.0)
+    slope_ref[...] = jnp.where(usable, slope, 0.0)
+    front_ref[...] = v_frontier
+    conf_ref[...] = confidence
+    neff_ref[...] = sw
+    floor_ref[...] = v_frontier + guard_ref[...].astype(jnp.float32)
+
+
+def sor_fit(x, y, w, log10_bound, guard, *, min_slope: float,
+            min_spread_v: float, conf_samples: float,
+            interpret: bool = False):
+    """Fused safe-operating-region fit: EWLS accumulation + per-lane solve +
+    envelope floor in ONE streaming pass over the `[window, n]` telemetry
+    window (`n` = flattened n_rails x n_chips). Where `sor_accumulate`
+    returns the five sums for a host-side solve, this carries the solve out
+    of the same pass — the window is read once and only the 6 x [n] estimate
+    (intercept, slope, v_frontier, confidence, n_eff, floor) is written
+    back. `log10_bound`/`guard` are per-lane arrays (per-rail overrides
+    broadcast over chips); the usability thresholds are compile-time
+    scalars. Row padding carries zero weight, so no in-kernel masking;
+    column padding only pollutes lanes that are sliced off afterwards."""
+    window, n = x.shape
+    rpad = (-window) % SOR_ROWS_ALIGN
+    cpad = (-n) % LANES
+
+    def pad(a):
+        return jnp.pad(a.astype(jnp.float32), ((0, rpad), (0, cpad)))
+
+    def pad_lane(a):
+        return jnp.pad(a.astype(jnp.float32), (0, cpad)).reshape(1, -1)
+
+    xm, ym, wm = pad(x), pad(y), pad(w)
+    bm, gm = pad_lane(log10_bound), pad_lane(guard)
+    rows, cols = xm.shape
+    n_steps = cols // LANES
+
+    win_spec = pl.BlockSpec((rows, LANES), lambda i: (0, i))
+    lane_spec = pl.BlockSpec((1, LANES), lambda i: (0, i))
+    out_shape = jax.ShapeDtypeStruct((1, cols), jnp.float32)
+    outs = pl.pallas_call(
+        functools.partial(_sor_fit_kernel, min_slope=min_slope,
+                          min_spread_v=min_spread_v,
+                          conf_samples=conf_samples),
+        grid=(n_steps,),
+        in_specs=[win_spec, win_spec, win_spec, lane_spec, lane_spec],
+        out_specs=(lane_spec,) * 6,
+        out_shape=(out_shape,) * 6,
+        interpret=interpret,
+    )(xm, ym, wm, bm, gm)
+    return tuple(o[0, :n] for o in outs)
+
+
 def sor_accumulate(x, y, w, *, interpret: bool = False):
     """Fused EWLS accumulation for the safe-operating-region fit: one pass
     over the `[window, n]` telemetry window computes all five weighted sums

@@ -182,6 +182,30 @@ def sor_accumulate(x, y, w):
     return ref.sor_accumulate_reference(x, y, w)
 
 
+@functools.partial(jax.jit, static_argnames=("min_slope", "min_spread_v",
+                                             "conf_samples"))
+def sor_fit(x, y, w, log10_bound, guard, *, min_slope: float,
+            min_spread_v: float, conf_samples: float):
+    """Fused safe-operating-region fit: the five EWLS sums, the per-lane
+    solve, and the envelope floor carried out of ONE streaming pass over the
+    `[window, n]` telemetry window (fleet_telemetry.sor_fit on TPU; the
+    composed jnp reference elsewhere — XLA fuses accumulate+solve into one
+    pass under jit). Returns (intercept, slope, v_frontier, confidence,
+    n_eff, floor), each [n] f32 — bit-identical to `sor_accumulate` followed
+    by the host-side solve (`ref.sor_solve_reference`), pinned by tests."""
+    mode = _pallas_mode()
+    if mode != "off":
+        from repro.kernels import fleet_telemetry as ft
+        return ft.sor_fit(x, y, w, log10_bound, guard, min_slope=min_slope,
+                          min_spread_v=min_spread_v,
+                          conf_samples=conf_samples,
+                          interpret=(mode == "interpret"))
+    return ref.sor_fit_reference(x, y, w, log10_bound, guard,
+                                 min_slope=min_slope,
+                                 min_spread_v=min_spread_v,
+                                 conf_samples=conf_samples)
+
+
 def _shard_map(fn, mesh, in_specs, out_specs):
     """Version-portable shard_map (jax >= 0.5 top-level vs experimental)."""
     if hasattr(jax, "shard_map"):

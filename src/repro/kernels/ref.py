@@ -171,3 +171,50 @@ def sor_accumulate_reference(x, y, w):
     return (jnp.sum(wf, axis=0), jnp.sum(wf * xf, axis=0),
             jnp.sum(wf * yf, axis=0), jnp.sum(wf * xf * xf, axis=0),
             jnp.sum(wf * xf * yf, axis=0))
+
+
+def sor_solve_reference(sums, log10_bound, guard, *, min_slope: float,
+                        min_spread_v: float, conf_samples: float):
+    """The EWLS solve on the five accumulated sums — the exact op sequence
+    `core.sor.fit_history` historically ran host-side after
+    `sor_accumulate`, factored out so the fused kernel path
+    (`sor_fit_reference` / fleet_telemetry.sor_fit) is bit-identical to the
+    unfused accumulate-then-solve split by construction. All elementwise
+    f32; `log10_bound`/`guard` are per-lane arrays (per-rail overrides
+    broadcast over chips). Returns (intercept, slope, v_frontier,
+    confidence, n_eff, floor), each [n] f32 — `floor` is the envelope floor
+    `v_frontier + guard` that `core.sor.rail_envelopes` publishes."""
+    sw, sx, sy, sxx, sxy = sums
+    eps = jnp.float32(1e-9)
+    denom = sw * sxx - sx * sx
+    slope = (sw * sxy - sx * sy) / jnp.maximum(denom, eps)
+    intercept = (sy - slope * sx) / jnp.maximum(sw, eps)
+    var_x = jnp.maximum(sxx / jnp.maximum(sw, eps)
+                        - (sx / jnp.maximum(sw, eps)) ** 2, 0.0)
+
+    steep = slope < -jnp.float32(min_slope)
+    spread = var_x > jnp.float32(min_spread_v) ** 2
+    usable = steep & spread & (denom > eps)
+
+    bound = jnp.asarray(log10_bound, jnp.float32)
+    v_frontier = jnp.where(
+        usable, (bound - intercept) / jnp.where(usable, slope, -1.0), 0.0)
+    v_frontier = jnp.clip(v_frontier, 0.0, 2.0)
+    confidence = jnp.where(
+        usable, 1.0 - jnp.exp(-sw / jnp.float32(conf_samples)), 0.0)
+    floor = v_frontier + jnp.asarray(guard, jnp.float32)
+    return (jnp.where(usable, intercept, 0.0).astype(jnp.float32),
+            jnp.where(usable, slope, 0.0).astype(jnp.float32),
+            v_frontier.astype(jnp.float32), confidence.astype(jnp.float32),
+            sw.astype(jnp.float32), floor.astype(jnp.float32))
+
+
+def sor_fit_reference(x, y, w, log10_bound, guard, *, min_slope: float,
+                      min_spread_v: float, conf_samples: float):
+    """Fused EWLS fit: accumulate + solve + envelope floor in one call —
+    the jnp oracle for `fleet_telemetry.sor_fit`. Composes the two reference
+    stages verbatim, so fused == unfused bit-exactly on this path."""
+    return sor_solve_reference(
+        sor_accumulate_reference(x, y, w), log10_bound, guard,
+        min_slope=min_slope, min_spread_v=min_spread_v,
+        conf_samples=conf_samples)

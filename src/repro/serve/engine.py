@@ -128,6 +128,10 @@ class ServeEngine:
                     if self._sor_state is None:
                         self._sor_state = c.init_sor(
                             self.n_chips if self.plane.is_fleet else None)
+                    # one fused control round per decision: observe + refit
+                    # (amortized by refresh_every) + decide + arbitrate run
+                    # as a single cached jitted program, so per-decision
+                    # controller cost stays flat as the fleet grows
                     self.plane, self._sor_state = c.control_step_sor(
                         self.plane, frame, self._sor_state)
                 else:

@@ -71,6 +71,16 @@ class FleetStepConfig:
     # control, but honest telemetry.
     hbm_error_base: float = 0.0
     hbm_error_gain: float = 24.0
+    # fleet reductions on a sharded `chips` mesh axis: when `mesh` spans
+    # more than one device, the per-chip telemetry matrix never gathers —
+    # each device reduces its local shard through the Pallas/XLA
+    # fleet_reduce hot path and the partials combine via pmax/pmin/psum
+    # (ops.sharded_fleet_reduce). On a single-device (CPU) mesh, or with
+    # mesh=None, the step falls back to the plain vmap-path fleet_reduce —
+    # identical results, no shard_map. NOTE: only the cross-chip reduction
+    # shards; percentile/mean fleet metrics still see the global arrays.
+    mesh: Any = None
+    shard_axis: str = "chips"
     # in-graph safe-operating-region learning (core/sor.py): when set, the
     # step threads a functional `sor.SorState` through its signature —
     # train_step(params, opt, plane, ef, sor_state, batch) -> (..., sor_state',
@@ -273,11 +283,18 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
             plane = controller.control_step(plane, frame)
 
         # fleet reductions through the Pallas telemetry-reduction hot path:
-        # [n_chips, n_fields] -> per-field worst/mean (+ p95 where it gates)
+        # [n_chips, n_fields] -> per-field worst/mean (+ p95 where it gates).
+        # With a multi-device mesh the reduction runs sharded over the
+        # chips axis (local kernel reduce + pmax/pmin/psum collectives).
         stacked = jnp.stack([power_metrics["power_w"], t_chip, err,
                              power_metrics["energy_step_j"], plane.v_io],
                             axis=1)
-        mx, mn, sm = ops.fleet_reduce(stacked)
+        if fleet_cfg.mesh is not None:
+            mx, mn, sm = ops.sharded_fleet_reduce(
+                stacked, mesh=fleet_cfg.mesh,
+                axis_name=fleet_cfg.shard_axis)
+        else:
+            mx, mn, sm = ops.fleet_reduce(stacked)
         fleet_metrics = {}
         # for these, the worst chip is the max; for a voltage rail it is the
         # MIN (thinnest margin), so v_io gets min/mean instead

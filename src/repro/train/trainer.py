@@ -239,6 +239,9 @@ class Trainer:
             "ckpt_writes": self.ckpt_writes,
             "host_actuations": ctrl.actuations if ctrl else 0,
             "host_actuation_s": ctrl.actuation_seconds if ctrl else 0.0,
+            # writes the deadband scheduler held back from the bus (steady-
+            # state lanes pinned at a learned floor) — saved transactions
+            "host_skipped_actuations": ctrl.skipped_actuations if ctrl else 0,
             "mean_wall_step_s": float(np.mean(self._step_times))
             if self._step_times else 0.0,
         }

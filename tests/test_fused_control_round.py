@@ -1,0 +1,366 @@
+"""Fused in-graph control round coverage (PR 6, docs/sor.md "fused
+control round"):
+
+  * bit-equivalence — the fused round (one-pass `ops.sor_fit` kernel +
+    `lax.cond`-batched refits) and the unfused PR-5 composition
+    (`sor_accumulate` + host-graph solve, refit computed every round and
+    off-cadence results discarded by select) produce bit-identical
+    SorEstimate / SafeEnvelope / RailRequest trajectories when compiled —
+    under a scanned rollout and under jit+vmap;
+  * the kernel's sixth output (the envelope floor) is exactly the
+    `v_frontier + guard` f32 add `rail_envelopes` re-derives;
+  * the Pallas `sor_fit` body in interpret mode matches the jnp reference
+    through the real `ops.sor_fit` dispatch (REPRO_PALLAS=interpret);
+  * deadband actuation scheduling — steady-state envelope-pinned lanes are
+    held back from the PMBus round (and counted), boundary cases actuate;
+  * `ops.sharded_fleet_reduce` falls back cleanly on a single-device CPU
+    mesh, the forced shard_map path agrees, and `FleetStepConfig.mesh`
+    plumbs through the fleet train step without changing results.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sor
+from repro.core.control_plane import HostRailController, InGraphRailController
+from repro.core.hwspec import FleetSpec
+from repro.core.policy import MultiRailClosedLoop
+from repro.core.power_plane import (PowerPlaneState, StepProfile,
+                                    account_fleet_and_observe)
+from repro.core.rails import TPU_V5E_RAIL_MAP
+from repro.core.telemetry import (ALL_RAIL_OBSERVABLES, FrameHistory,
+                                  Provenance, TelemetryFrame)
+from repro.kernels import fleet_telemetry, ops, ref
+
+N = 8
+STEPS = 12
+BOUND = 5e-3
+CFG = sor.SorConfig(capacity=16, refresh_every=4, decay=0.96,
+                    error_bound=BOUND, guard_v=0.004, max_extension_v=0.12,
+                    ingest="frames", rails=ALL_RAIL_OBSERVABLES)
+FLOORS = {"VDD_CORE": 0.70, "VDD_HBM": 1.00, "VDD_IO": 0.70}
+ONSETS = {"VDD_CORE": 0.598, "VDD_HBM": 0.878, "VDD_IO": 0.62}
+PROFILE = StepProfile(flops_per_chip=2e12, hbm_bytes_per_chip=8e9,
+                      ici_bytes_per_chip=4e9, grad_bytes_per_chip=3e9)
+
+SOLVE_KW = dict(min_slope=CFG.min_slope, min_spread_v=CFG.min_spread_v,
+                conf_samples=CFG.conf_samples)
+
+
+def _frontier_err(v, onset, k, n):
+    noise = 1.0 + 0.05 * jax.random.normal(k, (n,))
+    return BOUND * noise * 10.0 ** jnp.clip(30.0 * (onset - v), -6.0, 3.0)
+
+
+def _rollout(fused: bool, n: int = N, steps: int = STEPS):
+    """One compiled learned-control rollout; `fused` selects the round's
+    graph. Returns (final SorState, per-step trajectory dict)."""
+    ctrl = InGraphRailController(MultiRailClosedLoop(floors=dict(FLOORS)),
+                                 sor=CFG)
+    fs = FleetSpec.sample(n, seed=17)
+
+    def round_fn(carry, k):
+        plane, ss = carry
+        plane, frame, _ = account_fleet_and_observe(PROFILE, plane, fs)
+        k1, k2, k3 = jax.random.split(k, 3)
+        frame = dataclasses.replace(
+            frame,
+            grad_error=_frontier_err(plane.v_io, ONSETS["VDD_IO"], k1, n),
+            extras={**frame.extras,
+                    "straggle_rate": _frontier_err(
+                        plane.v_core, ONSETS["VDD_CORE"], k2, n),
+                    "hbm_error_rate": _frontier_err(
+                        plane.v_hbm, ONSETS["VDD_HBM"], k3, n)})
+        plane, ss, req, env = ctrl.control_round(plane, frame, ss,
+                                                 fused=fused)
+        out = {"v_core": plane.v_core, "v_hbm": plane.v_hbm,
+               "v_io": plane.v_io,
+               "req_core": req.v_core, "req_hbm": req.v_hbm,
+               "req_io": req.v_io,
+               "floor_io": env["VDD_IO"].floor(
+                   TPU_V5E_RAIL_MAP.by_name("VDD_IO").v_min),
+               "conf_io": env["VDD_IO"].confidence}
+        return (plane, ss), out
+
+    @jax.jit
+    def run():
+        keys = jax.random.split(jax.random.PRNGKey(5), steps)
+        plane = PowerPlaneState.from_fleet(fs)
+        ss = sor.init_state(CFG, n)
+        (plane, ss), hist = jax.lax.scan(round_fn, (plane, ss), keys)
+        return ss, hist
+
+    ss, hist = run()
+    jax.block_until_ready(hist["v_io"])
+    return ss, hist
+
+
+def test_fused_trajectory_bit_equal_to_unfused():
+    """The acceptance pin: the fused round is an OPTIMIZATION, not a new
+    estimator — plane voltages, pre-arbitration RailRequests, envelope
+    floors/confidences, and every SorEstimate field match the unfused
+    PR-5 composition bit-for-bit across a scanned rollout (several refit
+    cadences deep, fleet-shaped)."""
+    ss_f, h_f = _rollout(fused=True)
+    ss_u, h_u = _rollout(fused=False)
+    for key in h_f:
+        np.testing.assert_array_equal(np.asarray(h_f[key]),
+                                      np.asarray(h_u[key]), err_msg=key)
+    for field in ("intercept", "slope", "v_frontier", "confidence", "n_eff"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ss_f.estimate, field)),
+            np.asarray(getattr(ss_u.estimate, field)), err_msg=field)
+    assert int(ss_f.tick) == int(ss_u.tick) == STEPS
+
+
+def _filled_history(n: int, onset_shift: float) -> FrameHistory:
+    h = FrameHistory.create(CFG.capacity, n, rails=CFG.rails)
+    for i, v in enumerate(np.linspace(0.62, 0.80, 10)):
+        vv = jnp.full((n,), float(v), jnp.float32)
+        k = jax.random.PRNGKey(i)
+        ks = jax.random.split(k, 3)
+        h = h.push(TelemetryFrame(
+            grad_error=_frontier_err(vv, ONSETS["VDD_IO"] + onset_shift,
+                                     ks[0], n),
+            v_io=vv, v_core=vv, v_hbm=vv, age_s=jnp.zeros((n,)),
+            extras={"straggle_rate": _frontier_err(
+                        vv, ONSETS["VDD_CORE"] + onset_shift, ks[1], n),
+                    "hbm_error_rate": _frontier_err(
+                        vv, ONSETS["VDD_HBM"] + onset_shift, ks[2], n)},
+            provenance=Provenance.POLLED))
+    return h
+
+
+def test_fused_fit_bit_equal_under_jit_vmap():
+    """fit_history(fused=True) == fit_history(fused=False) bit-for-bit when
+    both compile — including through a vmap over a batch of histories."""
+    hb = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a),
+        _filled_history(N, 0.0), _filled_history(N, 0.01))
+    est_f = jax.jit(jax.vmap(
+        lambda h: sor.fit_history(h, CFG, fused=True)))(hb)
+    est_u = jax.jit(jax.vmap(
+        lambda h: sor.fit_history(h, CFG, fused=False)))(hb)
+    for field in ("intercept", "slope", "v_frontier", "confidence", "n_eff"):
+        got = np.asarray(getattr(est_f, field))
+        assert got.shape[:1] == (2,)
+        np.testing.assert_array_equal(got, np.asarray(getattr(est_u, field)),
+                                      err_msg=field)
+    # the fit found a real frontier in at least one lane
+    assert (np.asarray(est_f.confidence) > 0).any()
+
+
+def _solve_inputs(window: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.6, 1.0, (window, n)).astype(np.float32)
+    y = (-3.0 + 30.0 * (0.62 - x) + 0.1
+         * rng.standard_normal((window, n))).astype(np.float32)
+    w = rng.uniform(0.0, 1.0, (window, n)).astype(np.float32)
+    bound = np.full((n,), np.log10(BOUND), np.float32)
+    guard = np.full((n,), CFG.guard_v, np.float32)
+    return x, y, w, bound, guard
+
+
+def test_kernel_floor_output_matches_rail_envelopes():
+    """The fused pass's sixth output (the envelope floor) is exactly the
+    `v_frontier + guard` f32 add that `rail_envelopes` re-derives —
+    SorEstimate can keep its 5-field checkpoint layout with nothing lost."""
+    x, y, w, bound, guard = _solve_inputs(12, 40)
+    outs = ref.sor_fit_reference(jnp.asarray(x), jnp.asarray(y),
+                                 jnp.asarray(w), jnp.asarray(bound),
+                                 jnp.asarray(guard), **SOLVE_KW)
+    _, _, v_frontier, _, _, floor = outs
+    np.testing.assert_array_equal(
+        np.asarray(floor),
+        np.asarray(v_frontier + jnp.asarray(guard, jnp.float32)))
+
+
+@pytest.mark.parametrize("window,n", [(12, 5), (16, 128), (9, 131)])
+def test_sor_fit_kernel_interpret_matches_reference(window, n):
+    """The Pallas fused-fit body (run in interpret mode on CPU) matches the
+    jnp reference across lane/sublane padding boundaries."""
+    x, y, w, bound, guard = _solve_inputs(window, n, seed=window + n)
+    want = ref.sor_fit_reference(jnp.asarray(x), jnp.asarray(y),
+                                 jnp.asarray(w), jnp.asarray(bound),
+                                 jnp.asarray(guard), **SOLVE_KW)
+    got = fleet_telemetry.sor_fit(jnp.asarray(x), jnp.asarray(y),
+                                  jnp.asarray(w), jnp.asarray(bound),
+                                  jnp.asarray(guard), **SOLVE_KW,
+                                  interpret=True)
+    names = ("intercept", "slope", "v_frontier", "confidence", "n_eff",
+             "floor")
+    for name, a, b in zip(names, got, want):
+        assert a.shape == (n,)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_ops_sor_fit_dispatch_interpret_mode(monkeypatch):
+    """REPRO_PALLAS=interpret routes `ops.sor_fit` through the Pallas body
+    (odd shapes force a fresh trace so the env is actually consulted)."""
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    x, y, w, bound, guard = _solve_inputs(11, 97, seed=3)
+    got = ops.sor_fit(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w),
+                      jnp.asarray(bound), jnp.asarray(guard), **SOLVE_KW)
+    want = ref.sor_fit_reference(jnp.asarray(x), jnp.asarray(y),
+                                 jnp.asarray(w), jnp.asarray(bound),
+                                 jnp.asarray(guard), **SOLVE_KW)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deadband actuation scheduling
+# ---------------------------------------------------------------------------
+
+def _deadband_controller(n: int, conf: float, deadband_v: float = 0.01):
+    hc = HostRailController(n_chips=n, deadband_v=deadband_v)
+    s = TPU_V5E_RAIL_MAP.by_name("VDD_IO")
+    floor = np.float32(s.v_min + 0.02)
+    hc.last_envelope = {"VDD_IO": sor.SafeEnvelope(
+        v_min=jnp.float32(floor), confidence=jnp.full((n,), conf),
+        max_extension_v=0.12, rail="VDD_IO")}
+    return hc, float(floor)
+
+
+def test_deadband_skips_steady_state_envelope_pinned_lane():
+    """Chip 0 sits inside the confidence-scaled deadband of its learned
+    floor; chip 1 sits well outside. After one settling round, re-actuating
+    the same targets skips chip 0's VDD_IO write (held + counted) and still
+    pushes chip 1 through the bus."""
+    n = 2
+    hc, floor = _deadband_controller(n, conf=1.0)
+    plane = PowerPlaneState.from_fleet(FleetSpec.sample(n, seed=0))
+    plane = dataclasses.replace(
+        plane, v_io=jnp.asarray([floor + 0.004, floor + 0.05], jnp.float32))
+    plane = hc.actuate(plane)          # settle: regulators now hold targets
+    assert hc.skipped_actuations == 0  # cold regulators: every lane written
+    out = hc.actuate(plane)
+    assert hc.skipped_actuations == 1  # chip 0 steady inside the band
+    assert hc.stats().skipped_actuations == hc.skipped_actuations
+    # the skipped lane reads back the regulator-held voltage, unchanged
+    np.testing.assert_allclose(float(out.v_io[0]), floor + 0.004, atol=2e-3)
+    np.testing.assert_allclose(float(out.v_io[1]), floor + 0.05, atol=2e-3)
+
+
+def test_deadband_boundary_cases_actuate():
+    """Zero confidence, zero deadband, or a missing envelope: nothing is
+    ever held back — cold start actuates every lane exactly as before."""
+    n = 2
+    plane = PowerPlaneState.from_fleet(FleetSpec.sample(n, seed=0))
+    s = TPU_V5E_RAIL_MAP.by_name("VDD_IO")
+    plane = dataclasses.replace(
+        plane, v_io=jnp.full((n,), s.v_min + 0.02, jnp.float32))
+
+    hc, _ = _deadband_controller(n, conf=0.0)      # no confidence yet
+    hc.actuate(plane)
+    hc.actuate(plane)
+    assert hc.skipped_actuations == 0
+
+    hc2, _ = _deadband_controller(n, conf=1.0, deadband_v=0.0)  # disabled
+    hc2.actuate(plane)
+    hc2.actuate(plane)
+    assert hc2.skipped_actuations == 0
+
+    hc3 = HostRailController(n_chips=n, deadband_v=0.01)  # never decided
+    assert hc3.last_envelope is None
+    hc3.actuate(plane)
+    hc3.actuate(plane)
+    assert hc3.skipped_actuations == 0
+
+
+def test_fleet_report_counts_hardware_deadband_separately():
+    """The bus-level write deadband (regulator already AT the request) is
+    counted in FleetActuationReport.deadband_skipped — distinct from the
+    controller's envelope-aware scheduling."""
+    n = 2
+    hc = HostRailController(n_chips=n)
+    plane = PowerPlaneState.from_fleet(FleetSpec.sample(n, seed=0))
+    hc.actuate(plane)
+    hc.actuate(plane)                  # identical round: all lanes settled
+    rep = hc.last_report
+    assert rep.deadband_skipped > 0
+    assert hc.fleet.deadband_skips >= rep.deadband_skipped
+    assert hc.skipped_actuations == 0  # no envelope: scheduler never held
+
+
+# ---------------------------------------------------------------------------
+# sharded fleet reduction
+# ---------------------------------------------------------------------------
+
+def test_sharded_fleet_reduce_single_device_fallback():
+    from jax.sharding import Mesh
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, 3)),
+                    jnp.float32)
+    want = ops.fleet_reduce(x)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("chips",))
+    got = ops.sharded_fleet_reduce(x, mesh=mesh)       # guard: falls back
+    forced = ops.sharded_fleet_reduce(x, mesh=mesh,     # collective path
+                                      use_shard_map=True)
+    for a, b, c in zip(want, got, forced):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError, match="mesh"):
+        ops.sharded_fleet_reduce(x, mesh=None, use_shard_map=True)
+
+
+@pytest.mark.slow
+def test_fleet_step_mesh_smoke():
+    """FleetStepConfig.mesh on a single-device CPU mesh: the step builds,
+    runs, and matches the mesh=None fallback bit-for-bit (the guard routes
+    both through the same fleet_reduce graph)."""
+    from jax.sharding import Mesh
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.optim import adamw
+    from repro.optim.schedule import wsd
+    from repro.train.step import (FleetStepConfig, StepConfig,
+                                  jit_train_step, make_fleet_train_step)
+    from repro.train.trainer import initial_plane_and_ef
+    from repro.data.pipeline import SyntheticLM, DataConfig
+
+    cfg_m = get_config("minicpm_2b", tiny=True)
+    api = registry.build(cfg_m, remat="none")
+    params = api.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(grad_clip_norm=1.0)
+    sched = lambda s: wsd(s, peak_lr=1e-3, warmup_steps=2, stable_steps=50,
+                          decay_steps=50)
+    n = 3
+    fs = FleetSpec.sample(n, seed=7)
+    data = SyntheticLM(DataConfig(vocab_size=cfg_m.vocab_size, seq_len=32,
+                                  global_batch=4, seed=0))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("chips",))
+
+    def run(mesh_arg):
+        fleet_cfg = FleetStepConfig(spec=fs, hbm_error_base=1e-4,
+                                    mesh=mesh_arg)
+        step = jit_train_step(
+            make_fleet_train_step(lambda p, b: api.loss_fn(p, b), opt_cfg,
+                                  sched, PROFILE,
+                                  StepConfig(policy=MultiRailClosedLoop()),
+                                  fleet_cfg),
+            donate=False)
+        p, opt = params, adamw.init_state(params, opt_cfg)
+        plane, ef = initial_plane_and_ef(p, fleet=fs)
+        for i in range(2):
+            p, opt, plane, ef, metrics = step(p, opt, plane, ef,
+                                              data.jax_batch(i))
+        return plane, metrics
+
+    plane_m, metrics_m = run(mesh)
+    plane_0, metrics_0 = run(None)
+    np.testing.assert_array_equal(np.asarray(plane_m.v_io),
+                                  np.asarray(plane_0.v_io))
+    np.testing.assert_array_equal(float(metrics_m["loss"]),
+                                  float(metrics_0["loss"]))
+    for k in ("fleet/power_max_w", "fleet/power_sum_w"):
+        if k in metrics_m:
+            np.testing.assert_array_equal(float(metrics_m[k]),
+                                          float(metrics_0[k]))
