@@ -1,15 +1,23 @@
-"""CI bench-smoke regression gate for the fused learned control path.
+"""CI bench-smoke regression gate for the learned control path.
 
-Compares a fresh ``benchmarks/run.py --only fleet_frontier:run_learned
---json-out`` record against the committed baseline
-(``reports/BENCH_smoke_baseline.json``) and fails if the learned path got
-slower. Raw microseconds are machine-dependent — CI runners and dev boxes
-differ by integer factors — so the gated quantity is the *learned/static
-wall-time ratio* within the same run: static and learned rollouts share the
-machine, the fleet, and the jit cache, so their ratio isolates what the
-learned path adds (the thing PR 6's fused round collapsed). A >20% ratio
-regression means someone un-fused the round or re-introduced the
-every-step refit.
+Compares a fresh ``benchmarks/run.py --json-out`` record file against a
+committed baseline and fails if a gated ratio got worse. Raw microseconds
+are machine-dependent — CI runners and dev boxes differ by integer factors
+— so the gated quantities are *within-run ratios*:
+
+* ``wall_time_us{learned,static}`` records (``fleet_frontier:run_learned``)
+  gate the learned/static wall-time ratio — static and learned rollouts
+  share the machine, the fleet, and the jit cache, so their ratio isolates
+  what the learned path adds (the thing PR 6's fused round collapsed).
+* ``ratio_vs_base`` records (``fleet_frontier:run_weak_scaling``) gate the
+  sharded PER-CHIP µs/step against the same run's single-device anchor —
+  the weak-scaling flatness the sharded control plane is for.
+
+Matching is by record ``name`` (and the files' ``bench`` tag): a record or
+metric present in the BASELINE but missing from the new run fails with a
+clear message (someone deleted or renamed a gated bench); a record present
+only in the new run warns and passes (adding a bench never breaks the
+gate). A >``--tolerance`` relative growth of any gated ratio fails.
 
 Usage::
 
@@ -23,25 +31,44 @@ import argparse
 import json
 import sys
 
-TOLERANCE = 0.20    # allowed relative growth of the learned/static ratio
+TOLERANCE = 0.20    # allowed relative growth of any gated ratio
+
+# config keys that must match between baseline and current for a ratio
+# comparison to mean anything (same sweep shape, different machine is fine)
+CONFIG_KEYS = ("n_chips", "steps", "shards", "base_chips")
 
 
-def load_record(path: str) -> dict:
-    with open(path) as f:
-        data = json.load(f)
-    recs = [r for r in data.get("records", []) if "wall_time_us" in r]
-    if not recs:
-        sys.exit(f"{path}: no learned-vs-static record (expected a "
-                 f"fleet_frontier:run_learned --json-out file)")
-    if len(recs) > 1:
-        print(f"{path}: {len(recs)} records; gating on the first "
-              f"({recs[0].get('name')})")
-    return recs[0]
+def load_records(path: str) -> tuple[str | None, dict[str, dict]]:
+    """(bench tag, {record name: record}) of one --json-out file."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        sys.exit(f"{path}: no such file (run benchmarks/run.py --json-out "
+                 f"first, or check the committed baseline path)")
+    except json.JSONDecodeError as e:
+        sys.exit(f"{path}: not valid JSON ({e})")
+    records = data.get("records", [])
+    if not records:
+        sys.exit(f"{path}: no records (expected a benchmarks/run.py "
+                 f"--json-out file)")
+    by_name = {}
+    for i, rec in enumerate(records):
+        by_name[str(rec.get("name", f"record[{i}]"))] = rec
+    return data.get("bench"), by_name
 
 
-def ratio(rec: dict) -> float:
-    wt = rec["wall_time_us"]
-    return wt["learned"] / max(wt["static"], 1e-9)
+def gate_metrics(rec: dict) -> dict[str, float]:
+    """The gateable within-run ratios a record carries (may be empty)."""
+    out = {}
+    wt = rec.get("wall_time_us")
+    if isinstance(wt, dict) and "learned" in wt and "static" in wt:
+        out["learned/static wall-time ratio"] = (
+            wt["learned"] / max(wt["static"], 1e-9))
+    if "ratio_vs_base" in rec:
+        out["weak-scaling per-chip us/step ratio vs single-device base"] = (
+            float(rec["ratio_vs_base"]))
+    return out
 
 
 def main(argv=None) -> None:
@@ -52,29 +79,71 @@ def main(argv=None) -> None:
                     help="allowed relative ratio growth (default 0.20)")
     args = ap.parse_args(argv)
 
-    cur, base = load_record(args.current), load_record(args.baseline)
-    for k in ("n_chips", "steps"):
-        if cur.get(k) != base.get(k):
-            sys.exit(f"config mismatch: current {k}={cur.get(k)} vs "
-                     f"baseline {k}={base.get(k)} — the ratio gate only "
-                     f"holds for identical sweep configs (set "
-                     f"REPRO_BENCH_SOR_CHIPS/REPRO_BENCH_SOR_STEPS to the "
-                     f"baseline's, or refresh the baseline)")
+    cur_bench, cur = load_records(args.current)
+    base_bench, base = load_records(args.baseline)
+    if cur_bench and base_bench and cur_bench != base_bench:
+        sys.exit(f"bench tag mismatch: {args.current} is bench "
+                 f"{cur_bench!r} but {args.baseline} is bench "
+                 f"{base_bench!r} — compare like with like (each bench "
+                 f"group gets its own baseline file)")
 
-    r_cur, r_base = ratio(cur), ratio(base)
-    limit = r_base * (1.0 + args.tolerance)
-    print(f"learned/static wall-time ratio: current={r_cur:.3f} "
-          f"baseline={r_base:.3f} limit={limit:.3f} "
-          f"(n_chips={cur['n_chips']} steps={cur['steps']})")
-    print(f"learned path: {cur['wall_time_us']['learned']:.0f}us "
-          f"({cur['us_per_step']['learned']:.0f}us/step), "
-          f"power_saving={cur.get('power_saving_pct', float('nan')):.1f}%")
-    if r_cur > limit:
-        sys.exit(f"REGRESSION: learned/static ratio {r_cur:.3f} exceeds "
-                 f"{limit:.3f} (baseline {r_base:.3f} "
-                 f"+{100 * args.tolerance:.0f}%) — the learned control "
-                 f"path got slower relative to the static rollout")
-    print("bench-smoke regression gate: OK")
+    failures = []
+    gated = 0
+    for name, base_rec in base.items():
+        base_metrics = gate_metrics(base_rec)
+        if not base_metrics:
+            print(f"WARNING: baseline record {name!r} has no gateable "
+                  f"metric (wall_time_us{{learned,static}} or "
+                  f"ratio_vs_base) — nothing to compare")
+            continue
+        cur_rec = cur.get(name)
+        if cur_rec is None:
+            failures.append(
+                f"baseline record {name!r} is missing from {args.current} "
+                f"(it has: {sorted(cur)}) — a gated bench was removed or "
+                f"renamed; refresh the baseline if that was intentional")
+            continue
+        mismatched = [k for k in CONFIG_KEYS
+                      if k in base_rec and k in cur_rec
+                      and cur_rec[k] != base_rec[k]]
+        if mismatched:
+            failures.append(
+                f"{name!r}: config mismatch on "
+                f"{', '.join(f'{k}={cur_rec[k]} vs baseline {base_rec[k]}' for k in mismatched)}"
+                f" — the ratio gate only holds for identical sweep configs "
+                f"(set the REPRO_BENCH_SOR_* env knobs to the baseline's, "
+                f"or refresh the baseline)")
+            continue
+        cur_metrics = gate_metrics(cur_rec)
+        for metric, r_base in base_metrics.items():
+            if metric not in cur_metrics:
+                failures.append(
+                    f"{name!r}: baseline gates {metric!r} but the new "
+                    f"record lacks the keys that define it — the bench "
+                    f"schema changed; refresh the baseline if intentional")
+                continue
+            r_cur = cur_metrics[metric]
+            limit = r_base * (1.0 + args.tolerance)
+            verdict = "OK" if r_cur <= limit else "REGRESSION"
+            print(f"{name}: {metric}: current={r_cur:.3f} "
+                  f"baseline={r_base:.3f} limit={limit:.3f} [{verdict}]")
+            gated += 1
+            if r_cur > limit:
+                failures.append(
+                    f"{name!r}: {metric} {r_cur:.3f} exceeds {limit:.3f} "
+                    f"(baseline {r_base:.3f} +{100 * args.tolerance:.0f}%)")
+
+    for name in sorted(set(cur) - set(base)):
+        print(f"WARNING: record {name!r} is new (absent from the baseline) "
+              f"— not gated; add it to {args.baseline} to gate it")
+
+    if failures:
+        sys.exit("bench regression gate FAILED:\n  - "
+                 + "\n  - ".join(failures))
+    if not gated:
+        sys.exit("bench regression gate compared nothing — the baseline "
+                 "has no gateable records matching the current run")
+    print(f"bench regression gate: OK ({gated} metric(s) gated)")
 
 
 if __name__ == "__main__":

@@ -78,6 +78,72 @@ def _learned_round_rows() -> list:
         "bench": "controller_overhead", "record": record}]
 
 
+DONATION_CHIPS = 4096
+
+
+def _donation_rows() -> list:
+    """Donation on/off delta for the cached learned-round jit: the same
+    `control_step_sor` round compiled with and without
+    `donate_argnums=(plane, sor_state)`. What donation buys is the
+    O(capacity x rails x chips) history-ring copy — without it every
+    round materializes a fresh ring alongside the old one; with it XLA
+    updates the donated buffer in place. Both the wall-clock delta and
+    the ring's live-byte footprint (the peak-memory saving: 1 resident
+    ring instead of 2) are recorded. Run at `DONATION_CHIPS` so the ring
+    dwarfs the fixed dispatch cost; each controller re-binds its carry
+    every call, which is the contract donation imposes on callers."""
+    n = DONATION_CHIPS
+    from benchmarks.fleet_frontier import (FLEET_SEED, PROFILE, SOR_CFG,
+                                           SOR_POLICY_FLOORS)
+    fs = FleetSpec.sample(n, seed=FLEET_SEED)
+    plane0 = PowerPlaneState.from_fleet(fs)
+    plane0, frame, _ = account_fleet_and_observe(PROFILE, plane0, fs)
+    ss0 = sor.init_state(SOR_CFG, n)
+    for _ in range(SOR_CFG.refresh_every * 2):
+        ss0 = sor.observe(ss0, frame, SOR_CFG)
+    ring_mb = sum(
+        v.size * v.dtype.itemsize
+        for v in (ss0.history.v, ss0.history.obs, ss0.history.valid,
+                  ss0.history.age_s, ss0.history.polled)) / 2**20
+
+    def bench(donate: bool) -> float:
+        ctrl = InGraphRailController(
+            MultiRailClosedLoop(floors=dict(SOR_POLICY_FLOORS)),
+            sor=SOR_CFG, donate=donate)
+        # compile outside timing — on a copy, since the donated SorState
+        # buffer is invalidated by the call
+        ctrl.control_step_sor(
+            plane0, frame, jax.tree_util.tree_map(jnp.copy, ss0))
+
+        def roll():
+            # re-bind the carry as a real control loop does; a fresh ring
+            # copy per repeat so the donated original is never re-read
+            p = plane0
+            s = jax.tree_util.tree_map(jnp.copy, ss0)
+            for _ in range(8):
+                p, s = ctrl.control_step_sor(p, frame, s)
+            return jax.block_until_ready(p.v_io)
+
+        return timed(roll, repeats=10)[1] / 8
+
+    us_off, us_on = bench(False), bench(True)
+    record = {
+        "n_chips": n, "capacity": SOR_CFG.capacity,
+        "history_ring_mb": ring_mb,
+        "us_per_round": {"donate_off": us_off, "donate_on": us_on},
+        "saving_pct": 100.0 * (1.0 - us_on / us_off),
+        # live rings during the round: donation keeps one resident copy
+        "peak_ring_copies": {"donate_off": 2, "donate_on": 1},
+    }
+    return [{**row(
+        f"ours.learned_round.{n}chips.donation",
+        us_on,
+        f"donate_on={us_on:.0f}us donate_off={us_off:.0f}us "
+        f"saving={record['saving_pct']:.1f}% ring={ring_mb:.1f}MB "
+        f"(peak live rings 1 vs 2)"),
+        "bench": "controller_overhead", "record": record}]
+
+
 def run():
     rows = []
     rows.append(row("tableVII.hw_utilization", 0.0,
@@ -126,4 +192,6 @@ def run():
     # emits the structured record run.py routes to
     # reports/BENCH_controller_overhead.json
     rows.extend(_learned_round_rows())
+    # buffer-donation delta on the cached learned-round jit at fleet scale
+    rows.extend(_donation_rows())
     return rows

@@ -200,6 +200,21 @@ SOR_FLEET_SIZES = tuple(
 # (the 64-chip rollouts are pricey), >1 for the CI smoke so the gated
 # learned/static ratio averages over run-to-run jitter
 SOR_REPEATS = int(os.environ.get("REPRO_BENCH_SOR_REPEATS", "1"))
+# sharded control plane (control_plane.sharded_control_round): > 1 runs the
+# learned rollouts with the SorState shard-resident on a `chips` mesh of
+# that many devices. CPU hosts need
+# XLA_FLAGS=--xla_force_host_platform_device_count=N set BEFORE process
+# start to expose N devices. 0 (default) keeps the single-device path;
+# run_weak_scaling falls back to all visible devices when unset.
+SOR_SHARDS = int(os.environ.get("REPRO_BENCH_SOR_SHARDS", "0"))
+# weak-scaling sweep (run_weak_scaling): fleet sizes ride the shard count
+# while per-shard work stays fixed; the gated ratio is µs/step vs the
+# single-device anchor at SOR_WEAK_BASE_CHIPS
+SOR_WEAK_CHIPS = tuple(int(x) for x in os.environ.get(
+    "REPRO_BENCH_SOR_WEAK_CHIPS", "256,1024,4096").split(","))
+SOR_WEAK_STEPS = int(os.environ.get("REPRO_BENCH_SOR_WEAK_STEPS",
+                                    str(SOR_STEPS)))
+SOR_WEAK_BASE_CHIPS = int(os.environ.get("REPRO_BENCH_SOR_WEAK_BASE", "64"))
 SOR_LOG_SLOPE = 30.0           # decades of error per volt below the onset
 #                                (the paper's ~5 mV Fig-12c transition band)
 # shared static policy floors under test (per rail)
@@ -237,8 +252,24 @@ def _frontier_error(v, v_onset, key, n_chips):
         SOR_LOG_SLOPE * (v_onset - v), -6.0, 3.0)
 
 
-def _sor_rollout_fn(n_chips: int, learned: bool, steps: int):
-    key = ("sor", n_chips, learned, steps)
+def _sor_mesh(shards: int):
+    """1-D `chips` mesh over the first `shards` devices (None for <= 1)."""
+    if shards <= 1:
+        return None
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    if len(devs) < shards:
+        raise RuntimeError(
+            f"asked for {shards} shards but only {len(devs)} device(s) "
+            f"visible — on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shards} before "
+            f"process start (it cannot be set in-process)")
+    return Mesh(np.array(devs[:shards]), ("chips",))
+
+
+def _sor_rollout_fn(n_chips: int, learned: bool, steps: int,
+                    shards: int = 0):
+    key = ("sor", n_chips, learned, steps, shards)
     if key in _ROLLOUT_CACHE:
         return _ROLLOUT_CACHE[key]
     ctrl = InGraphRailController(
@@ -246,6 +277,17 @@ def _sor_rollout_fn(n_chips: int, learned: bool, steps: int):
         sor=SOR_CFG if learned else None)
     fs = FleetSpec.sample(n_chips, seed=FLEET_SEED)
     v_on = {r: _onset_voltages(fs, r) for r in SOR_POLICY_FLOORS}
+    # sharded learned rollout: per-shard resident SorState/plane through
+    # control_plane.sharded_control_round — trajectories match the
+    # single-device path (the frame observables are drawn on global shapes)
+    mesh = _sor_mesh(shards) if learned else None
+    sharded_round = None
+    if mesh is not None:
+        from repro.core.control_plane import sharded_control_round
+        if n_chips % shards:
+            raise ValueError(f"{n_chips} chips not divisible by "
+                             f"{shards} shards")
+        sharded_round = sharded_control_round(ctrl, mesh)
 
     def round_fn(carry, k):
         plane, ss = carry
@@ -260,41 +302,63 @@ def _sor_rollout_fn(n_chips: int, learned: bool, steps: int):
                         plane.v_core, v_on["VDD_CORE"], k_core, n_chips),
                     "hbm_error_rate": _frontier_error(
                         plane.v_hbm, v_on["VDD_HBM"], k_hbm, n_chips)})
-        if learned:
+        if sharded_round is not None:
+            plane, ss, _, _ = sharded_round(plane, frame, ss)
+        elif learned:
             plane, ss = ctrl.control_step_sor(plane, frame, ss)
         else:
             plane = ctrl.control_step(plane, frame)
         return (plane, ss), {"power_w": metrics["power_w"],
                              "v_io": plane.v_io}
 
-    @jax.jit
-    def rollout():
+    def scan_rollout(plane, ss):
         keys = jax.random.split(jax.random.PRNGKey(5), steps)
-        plane = PowerPlaneState.from_fleet(fs)
-        ss = sor.init_state(SOR_CFG, n_chips)
         (plane, ss), hist = jax.lax.scan(round_fn, (plane, ss), keys)
         return plane, ss, hist
+
+    if mesh is None:
+        @jax.jit
+        def rollout():
+            return scan_rollout(PowerPlaneState.from_fleet(fs),
+                                sor.init_state(SOR_CFG, n_chips))
+    else:
+        # sharded path: init outside the jit so the carry enters (and the
+        # scan runs) with the chip axis physically sharded over the mesh
+        compiled = jax.jit(scan_rollout)
+
+        def rollout():
+            plane = ops.shard_chip_tree(PowerPlaneState.from_fleet(fs),
+                                        mesh, n_chips)
+            ss = ops.shard_chip_tree(sor.init_state(SOR_CFG, n_chips),
+                                     mesh, n_chips)
+            return compiled(plane, ss)
 
     _ROLLOUT_CACHE[key] = rollout
     return rollout
 
 
-def _sor_rollout(n_chips: int, learned: bool, steps: int = SOR_STEPS):
-    plane, ss, hist = _sor_rollout_fn(n_chips, learned, steps)()
+def _sor_rollout(n_chips: int, learned: bool, steps: int = SOR_STEPS,
+                 shards: int = 0):
+    plane, ss, hist = _sor_rollout_fn(n_chips, learned, steps, shards)()
     jax.block_until_ready(plane.energy_j)
     return plane, ss, hist
 
 
-def _phase_split_us(n_chips: int) -> dict:
+def _phase_split_us(n_chips: int, shards: int = 0) -> dict:
     """Per-phase cost of one learned control round, each phase timed as its
-    own compiled program: `refit` is the windowed EWLS solve (runs every
-    `refresh_every` rounds — its amortized per-round share is what the fused
-    round actually pays), `decide_arbitrate` is the off-cadence round
-    (history ingest + per-rail envelope blend + policy walk + arbitration
-    clamp), and `actuation` prices one host PMBus deployment of the decided
-    points through the event-scheduled bus (paid only when the deadband
-    scheduler lets a write through, so it is reported per round, not per
-    step)."""
+    own compiled program — the split future PRs read to see which phase
+    stops scaling: `ingest` is one FrameHistory ring push, `refit` the
+    windowed EWLS solve (runs every `refresh_every` rounds — its amortized
+    per-round share is what the fused round actually pays),
+    `decide_arbitrate` the off-cadence round (ingest + per-rail envelope
+    blend + policy walk + arbitration clamp), `reduce` the cross-chip
+    worst/mean fleet reduction (the only phase whose traffic crosses
+    shards), and `actuate` one host PMBus deployment of the decided points
+    through the event-scheduled bus (paid only when the deadband scheduler
+    lets a write through, so it is reported per round, not per step). With
+    `shards` > 1 the in-graph phases run on chip-sharded inputs (per-shard
+    resident ring; the reduction through the shard_map collectives)."""
+    mesh = _sor_mesh(shards)
     fs = FleetSpec.sample(n_chips, seed=FLEET_SEED)
     ctrl = InGraphRailController(
         MultiRailClosedLoop(floors=dict(SOR_POLICY_FLOORS)), sor=SOR_CFG)
@@ -314,6 +378,17 @@ def _phase_split_us(n_chips: int) -> dict:
     ss = sor.init_state(SOR_CFG, n_chips)
     for _ in range(SOR_CFG.refresh_every * 2):
         ss = sor.observe(ss, frame, SOR_CFG)
+    if mesh is not None:
+        # chip-sharded inputs: the jitted phases inherit the sharding, so
+        # each runs on its per-shard slice exactly as inside the round
+        plane = ops.shard_chip_tree(plane, mesh, n_chips)
+        frame = ops.shard_chip_tree(frame, mesh, n_chips)
+        ss = ops.shard_chip_tree(ss, mesh, n_chips)
+
+    ingest = jax.jit(lambda h, f: h.push(f))
+    _, us_ingest = timed(
+        lambda: jax.block_until_ready(ingest(ss.history, frame).v),
+        repeats=20)
 
     refit = jax.jit(lambda h: sor.fit_history(h, SOR_CFG, fused=True))
     _, us_refit = timed(
@@ -329,6 +404,17 @@ def _phase_split_us(n_chips: int) -> dict:
         lambda: jax.block_until_ready(round_jit(plane, frame, off)[0].v_io),
         repeats=20)
 
+    # the cross-chip fleet reduction — on a mesh, the one collective phase
+    stacked = jnp.stack([plane.v_core, plane.v_hbm, plane.v_io,
+                         frame.grad_error, frame.power_w], axis=1)
+    if mesh is not None:
+        reduce_fn = jax.jit(lambda x: ops.sharded_fleet_reduce(
+            x, mesh=mesh, axis_name="chips", use_shard_map=True))
+    else:
+        reduce_fn = jax.jit(ops.fleet_reduce)
+    _, us_reduce = timed(
+        lambda: jax.block_until_ready(reduce_fn(stacked)[0]), repeats=20)
+
     hc = HostRailController(n_chips=n_chips)
     t0 = time.perf_counter()
     hc.actuate(plane)
@@ -336,11 +422,14 @@ def _phase_split_us(n_chips: int) -> dict:
 
     r = SOR_CFG.refresh_every
     return {
+        "ingest_us": us_ingest,
         "refit_us": us_refit,
         "decide_arbitrate_us": us_round,
-        "actuation_us": us_act,
+        "reduce_us": us_reduce,
+        "actuate_us": us_act,
         "per_round_us": us_round + us_refit / r,
         "refresh_every": r,
+        "shards": max(shards, 1),
     }
 
 
@@ -356,7 +445,8 @@ def run_learned(fleet_sizes=SOR_FLEET_SIZES, steps: int = SOR_STEPS):
         (p_st, _, h_st), us_st = timed(
             lambda n=n: _sor_rollout(n, False, steps), repeats=SOR_REPEATS)
         (p_ln, ss, h_ln), us_ln = timed(
-            lambda n=n: _sor_rollout(n, True, steps), repeats=SOR_REPEATS)
+            lambda n=n: _sor_rollout(n, True, steps, shards=SOR_SHARDS),
+            repeats=SOR_REPEATS)
         est = ss.estimate
         envs = sor.rail_envelopes(est, SOR_CFG)
         # the paper's headline metric is rail POWER reduction; energy is
@@ -399,9 +489,9 @@ def run_learned(fleet_sizes=SOR_FLEET_SIZES, steps: int = SOR_STEPS):
                 f"conf={conf.mean():.2f} "
                 f"log10err={worst_modeled:.2f}")
 
-        phase = _phase_split_us(n)
+        phase = _phase_split_us(n, shards=SOR_SHARDS)
         record = {
-            "n_chips": n, "steps": steps,
+            "n_chips": n, "steps": steps, "shards": max(SOR_SHARDS, 1),
             "power_saving_pct": saving_pct,
             "energy_delta_pct": 100 * (e_ln / e_st - 1),
             "wall_time_us": {"static": us_st, "learned": us_ln},
@@ -415,12 +505,81 @@ def run_learned(fleet_sizes=SOR_FLEET_SIZES, steps: int = SOR_STEPS):
             f"power_saving={saving_pct:.1f}% "
             f"energy_delta={100 * (e_ln / e_st - 1):+.1f}% "
             f"us/step={us_ln / steps:.0f}ln/{us_st / steps:.0f}st "
-            f"phase[refit={phase['refit_us']:.0f}/"
+            f"phase[ingest={phase['ingest_us']:.0f} "
+            f"refit={phase['refit_us']:.0f}/"
             f"{phase['refresh_every']} "
             f"decide={phase['decide_arbitrate_us']:.0f} "
-            f"actuate={phase['actuation_us']:.0f}]us "
+            f"reduce={phase['reduce_us']:.0f} "
+            f"actuate={phase['actuate_us']:.0f}]us "
             + " ".join(derived_rails)
             + f" (bound {math.log10(ERROR_BOUND):.2f}) steps={steps}"),
+            "record": record})
+    return rows
+
+
+def run_weak_scaling(fleet_sizes=None, steps=None):
+    """Weak-scaling record for the sharded control plane: learned-control
+    µs/step as the fleet grows with the shard count (per-shard work held
+    near-constant), against the same run's single-device anchor at
+    `SOR_WEAK_BASE_CHIPS` — the PR-6 reference size. `ratio_vs_base` is
+    the PER-CHIP per-step cost normalized to the anchor's —
+    (us_per_step/n) / (base_us_per_step/base_chips) — the weak-scaling
+    efficiency: ≈1 means fleet growth is fully absorbed by the shard
+    mesh, and a near-flat ratio is the point of per-shard SOR state (the
+    O(capacity x rails x chips) ring never gathers, so per-chip control
+    cost stays put while the fleet scales). Raw µs/step is also recorded
+    but not gated: N chips on a fixed shard count is N/base more work,
+    so the raw ratio necessarily grows with N. Each fleet size emits one
+    record (bench tag `fleet_frontier_weak_scaling` ->
+    BENCH_fleet_frontier_weak_scaling.json) carrying the per-shard phase
+    split; `ratio_vs_base` is what check_bench_regression.py gates.
+
+    Needs multiple devices to mean anything (REPRO_BENCH_SOR_SHARDS, or
+    all visible devices when unset); on one device it still runs and
+    records, flagged `shards: 1`."""
+    fleet_sizes = tuple(fleet_sizes or SOR_WEAK_CHIPS)
+    steps = steps or SOR_WEAK_STEPS
+    shards = SOR_SHARDS or len(jax.devices())
+    n_base = SOR_WEAK_BASE_CHIPS
+
+    rows = []
+    # single-device anchor: the committed BENCH_fleet_frontier reference
+    _, us_base = timed(lambda: _sor_rollout(n_base, True, steps),
+                       repeats=SOR_REPEATS)
+    base_per_step = us_base / steps
+    for n in fleet_sizes:
+        if n % shards:
+            print(f"run_weak_scaling: skipping n_chips={n} "
+                  f"(not divisible by {shards} shards)")
+            continue
+        (p_ln, ss, _), us = timed(
+            lambda n=n: _sor_rollout(n, True, steps, shards=shards),
+            repeats=SOR_REPEATS)
+        per_step = us / steps
+        # weak-scaling efficiency: per-chip per-step cost vs the anchor's
+        ratio = (per_step / n) / (base_per_step / n_base)
+        phase = _phase_split_us(n, shards=shards)
+        conf = np.asarray(ss.estimate.confidence)
+        record = {
+            "n_chips": n, "steps": steps, "shards": shards,
+            "base_chips": n_base,
+            "base_us_per_step": base_per_step,
+            "us_per_step": per_step,
+            "us_per_chip_step": per_step / n,
+            "ratio_vs_base": ratio,
+            "phase_us": phase,
+            "conf_mean": float(conf.mean()),
+        }
+        rows.append({**row(
+            f"sor.weak_scaling.{n}chips.{shards}shards", us,
+            f"us/step={per_step:.0f} vs base={base_per_step:.0f} "
+            f"({n_base}chips/1dev) per_chip_ratio={ratio:.2f} "
+            f"phase[ingest={phase['ingest_us']:.0f} "
+            f"refit={phase['refit_us']:.0f}/{phase['refresh_every']} "
+            f"decide={phase['decide_arbitrate_us']:.0f} "
+            f"reduce={phase['reduce_us']:.0f}]us "
+            f"conf={conf.mean():.2f} steps={steps}"),
+            "bench": "fleet_frontier_weak_scaling",
             "record": record})
     return rows
 

@@ -36,6 +36,11 @@ MODULES = [
     # learned-vs-static safe-operating-region comparison (docs/sor.md):
     # per-chip recovered headroom below the shared static envelope
     "benchmarks.fleet_frontier:run_learned",
+    # sharded-control-plane weak scaling (docs/fleet.md): learned µs/step
+    # vs shard count, gated on the ratio to the single-device anchor
+    # (runs on however many devices are visible; multi-device needs
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N at process start)
+    "benchmarks.fleet_frontier:run_weak_scaling",
     "benchmarks.roofline_table",        # deliverable (g)
 ]
 

@@ -248,6 +248,9 @@ class ControlPlaneStats:
     #                                  scheduler (target pinned at a learned
     #                                  floor within the confidence-scaled
     #                                  deadband) — saved bus transactions
+    relaxed_polls: int = 0           # poll rounds fired at a deadband-
+    #                                  relaxed interval (poll back-pressure
+    #                                  on steady-state pinned boards)
 
 
 @runtime_checkable
@@ -302,7 +305,7 @@ class InGraphRailController:
 
     def __init__(self, policy: Any, name: str | None = None,
                  rail_map: RailMap = TPU_V5E_RAIL_MAP,
-                 sor: "Any | None" = None):
+                 sor: "Any | None" = None, donate: bool = False):
         if policy is None:
             raise ValueError("InGraphRailController needs a policy")
         validate_in_graph_sor(sor)
@@ -311,6 +314,18 @@ class InGraphRailController:
         self.policy = policy
         self.rail_map = rail_map
         self.sor = sor
+        # donate=True makes the cached eager-dispatch jit donate the
+        # SorState input buffers, so the O(capacity x rails x chips)
+        # history ring is updated in place instead of copied every round.
+        # The plane is NOT donated: telemetry frames routinely alias the
+        # plane's rail arrays (`as_frame(..., state=plane)` passes them
+        # through), and XLA rejects a buffer that is both donated and a
+        # live second argument (`f(donate(a), a)`). Caveat: donated
+        # inputs are invalidated — an eager caller must rebind to the
+        # returned (plane', sor_state') and never touch the SorState it
+        # passed in again (the loop idiom `plane, ss =
+        # ctrl.control_step_sor(plane, frame, ss)` is already safe).
+        self.donate = donate
         self.name = name or f"in-graph[{getattr(policy, 'name', 'policy')}]"
         self.last_request: RailRequest | None = None
         self.last_envelope: Any = None
@@ -367,7 +382,8 @@ class InGraphRailController:
         if _all_concrete((plane, frame, sor_state)):
             if self._round_jit is None:
                 self._round_jit = jax.jit(
-                    lambda p, f, s: self.control_round(p, f, s))
+                    lambda p, f, s: self.control_round(p, f, s),
+                    donate_argnums=(2,) if self.donate else ())
             plane, sor_state, request, env = self._round_jit(
                 plane, frame, sor_state)
         else:
@@ -380,6 +396,63 @@ class InGraphRailController:
     def stats(self) -> ControlPlaneStats:
         # decisions happen inside the compiled step; host-side cost is zero
         return ControlPlaneStats()
+
+
+def sharded_control_round(controller: InGraphRailController, mesh,
+                          axis_name: str = "chips"):
+    """Shard-parallel spelling of `InGraphRailController.control_round` over
+    a 1-D `axis_name` mesh: each shard ingests its slice of the frame into
+    its resident slice of the `[capacity, n_rails, n_chips]` history ring,
+    refits on the replicated `tick` cadence (`lax.cond` — every shard takes
+    the same branch), derives envelopes and runs decide + arbitrate — all
+    elementwise per chip, so per-shard results are bit-equal to slices of
+    the single-device round. The only cross-shard traffic is the confidence
+    summary (one psum + one pmin scalar); the plane/SorState never gather.
+
+    Returns `round(plane, frame, sor_state) -> (plane', sor_state',
+    conf_sum, conf_min)` where `conf_sum` is the fleet-wide sum of estimate
+    confidence (divide by `confidence.size` for the mean) and `conf_min`
+    its fleet-wide min. Inputs must carry a trailing `[n_chips]` axis
+    divisible by the mesh size; RNG-derived frame fields must be drawn on
+    global shapes *outside* the round (the `make_fleet_train_step` pattern)
+    so sharded and unsharded trajectories stay bit-equal.
+
+    Cross-chip policies (`policy.cross_chip`, e.g. `WorstChipGate`) are
+    rejected up front: inside shard_map their fleet reduction would
+    silently cover only the local shard."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import ops as _ops
+
+    if controller.sor is None:
+        raise ValueError("sharded_control_round needs a controller built "
+                         "with sor=SorConfig(...) — the per-shard resident "
+                         "state is the SorState")
+    if getattr(controller.policy, "cross_chip", False):
+        raise ValueError(
+            f"policy {getattr(controller.policy, 'name', '?')!r} reduces "
+            "across chips (cross_chip=True); inside the sharded control "
+            "round it would only see its local shard. Run it on the "
+            "unsharded path (FleetStepConfig.shard_control=False).")
+
+    def _local(plane, frame, sor_state):
+        plane, sor_state, _request, _env = controller.control_round(
+            plane, frame, sor_state)
+        conf = sor_state.estimate.confidence
+        conf_sum = jax.lax.psum(jnp.sum(conf), axis_name)
+        conf_min = jax.lax.pmin(jnp.min(conf), axis_name)
+        return plane, sor_state, conf_sum, conf_min
+
+    def round(plane, frame, sor_state):
+        n_chips = sor_state.history.chip_shape[-1]
+        in_specs = (_ops.chip_specs(plane, n_chips, axis_name),
+                    _ops.chip_specs(frame, n_chips, axis_name),
+                    _ops.chip_specs(sor_state, n_chips, axis_name))
+        out_specs = (in_specs[0], in_specs[2], P(), P())
+        return _ops._shard_map(_local, mesh, in_specs, out_specs)(
+            plane, frame, sor_state)
+
+    return round
 
 
 # ---------------------------------------------------------------------------
@@ -448,6 +521,7 @@ class HostRailController:
         rail_map: RailMap = TPU_V5E_RAIL_MAP,
         sor: "Any | None" = None,
         deadband_v: float = 0.0,
+        poll_relax: float = 0.0,
     ):
         if decide_from not in ("telemetry", "poll"):
             raise ValueError(f"decide_from must be 'telemetry' or 'poll', "
@@ -496,6 +570,17 @@ class HostRailController:
         # 0.0 (default) disables the scheduler: every lane writes, as before.
         self.deadband_v = deadband_v
         self.skipped_actuations = 0
+        # deadband-paired poll back-pressure (> 1.0 enables, with
+        # deadband_v): a board whose every *governed* lane (learned
+        # envelope, nonzero confidence) is deadband-pinned this round gets
+        # its READ_VOUT poll interval relaxed by this factor
+        # (fleet.set_poll_relax) — steady-state boards stop paying the full
+        # Table VI telemetry rate, and the relax is lifted the moment any
+        # lane leaves its band. Requires deadband_v > 0 to ever trigger.
+        if poll_relax and poll_relax < 1.0:
+            raise ValueError(f"poll_relax must be >= 1.0 (or 0 to disable), "
+                             f"got {poll_relax}")
+        self.poll_relax = poll_relax
 
     # -- observe --------------------------------------------------------------
     def observed_frame(self, plane: PowerPlaneState,
@@ -597,18 +682,23 @@ class HostRailController:
         return plane
 
     # -- actuate --------------------------------------------------------------
-    def _deadband_skips(self, want: dict[str, np.ndarray],
-                        n: int) -> dict[str, np.ndarray]:
-        """Per-rail [n] bool masks of lanes the deadband scheduler holds
-        back from the bus this round: the target sits within
-        `confidence * deadband_v` of the rail's learned floor AND the
-        regulator already holds it (within the same band) — a steady-state
-        envelope-pinned lane whose write would be a no-op transaction.
-        Rails without a learned envelope (or at zero confidence) never
-        skip, so cold start actuates every lane, exactly as before."""
+    def _deadband_skips(self, want: dict[str, np.ndarray], n: int
+                        ) -> tuple[dict[str, np.ndarray],
+                                   dict[str, np.ndarray]]:
+        """(skips, governed): per-rail [n] bool masks. `skips` marks lanes
+        the deadband scheduler holds back from the bus this round: the
+        target sits within `confidence * deadband_v` of the rail's learned
+        floor AND the regulator already holds it (within the same band) — a
+        steady-state envelope-pinned lane whose write would be a no-op
+        transaction. `governed` marks lanes with a learned envelope at
+        nonzero confidence — the lanes whose pinning can justify poll
+        back-pressure. Rails without a learned envelope (or at zero
+        confidence) never skip, so cold start actuates every lane, exactly
+        as before."""
         skips = {name: np.zeros(n, bool) for name in RAIL_LANES}
+        governed = {name: np.zeros(n, bool) for name in RAIL_LANES}
         if self.deadband_v <= 0.0 or self.last_envelope is None:
-            return skips
+            return skips, governed
         from repro.core.sor import envelope_for
         for name, lane in RAIL_LANES.items():
             env = envelope_for(self.last_envelope, name)
@@ -622,10 +712,11 @@ class HostRailController:
             held = np.array([self.fleet.segments[i].rail_voltage(lane)
                              for i in range(n)], np.float64)
             band = conf * self.deadband_v
-            skips[name] = ((conf > 0.0)
+            governed[name] = conf > 0.0
+            skips[name] = (governed[name]
                            & (np.abs(want[name] - floor) <= band)
                            & (np.abs(held - want[name]) <= band))
-        return skips
+        return skips, governed
 
     def actuate(self, plane: PowerPlaneState) -> PowerPlaneState:
         """Push the state's rail voltages through PMBus on every board;
@@ -643,8 +734,21 @@ class HostRailController:
             raise ValueError(
                 f"state has {n} chip(s) but the fleet bus has "
                 f"{self.fleet.n_boards} board(s)")
-        skips = self._deadband_skips(want, n)
+        skips, governed = self._deadband_skips(want, n)
         self.skipped_actuations += int(sum(s.sum() for s in skips.values()))
+        if self.poll_relax > 1.0:
+            # deadband-paired poll back-pressure: a board whose every
+            # governed lane is pinned this round polls at poll_relax x the
+            # requested interval; any lane leaving its band restores the
+            # full rate on the board's next firing
+            skp = np.stack([skips[name] for name in RAIL_LANES])
+            gov = np.stack([governed[name] for name in RAIL_LANES])
+            pinned_board = gov.any(axis=0) & (skp | ~gov).all(axis=0)
+            lanes_pinned = skp.sum(axis=0)
+            for i in range(n):
+                self.fleet.set_poll_relax(
+                    i, self.poll_relax if pinned_board[i] else 1.0,
+                    lanes_pinned=int(lanes_pinned[i]))
         setpoints = [{RAIL_LANES[name]: float(want[name][i])
                       for name in RAIL_LANES if not skips[name][i]}
                      for i in range(n)]
@@ -716,7 +820,9 @@ class HostRailController:
             polls_deferred=sum(st.deferred
                                for st in self.fleet.poll_stats.values()),
             poll_decisions=self.poll_decisions,
-            skipped_actuations=self.skipped_actuations)
+            skipped_actuations=self.skipped_actuations,
+            relaxed_polls=sum(st.relaxed_polls
+                              for st in self.fleet.poll_stats.values()))
 
 
 class HostPowerController(HostRailController):

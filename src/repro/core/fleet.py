@@ -93,13 +93,22 @@ class SegmentPollStats:
     is what the bus actually delivered. When a segment's poll rate exceeds
     its serialized two-wire capacity — or actuation traffic occupies the bus
     — polls slip (`deferred`) and the achieved interval degrades; polls are
-    *paced*, never queued into a backlog, and actuations are never dropped."""
+    *paced*, never queued into a backlog, and actuations are never dropped.
+
+    Deadband back-pressure (`set_poll_relax`): a segment whose lanes all sit
+    steady inside their confidence-scaled deadband at a learned floor is
+    polled at `relax_factor` x the requested interval — `relaxed_lanes`
+    records how many lanes pinned it there and `relaxed_polls` counts the
+    rounds fired at the relaxed rate."""
     board_id: int
     requested_interval_s: float
     polls: int = 0              # poll rounds completed
     samples: int = 0            # successful per-lane READ_VOUT samples
     deferred: int = 0           # rounds that slipped past their deadline
     busy_s: float = 0.0         # bus time spent polling
+    relax_factor: float = 1.0   # current READ_VOUT interval multiplier
+    relaxed_lanes: int = 0      # deadband-pinned lanes behind the relax
+    relaxed_polls: int = 0      # poll rounds fired at a relaxed interval
     _last_done: float = math.nan
     _interval_sum_s: float = 0.0
     _intervals: int = 0
@@ -298,6 +307,26 @@ class FleetPowerManager:
         their next firing."""
         self._polling = False
 
+    def set_poll_relax(self, board_id: int, factor: float,
+                       lanes_pinned: int = 0) -> None:
+        """Deadband-paired poll back-pressure: when every governed lane on a
+        segment sits inside its confidence-scaled deadband at a learned
+        floor, its READ_VOUT samples carry no new information at the full
+        Table VI rate — relax the segment's poll interval by `factor`
+        (>= 1.0; 1.0 restores the requested rate). Takes effect from the
+        segment's next firing: the periodic event reads the factor live, so
+        entering/leaving the deadband needs no reschedule and never drops an
+        in-flight poll. `lanes_pinned` records how many lanes justified the
+        relax (SegmentPollStats.relaxed_lanes). No-op when the segment is
+        not polling."""
+        if factor < 1.0:
+            raise ValueError(f"relax factor must be >= 1.0, got {factor}")
+        st = self.poll_stats.get(board_id)
+        if st is None:
+            return
+        st.relax_factor = factor
+        st.relaxed_lanes = lanes_pinned if factor > 1.0 else 0
+
     def _make_poll(self, seg: BusSegment, st: SegmentPollStats,
                    lanes: list[int]):
         gen = self._poll_gen
@@ -318,14 +347,20 @@ class FleetPowerManager:
             done = seg.local_now
             st.polls += 1
             st.busy_s += done - start
-            if slipped or done > t_fire + st.requested_interval_s:
+            # deadband back-pressure: the effective interval is the request
+            # stretched by the live relax factor (read per firing, so the
+            # controller flips it between rounds with no reschedule)
+            interval = st.requested_interval_s * max(st.relax_factor, 1.0)
+            if st.relax_factor > 1.0:
+                st.relaxed_polls += 1
+            if slipped or done > t_fire + interval:
                 st.deferred += 1
             if not math.isnan(st._last_done):
                 st._interval_sum_s += done - st._last_done
                 st._intervals += 1
             st._last_done = done
             # degrade, don't backlog: next poll no earlier than completion
-            return max(t_fire + st.requested_interval_s, done)
+            return max(t_fire + interval, done)
         return poll
 
     def poll_readback(self, lanes: Iterable[int] | None = None) -> np.ndarray:
@@ -429,4 +464,8 @@ class FleetPowerManager:
             "poll_samples": sum(st.samples for st in self.poll_stats.values()),
             "polls_deferred": sum(st.deferred
                                   for st in self.poll_stats.values()),
+            "polls_relaxed": sum(st.relaxed_polls
+                                 for st in self.poll_stats.values()),
+            "relaxed_lanes": sum(st.relaxed_lanes
+                                 for st in self.poll_stats.values()),
         }

@@ -131,6 +131,12 @@ def _obs(observed, state_value):
 
 class Policy:
     name = "base"
+    # True on policies whose decide reduces *across* chips (e.g. a fleet-wide
+    # worst-of gate). Inside the sharded control round such a policy would
+    # silently reduce over its local shard only, so the sharded path rejects
+    # cross-chip policies up front. Elementwise per-chip policies keep the
+    # default False.
+    cross_chip = False
 
     # -- the API --------------------------------------------------------------
     def decide(self, state: PowerPlaneState,
@@ -429,6 +435,7 @@ class WorstChipGate(Policy):
     BER rule — a link is only as safe as its worst lane). With per-chip
     margins this is the conservative fleet policy: no chip undervolts past
     what the worst chip's measured error allows."""
+    cross_chip = True
     inner: Policy = dataclasses.field(default_factory=lambda: BERBounded())
     # every canonical rail observable reduces (keys absent from the frame
     # are skipped, so single-rail telemetry behaves exactly as before)

@@ -382,6 +382,24 @@ class FrameHistory:
             cursor=(self.cursor + 1) % self.capacity,
             count=self.count + 1)
 
+    def partition_specs(self, axis_name: str = "chips"):
+        """Exact `PartitionSpec` pytree for this ring on a 1-D chip mesh:
+        the `[capacity, n_rails, n]` data leaves shard their trailing chip
+        axis over `axis_name`, the `cursor`/`count` scalars replicate —
+        the in/out specs a shard_map'd control round uses so the history
+        window itself never gathers. Non-fleet stores (scalar or multi-dim
+        chip shapes) replicate every leaf."""
+        from jax.sharding import PartitionSpec as P
+        fleet = len(self.chip_shape) == 1
+
+        def spec(leaf):
+            nd = jnp.ndim(leaf)
+            if fleet and nd >= 1 and jnp.shape(leaf)[-1] == self.chip_shape[0]:
+                return P(*((None,) * (nd - 1)), axis_name)
+            return P()
+
+        return jax.tree_util.tree_map(spec, self)
+
     def recency_weights(self, decay: float) -> jnp.ndarray:
         """`[capacity, n_rails, *chip]` exponential recency weights: the
         newest valid sample weighs 1, each older slot `decay`x less, invalid

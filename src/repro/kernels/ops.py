@@ -206,6 +206,47 @@ def sor_fit(x, y, w, log10_bound, guard, *, min_slope: float,
                                  conf_samples=conf_samples)
 
 
+@jax.jit
+def fleet_percentile(x, q):
+    """`[n_chips]` stat vector -> the q-th percentile, [] f32. Routed
+    through the kernels layer so the sharded fleet step's only cross-shard
+    traffic (the worst/mean/p95 stat vectors) flows through one seam;
+    percentile is sort-bound, so there is no streaming-kernel win — the XLA
+    reference runs on every backend (including TPU)."""
+    return ref.fleet_percentile_reference(x, q)
+
+
+def chip_specs(tree, n_chips: int, axis_name: str = "chips"):
+    """Per-leaf `PartitionSpec` pytree for a fleet-state pytree: any leaf
+    whose *trailing* axis is the `[n_chips]` fleet axis shards that axis
+    over `axis_name`; every other leaf (scalars like `SorState.tick`, the
+    window/rail leading axes of `FrameHistory`) replicates. The chip axis
+    is trailing everywhere in this codebase — `PowerPlaneState` `[n]`,
+    `TelemetryFrame` `[n]`, `FrameHistory` `[capacity, n_rails, n]`,
+    `SorEstimate` `[n_rails, n]` — so trailing-axis matching is exact."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(leaf):
+        nd = jnp.ndim(leaf)
+        if nd >= 1 and jnp.shape(leaf)[-1] == n_chips:
+            return P(*((None,) * (nd - 1)), axis_name)
+        return P()
+
+    return jax.tree_util.tree_map(spec, tree)
+
+
+def shard_chip_tree(tree, mesh, n_chips: int, axis_name: str = "chips"):
+    """`device_put` a fleet-state pytree onto `mesh` with its trailing chip
+    axis sharded over `axis_name` (`chip_specs` placement) — how a caller
+    makes the plane/`SorState` carry physically shard-resident before
+    feeding a mesh'd train step or the sharded control round. Scalars and
+    chip-less leaves replicate."""
+    from jax.sharding import NamedSharding
+    specs = chip_specs(tree, n_chips, axis_name)
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), tree, specs)
+
+
 def _shard_map(fn, mesh, in_specs, out_specs):
     """Version-portable shard_map (jax >= 0.5 top-level vs experimental)."""
     if hasattr(jax, "shard_map"):

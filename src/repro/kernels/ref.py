@@ -159,6 +159,13 @@ def fleet_reduce_reference(x):
     return jnp.max(xf, axis=0), jnp.min(xf, axis=0), jnp.sum(xf, axis=0)
 
 
+def fleet_percentile_reference(x, q):
+    """x [n_chips] -> the q-th percentile, [] f32: the bit-reference for the
+    fleet p95 tail metrics (step time, gradient error). Sort-bound, so it is
+    the real implementation on every backend, not just the oracle."""
+    return jnp.percentile(x.astype(jnp.float32), q)
+
+
 # ---------------------------------------------------------------------------
 # SOR EWLS accumulation oracle (safe-operating-region fit hot path)
 # ---------------------------------------------------------------------------

@@ -77,10 +77,19 @@ class FleetStepConfig:
     # fleet_reduce hot path and the partials combine via pmax/pmin/psum
     # (ops.sharded_fleet_reduce). On a single-device (CPU) mesh, or with
     # mesh=None, the step falls back to the plain vmap-path fleet_reduce —
-    # identical results, no shard_map. NOTE: only the cross-chip reduction
-    # shards; percentile/mean fleet metrics still see the global arrays.
+    # identical results, no shard_map.
     mesh: Any = None
     shard_axis: str = "chips"
+    # shard the learned control round itself (control_plane.
+    # sharded_control_round): the SorState history ring, ingest, refit,
+    # envelopes, and decide/arbitrate all run per shard inside shard_map —
+    # only the fleet reductions and the confidence summary scalars cross
+    # shards. None (default) auto-enables when `mesh` spans more than one
+    # device; True forces the shard_map path even on a 1-device mesh (the
+    # bit-equality testing knob, mirroring sharded_fleet_reduce's
+    # use_shard_map); False keeps the control round unsharded. Requires
+    # `sor` and an elementwise (not cross_chip) policy.
+    shard_control: "bool | None" = None
     # in-graph safe-operating-region learning (core/sor.py): when set, the
     # step threads a functional `sor.SorState` through its signature —
     # train_step(params, opt, plane, ef, sor_state, batch) -> (..., sor_state',
@@ -219,6 +228,26 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
                              "(StepConfig.policy) to consume the learned "
                              "envelopes")
         controller = with_sor(controller, sor_cfg)
+
+    # resolve the sharded-control-round knob once, at factory time: the mesh
+    # is static, so the shard_map'd round is built here and closed over
+    shard_control = fleet_cfg.shard_control
+    if shard_control is None:
+        shard_control = (fleet_cfg.mesh is not None
+                         and fleet_cfg.mesh.devices.size > 1
+                         and sor_cfg is not None)
+    sharded_round = None
+    if shard_control:
+        from repro.core.control_plane import sharded_control_round
+        if fleet_cfg.mesh is None:
+            raise ValueError("FleetStepConfig.shard_control=True needs a mesh")
+        if sor_cfg is None:
+            raise ValueError("FleetStepConfig.shard_control shards the "
+                             "learned (SOR) control round — set "
+                             "FleetStepConfig.sor, or leave shard_control "
+                             "off (the reduction still shards via mesh=)")
+        sharded_round = sharded_control_round(
+            controller, fleet_cfg.mesh, fleet_cfg.shard_axis)
     fs = fleet_cfg.spec
     n = fs.n_chips
     v_nom_core = jnp.asarray(fs.v_core_nominal, jnp.float32)
@@ -276,7 +305,18 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
                      "straggle_rate": p_straggle, "hbm_error_rate": hbm_rate,
                      "v_nom_core": v_nom_core, "v_nom_hbm": v_nom_hbm,
                      "v_nom_io": v_nom_io}
-        if sor_cfg is not None:
+        sor_conf = None
+        if sharded_round is not None:
+            # per-shard resident control round: the frame slice lands in the
+            # shard's own history ring, refit/envelopes/decide/arbitrate run
+            # elementwise on-shard, and only the confidence summary scalars
+            # cross shards (bit-equal trajectories — the RNG observables
+            # above were drawn on global shapes, outside the shard_map)
+            plane, sor_state, conf_sum, conf_min = sharded_round(
+                plane, frame, sor_state)
+            sor_conf = (conf_sum / sor_state.estimate.confidence.size,
+                        conf_min)
+        elif sor_cfg is not None:
             plane, sor_state = controller.control_step_sor(
                 plane, frame, sor_state)
         elif controller is not None:
@@ -292,7 +332,11 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
         if fleet_cfg.mesh is not None:
             mx, mn, sm = ops.sharded_fleet_reduce(
                 stacked, mesh=fleet_cfg.mesh,
-                axis_name=fleet_cfg.shard_axis)
+                axis_name=fleet_cfg.shard_axis,
+                # a forced-on-1-device sharded control round forces the
+                # reduction through shard_map too, so tests exercise the
+                # whole sharded graph on any device count
+                use_shard_map=True if shard_control else None)
         else:
             mx, mn, sm = ops.fleet_reduce(stacked)
         fleet_metrics = {}
@@ -306,12 +350,21 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
         fleet_metrics["fleet/v_io_mean"] = sm[4] / n
         # a synchronous fleet steps at its slowest chip
         fleet_metrics["fleet/t_fleet_s"] = mx[1]
-        fleet_metrics["fleet/t_chip_p95_s"] = jnp.percentile(t_chip, 95.0)
-        fleet_metrics["fleet/grad_error_p95"] = jnp.percentile(err, 95.0)
+        # p95 tails through the kernels-layer seam (sort-bound — the [n]
+        # stat vectors are the only cross-shard traffic on the sharded path)
+        fleet_metrics["fleet/t_chip_p95_s"] = ops.fleet_percentile(
+            t_chip, 95.0)
+        fleet_metrics["fleet/grad_error_p95"] = ops.fleet_percentile(
+            err, 95.0)
         fleet_metrics["fleet/straggler_frac"] = jnp.mean(
             straggle.astype(jnp.float32))
 
-        if sor_cfg is not None:
+        if sor_conf is not None:
+            # learned-region telemetry from the in-round collectives (one
+            # psum + one pmin scalar — the SorState itself never gathers)
+            fleet_metrics["fleet/sor_conf_mean"] = sor_conf[0]
+            fleet_metrics["fleet/sor_conf_min"] = sor_conf[1]
+        elif sor_cfg is not None:
             # learned-region telemetry: how much of the fleet trusts a fit
             fleet_metrics["fleet/sor_conf_mean"] = jnp.mean(
                 sor_state.estimate.confidence)
@@ -339,8 +392,42 @@ def make_fleet_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
 
 
 def jit_train_step(train_step, *, donate=True):
-    return jax.jit(train_step,
-                   donate_argnums=(0, 1, 2, 3) if donate else ())
+    """jit a train step with its carry buffers donated: params, opt state,
+    plane, ef residual — and, for the 6-arg SOR step, the `SorState` too,
+    so the O(capacity x rails x chips) history ring is updated in place
+    instead of copied every step. Donated inputs are invalidated: callers
+    must rebind to the returned state (the trainer's carry loop already
+    does) and never reuse the objects they passed in."""
+    if not donate:
+        return jax.jit(train_step)
+    try:
+        import inspect
+        n_args = len(inspect.signature(train_step).parameters)
+    except (TypeError, ValueError):
+        n_args = 5
+    donate_argnums = (0, 1, 2, 3, 4) if n_args >= 6 else (0, 1, 2, 3)
+    return jax.jit(train_step, donate_argnums=donate_argnums)
+
+
+def shard_fleet_state(state: dict, mesh, axis_name: str = "chips") -> dict:
+    """Place the per-chip groups of a trainer state dict (`plane`, `sor`)
+    onto `mesh` with their trailing chip axis sharded over `axis_name`
+    (ops.chip_specs layout: ring [capacity, n_rails, n] and estimate
+    [n_rails, n] shard, scalars replicate). Model groups pass through
+    untouched — the fleet step is SPMD-replicated over the model. Use after
+    building (or restoring) the initial state, before the first sharded
+    step; `ckpt.save` gathers transparently on the way back out."""
+    out = dict(state)
+    plane = state.get("plane")
+    n_chips = None
+    if plane is not None and jnp.ndim(plane.v_core) == 1:
+        n_chips = plane.v_core.shape[0]
+    for group in ("plane", "sor"):
+        tree = state.get(group)
+        if tree is None or n_chips is None:
+            continue
+        out[group] = ops.shard_chip_tree(tree, mesh, n_chips, axis_name)
+    return out
 
 
 def shard_map_ef_step(train_step, mesh, dp_axes=("data",)):

@@ -63,6 +63,15 @@ class TrainerConfig:
     # remaps it across fleet sizes on elastic restore, and folds the learned
     # per-rail view into summary()["sor"].
     sor: Any = None
+    # Sharded control plane (train.step.FleetStepConfig.mesh/shard_control):
+    # when set, restored per-chip state (plane + SorState) is re-placed onto
+    # this mesh after restore/remap — `ckpt.save` gathers transparently to
+    # host arrays, restore lands on the default device, and `remap_plane`/
+    # `remap_sor` run on the gathered view, so `shard_fleet_state` scatters
+    # the result back before the next sharded step. Checkpoint files and
+    # remap semantics are identical to the unsharded trainer.
+    mesh: Any = None
+    shard_axis: str = "chips"
 
     def __post_init__(self):
         self.controller = as_controller(self.controller, host=True)
@@ -130,6 +139,12 @@ class Trainer:
         if ss is not None and ss.history.chip_shape \
                 and ss.history.chip_shape[0] != n_target:
             self.state["sor"] = remap_sor(ss, self.cfg.fleet)
+        if self.cfg.mesh is not None:
+            # scatter the (gathered, remapped) per-chip state back onto the
+            # chips mesh so the next sharded step starts shard-resident
+            from repro.train.step import shard_fleet_state
+            self.state = shard_fleet_state(self.state, self.cfg.mesh,
+                                           self.cfg.shard_axis)
 
     def _save(self, step: int):
         self.ckpt.save(step, self.state, fleet=self.cfg.fleet)
