@@ -12,6 +12,10 @@ are machine-dependent — CI runners and dev boxes differ by integer factors
 * ``ratio_vs_base`` records (``fleet_frontier:run_weak_scaling``) gate the
   sharded PER-CHIP µs/step against the same run's single-device anchor —
   the weak-scaling flatness the sharded control plane is for.
+* ``tokens_per_joule{headroom,roundrobin}`` / ``p99_latency_s{...}``
+  records (``serve_router``) gate the roundrobin/headroom tokens-per-joule
+  ratio and the headroom/roundrobin p99 latency ratio — growth of either
+  means the headroom router's serving win shrank.
 
 Matching is by record ``name`` (and the files' ``bench`` tag): a record or
 metric present in the BASELINE but missing from the new run fails with a
@@ -68,6 +72,16 @@ def gate_metrics(rec: dict) -> dict[str, float]:
     if "ratio_vs_base" in rec:
         out["weak-scaling per-chip us/step ratio vs single-device base"] = (
             float(rec["ratio_vs_base"]))
+    tpj = rec.get("tokens_per_joule")
+    if isinstance(tpj, dict) and "headroom" in tpj and "roundrobin" in tpj:
+        # growth of roundrobin/headroom = the headroom win shrank
+        out["roundrobin/headroom tokens-per-joule ratio"] = (
+            tpj["roundrobin"] / max(tpj["headroom"], 1e-9))
+    p99 = rec.get("p99_latency_s")
+    if isinstance(p99, dict) and "headroom" in p99 and "roundrobin" in p99:
+        # growth of headroom/roundrobin p99 = headroom got slower at tail
+        out["headroom/roundrobin p99 latency ratio"] = (
+            p99["headroom"] / max(p99["roundrobin"], 1e-9))
     return out
 
 

@@ -41,6 +41,10 @@ MODULES = [
     # (runs on however many devices are visible; multi-device needs
     # XLA_FLAGS=--xla_force_host_platform_device_count=N at process start)
     "benchmarks.fleet_frontier:run_weak_scaling",
+    # headroom-aware serving router vs round-robin (docs/serve.md): gated
+    # on the roundrobin/headroom tokens-per-joule and headroom/roundrobin
+    # p99 ratios
+    "benchmarks.serve_router",
     "benchmarks.roofline_table",        # deliverable (g)
 ]
 

@@ -9,7 +9,8 @@ from repro.core.codecs import (
 )
 from repro.core.control_plane import (
     HostDecisionController, HostPowerController, HostRailController,
-    InGraphRailController, RailController, as_controller, worst_chip_pinned,
+    InGraphRailController, RailController, as_controller, pinned_chip_mask,
+    pinned_rails, worst_chip_pinned,
 )
 from repro.core.sor import (
     SafeEnvelope, SorConfig, SorEstimate, SorState, rail_envelopes,
@@ -39,6 +40,6 @@ __all__ = [
     "StepProfile", "TPU_V5E_RAIL_MAP", "TelemetryFrame", "Thresholds",
     "V5E", "account_step", "account_step_fleet", "as_controller",
     "fleet_summary", "linear11_decode", "linear11_encode",
-    "linear16_decode", "linear16_encode", "rail_envelopes", "safe_envelope",
-    "settling_time", "worst_chip_pinned",
+    "linear16_decode", "linear16_encode", "pinned_chip_mask", "pinned_rails",
+    "rail_envelopes", "safe_envelope", "settling_time", "worst_chip_pinned",
 ]

@@ -103,25 +103,67 @@ def arbitrate(plane: PowerPlaneState, request: RailRequest,
     return apply_request(plane, clamped)
 
 
+def pinned_rails(plane: PowerPlaneState, request: RailRequest | None,
+                 rail_map: RailMap = TPU_V5E_RAIL_MAP,
+                 envelope: Any = None, atol: float = 1e-4
+                 ) -> dict[str, np.ndarray]:
+    """Host-side per-rail pinning breakdown: {rail name: [n_chips] bool}
+    for every rail the request actually asked for. A chip is pinned on a
+    rail when the latest decision *wanted* a voltage at/below the floor
+    arbitration holds it to AND the plane is already held there — the chip
+    is operating at its envelope limit with the policy still pushing
+    against it. `envelope` is the learned state in either spelling (a
+    {rail: SafeEnvelope} dict or the historical bare VDD_IO envelope);
+    rails without one pin against the platform static floor. Rails the
+    request left alone (None) are absent from the result — no request, no
+    pinning claim."""
+    out: dict[str, np.ndarray] = {}
+    if request is None:
+        return out
+    from repro.core.sor import envelope_for
+    n = plane.n_chips
+    for name, field in _LANE_FIELDS.items():
+        want = getattr(request, field)
+        if want is None:
+            continue
+        env = envelope_for(envelope, name)   # dict or single spelling
+        r = rail_map.by_name(name)
+        floor = (env.floor(r.v_min) if env is not None
+                 else jnp.float32(r.v_min))
+        wantv = jnp.asarray(want, jnp.float32)
+        held = jnp.asarray(getattr(plane, field), jnp.float32)
+        pinned = (wantv <= floor + atol) & (held <= floor + atol)
+        mask = np.atleast_1d(np.asarray(jax.device_get(pinned), bool))
+        out[name] = np.broadcast_to(mask, (n,)).copy()
+    return out
+
+
+def pinned_chip_mask(plane: PowerPlaneState, request: RailRequest | None,
+                     rail_map: RailMap = TPU_V5E_RAIL_MAP,
+                     envelope: Any = None, atol: float = 1e-4) -> np.ndarray:
+    """[n_chips] bool: chips pinned on ANY requested rail — the drain mask
+    headroom routing excludes from new placements (serve/router.py)."""
+    out = np.zeros(plane.n_chips, bool)
+    for mask in pinned_rails(plane, request, rail_map, envelope,
+                             atol).values():
+        out |= mask
+    return out
+
+
 def worst_chip_pinned(plane: PowerPlaneState, request: RailRequest | None,
                       rail_map: RailMap = TPU_V5E_RAIL_MAP,
                       envelope: Any = None, atol: float = 1e-4) -> bool:
-    """Host-side: is the fleet's worst chip pinned at its VDD_IO envelope
-    floor — i.e. did the latest decision *want* a voltage at/below the floor
+    """Host-side: is any chip pinned at any requested rail's envelope floor
+    — i.e. did the latest decision *want* a voltage at/below the floor
     arbitration holds it to? A pinned worst chip means the fleet has no
-    safe headroom left; serve-side admission control sheds load on this
-    signal rather than letting the envelope absorb unbounded demand."""
-    if request is None or request.v_io is None:
-        return False
-    from repro.core.sor import envelope_for
-    envelope = envelope_for(envelope, "VDD_IO")   # dict or single spelling
-    r = rail_map.by_name("VDD_IO")
-    floor = (envelope.floor(r.v_min) if envelope is not None
-             else jnp.float32(r.v_min))
-    want = jnp.asarray(request.v_io, jnp.float32)
-    held = jnp.asarray(plane.v_io, jnp.float32)
-    pinned = (want <= floor + atol) & (held <= floor + atol)
-    return bool(np.any(np.asarray(jax.device_get(pinned))))
+    safe headroom left on that rail; serve-side admission control sheds
+    load on this signal rather than letting the envelope absorb unbounded
+    demand. Checks EVERY rail the request touched (a VDD_HBM floor during
+    decode gates exactly like the historical VDD_IO-only check); use
+    `pinned_rails` for the per-rail breakdown."""
+    return any(bool(mask.any())
+               for mask in pinned_rails(plane, request, rail_map, envelope,
+                                        atol).values())
 
 
 def _has_decide(policy: Any) -> bool:

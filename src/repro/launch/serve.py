@@ -33,6 +33,15 @@ def main():
                     help="serve on an [n_chips] fleet plane with per-chip "
                          "process variation (0 = scalar single-chip)")
     ap.add_argument("--fleet-seed", type=int, default=0)
+    ap.add_argument("--router", choices=("none", "headroom", "roundrobin"),
+                    default="none",
+                    help="route a seeded bursty traffic trace over the "
+                         "fleet by per-rail voltage headroom (or the "
+                         "round-robin baseline) instead of running "
+                         "generate(); needs --fleet-chips")
+    ap.add_argument("--trace-requests", type=int, default=48,
+                    help="requests in the bursty trace (--router only)")
+    ap.add_argument("--trace-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny or True)
@@ -53,13 +62,46 @@ def main():
                   if args.control_path == "in-graph"
                   else HostRailController(policy,
                                           n_chips=max(args.fleet_chips, 1)))
+    router = None
+    if args.router != "none":
+        if fleet is None:
+            raise SystemExit("--router places work across a fleet; pass "
+                             "--fleet-chips N")
+        from repro.serve.router import HeadroomRouter, RoundRobinRouter
+        # the launcher world has no error telemetry, so every chip walks
+        # to its policy floor and reads as pinned — a drain-pinned router
+        # would (correctly) shed the whole trace. Keep pinned chips
+        # eligible here; benchmarks/serve_router.py and the tests
+        # exercise the drain semantics against a frontier-error world.
+        router = (HeadroomRouter(capacity=args.batch, drain_pinned=False)
+                  if args.router == "headroom"
+                  else RoundRobinRouter(capacity=args.batch))
     engine = ServeEngine(
         cfg, params, max_len=args.prompt_len + args.max_new + 8,
         batch_size=args.batch,
         prefill_profile=StepProfile(2.0 * n * args.batch * args.prompt_len,
                                     2.0 * n, 0.0),
         decode_profile=StepProfile(2.0 * n * args.batch, 2.0 * n, 0.0),
-        controller=controller, fleet=fleet)
+        controller=controller, fleet=fleet, router=router)
+    if router is not None:
+        # routed serving: place a seeded bursty trace by per-rail headroom
+        # (docs/serve.md) and report the per-request SLO ledger
+        from repro.serve.traffic import bursty_trace
+        trace = bursty_trace(args.trace_requests, seed=args.trace_seed)
+        # a tiny model's roofline step is microseconds — pin a serving-scale
+        # tick so the seconds-scale trace spans hundreds of ticks, not 1e6;
+        # bound the run to the trace span plus drain slack so a saturated
+        # fleet reports unplaced work instead of spinning 20k ticks
+        tick_s = 0.02
+        span = trace.requests[-1].t_arrival_s if trace.requests else 0.0
+        ledger = engine.serve_trace(trace, tick_s=tick_s,
+                                    max_ticks=int(span / tick_s) + 400)
+        print(f"{cfg.name} ({n/1e6:.1f}M): routed {len(trace)} requests "
+              f"over {engine.n_chips} chips ({args.router})")
+        print("trace:", engine.last_trace)
+        print("slo:", ledger.summary())
+        print("summary:", engine.summary())
+        return
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, max_new_tokens=args.max_new)

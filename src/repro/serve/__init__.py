@@ -1,0 +1,13 @@
+"""Serving tier: batched engine + headroom-aware fleet routing
+(docs/serve.md)."""
+
+from repro.serve.engine import ServeEngine, ServeStats
+from repro.serve.router import (HeadroomRouter, RequestLedger,
+                                RoundRobinRouter, rail_headroom)
+from repro.serve.traffic import Request, TrafficTrace, bursty_trace
+
+__all__ = [
+    "HeadroomRouter", "Request", "RequestLedger", "RoundRobinRouter",
+    "ServeEngine", "ServeStats", "TrafficTrace", "bursty_trace",
+    "rail_headroom",
+]

@@ -17,6 +17,7 @@ scalar single-chip behavior.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any
 
@@ -27,12 +28,14 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import sor as sor_mod
 from repro.core.control_plane import (InGraphRailController, as_controller,
-                                      with_sor, worst_chip_pinned)
+                                      pinned_chip_mask, pinned_rails,
+                                      with_sor)
 from repro.core.hwspec import FleetSpec
 from repro.core.policy import WorstChipGate
 from repro.core.power_plane import (PowerPlaneState, StepProfile,
                                     account_and_observe,
-                                    account_fleet_and_observe, step_time_s)
+                                    account_fleet_and_observe,
+                                    chip_power_w_jnp, step_time_s)
 from repro.core.telemetry import scalar_view
 from repro.models import registry
 
@@ -46,6 +49,11 @@ class ServeStats:
     fleet_energy_j: float = 0.0    # whole-fleet energy (mean x n_chips)
     decode_sheds: int = 0          # decode batches deferred by admission gate
     defer_time_s: float = 0.0      # simulated time spent waiting out sheds
+    # shed/defer breakdown: which rail's envelope floor pinned the fleet,
+    # and the reason code the deferral carried (the aggregate counters stay
+    # for back-compat; these are their per-rail / per-reason split)
+    sheds_by_rail: dict = dataclasses.field(default_factory=dict)
+    sheds_by_reason: dict = dataclasses.field(default_factory=dict)
 
 
 class ServeEngine:
@@ -56,7 +64,8 @@ class ServeEngine:
                  controller=None, policy=None,
                  fleet: FleetSpec | None = None,
                  sor: "sor_mod.SorConfig | None" = None,
-                 admission_gate: bool = False):
+                 admission_gate: bool = False,
+                 router=None):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg)
@@ -91,9 +100,20 @@ class ServeEngine:
             self.controller = with_sor(self.controller, sor)
         self._sor_state = None
         # admission gate: shed/defer decode batches while the arbitrated
-        # request shows the worst chip pinned at its VDD_IO envelope floor
+        # request shows any chip pinned at any requested rail's envelope
+        # floor (all-rails admission — a VDD_HBM floor during decode gates
+        # exactly like the historical VDD_IO check)
         self.admission_gate = admission_gate
         self.last_shed_reason: str | None = None
+        self._last_pinned_rails: list[str] = []
+        # headroom-aware placement (serve/router.py): serve_trace() routes a
+        # traffic trace over the fleet by per-rail voltage headroom
+        self.router = router
+        if router is not None and fleet is None:
+            raise ValueError("router= places work across a fleet; pass "
+                             "fleet=FleetSpec (n_chips=1 degenerates to the "
+                             "plain engine)")
+        self.last_trace: dict | None = None
         self.prefill_profile = prefill_profile or StepProfile(1e9, 1e9, 0.0)
         self.decode_profile = decode_profile or StepProfile(1e8, 1e9, 0.0)
         self.stats = ServeStats()
@@ -108,6 +128,26 @@ class ServeEngine:
     def n_chips(self) -> int:
         return self.plane.n_chips
 
+    def _control_tick(self, frame) -> None:
+        """One controller round on `frame` — shared by the per-step
+        accounting loop and the routed trace loop."""
+        if self.controller is None:
+            return
+        c = self.controller
+        if getattr(c, "sor", None) is not None and hasattr(
+                c, "control_step_sor"):
+            if self._sor_state is None:
+                self._sor_state = c.init_sor(
+                    self.n_chips if self.plane.is_fleet else None)
+            # one fused control round per decision: observe + refit
+            # (amortized by refresh_every) + decide + arbitrate run
+            # as a single cached jitted program, so per-decision
+            # controller cost stays flat as the fleet grows
+            self.plane, self._sor_state = c.control_step_sor(
+                self.plane, frame, self._sor_state)
+        else:
+            self.plane = c.control_step(self.plane, frame)
+
     def _account(self, profile: StepProfile, n: int = 1):
         for _ in range(n):
             if self.fleet_spec is not None:
@@ -121,35 +161,25 @@ class ServeEngine:
             self.stats.energy_j += e
             self.stats.fleet_energy_j += e * self.n_chips
             self.stats.model_time_s += scalar_view(m["t_step_s"])
-            if self.controller is not None:
-                c = self.controller
-                if getattr(c, "sor", None) is not None and hasattr(
-                        c, "control_step_sor"):
-                    if self._sor_state is None:
-                        self._sor_state = c.init_sor(
-                            self.n_chips if self.plane.is_fleet else None)
-                    # one fused control round per decision: observe + refit
-                    # (amortized by refresh_every) + decide + arbitrate run
-                    # as a single cached jitted program, so per-decision
-                    # controller cost stays flat as the fleet grows
-                    self.plane, self._sor_state = c.control_step_sor(
-                        self.plane, frame, self._sor_state)
-                else:
-                    self.plane = c.control_step(self.plane, frame)
+            self._control_tick(frame)
 
     def _worst_chip_pinned(self) -> bool:
-        """Did the latest arbitration pin the worst chip at its VDD_IO
+        """Did the latest arbitration pin any chip at any requested rail's
         envelope floor (request wanted at/below what the envelope holds)?
-        The shed signal carries the arbitrated `RailRequest.reason`."""
+        Records the per-rail breakdown for the shed counters; the shed
+        signal carries the arbitrated `RailRequest.reason`."""
         c = self.controller
         req = getattr(c, "last_request", None) if c is not None else None
         env = getattr(c, "last_envelope", None) if c is not None else None
         if req is None:
             return False
-        if worst_chip_pinned(self.plane, req, envelope=env):
-            self.last_shed_reason = req.reason or "pinned-at-envelope-floor"
-            return True
-        return False
+        masks = pinned_rails(self.plane, req, envelope=env)
+        rails = [r for r, m in masks.items() if m.any()]
+        if not rails:
+            return False
+        self._last_pinned_rails = rails
+        self.last_shed_reason = req.reason or "pinned-at-envelope-floor"
+        return True
 
     def _defer_tick(self) -> None:
         """Admission shed: the batch waits out one *accounted* decode tick
@@ -158,6 +188,12 @@ class ServeEngine:
         floor, e.g. escalate compression or raise the rail); a real
         deployment would route the deferred batch to another replica."""
         self.stats.decode_sheds += 1
+        reason = self.last_shed_reason or "pinned-at-envelope-floor"
+        self.stats.sheds_by_reason[reason] = (
+            self.stats.sheds_by_reason.get(reason, 0) + 1)
+        for rail in self._last_pinned_rails:
+            self.stats.sheds_by_rail[rail] = (
+                self.stats.sheds_by_rail.get(rail, 0) + 1)
         self.stats.defer_time_s += scalar_view(
             step_time_s(self.decode_profile, self.plane))
         self._account(self.decode_profile)
@@ -196,6 +232,206 @@ class ServeEngine:
                 break
         return np.asarray(jnp.concatenate(out, axis=1))
 
+    def serve_trace(self, trace, *, max_ticks: int = 20_000,
+                    observe=None, tick_s: "float | None" = None,
+                    error_bound: float = 5e-3, degrade: float = 0.5,
+                    prefill_speedup: float = 8.0):
+        """Route a seeded traffic trace (`serve/traffic.py`) over the fleet
+        and return the per-request SLO ledger (`serve/router.py`).
+
+        A modeled continuous-batching loop in simulated time — no model
+        forward runs; what is modeled is exactly what the control plane
+        governs: per-chip step time (f ∝ v, process variation), per-chip
+        busy/idle power, and per-chip reliability. Each tick:
+
+        1. arrivals with `t_arrival_s <= now` join the FIFO queue;
+        2. the fleet is accounted (`account_fleet_and_observe`) and the
+           caller's `observe(plane, frame, tick, busy_frac)` overlays the
+           per-rail failure observables (measured error world — the bench
+           couples onsets to load, the consolidated-margins drift);
+        3. the controller runs one round (SOR learning included), exactly
+           the `_account` control path;
+        4. per-rail headroom and the pinned-chip drain mask are read from
+           the controller's eager `last_envelope`/`last_request` and the
+           router places queued requests head-of-line FIFO (a request it
+           cannot place defers — reason `capacity` when every slot is
+           full, `pinned-drain` when only pinned chips had room);
+        5. resident requests progress at their chip's modeled rate
+           (`tick_s / t_step_chip` decode tokens per tick, batched decode:
+           every slot advances together; prefill runs `prefill_speedup` x
+           faster). A chip whose measured observables sit over
+           `error_bound` this tick delivers only `degrade` of its rate —
+           the goodput cost of operating past the frontier (the BER
+           retransmission analogue), which is what makes zero-headroom
+           placement genuinely expensive;
+        6. energy is accounted busy/idle-blended per chip (idle slots do
+           not burn dynamic power) into the ledger and the engine stats;
+           each resident request is charged its share of its chip's busy
+           energy.
+
+        `tick_s` defaults to the fleet-mean decode step time at the current
+        operating point. Deterministic given (trace, observe, controller):
+        placement ties break by chip index and all randomness lives in the
+        caller's seeded trace/observe."""
+        if self.router is None:
+            raise ValueError("serve_trace needs the engine built with "
+                             "router= (HeadroomRouter or RoundRobinRouter)")
+        if self.fleet_spec is None:
+            raise ValueError("serve_trace routes over a fleet plane; pass "
+                             "fleet=FleetSpec")
+        from repro.serve.router import RequestLedger, rail_headroom
+        ledger = RequestLedger()
+        n = self.n_chips
+        cap = self.router.capacity
+        spec = self.fleet_spec
+        variation = {k: jnp.asarray(v) for k, v in spec.variation().items()}
+        if tick_s is None:
+            tick_s = float(scalar_view(
+                step_time_s(self.decode_profile, self.plane)))
+        account = lambda p: account_fleet_and_observe(
+            self.decode_profile, p, spec)
+        p_idle_fn = lambda p: chip_power_w_jnp(
+            p, 0.0, 0.0, 0.0, spec.base, variation=variation)
+
+        arrivals = sorted(trace, key=lambda r: (r.t_arrival_s, r.rid))
+        ai = 0
+        pending: collections.deque = collections.deque()
+        running: list[list[dict]] = [[] for _ in range(n)]
+        t = 0.0
+        max_occ = 0
+        degraded_ticks = 0
+        ticks_run = 0
+        obs_keys = ("grad_error", "straggle_rate", "hbm_error_rate")
+
+        for tick in range(max_ticks):
+            if ai >= len(arrivals) and not pending \
+                    and not any(running):
+                break
+            ticks_run += 1
+            while ai < len(arrivals) and arrivals[ai].t_arrival_s <= t:
+                ledger.admit(arrivals[ai])
+                pending.append(arrivals[ai])
+                ai += 1
+            occ = np.array([len(r) for r in running], np.float64)
+            busy_frac = jnp.asarray(np.minimum(occ, cap) / cap, jnp.float32)
+
+            self.plane, frame, m = account(self.plane)
+            if observe is not None:
+                frame = observe(self.plane, frame, tick, busy_frac)
+            self._control_tick(frame)
+
+            # busy/idle-blended energy: the accounting above assumed every
+            # chip fully busy — rescale its step energy to this tick's
+            # occupancy (idle slots burn static + uncore power only) and
+            # rewrite the plane's accumulator to match
+            p_busy = m["power_w"]
+            p_idle = p_idle_fn(self.plane)
+            p_eff = p_idle + (p_busy - p_idle) * busy_frac
+            e_tick = p_eff * jnp.float32(tick_s)
+            self.plane = dataclasses.replace(
+                self.plane,
+                energy_j=self.plane.energy_j - m["energy_step_j"] + e_tick)
+            e_np = np.asarray(jax.device_get(e_tick), np.float64)
+            e_busy = np.asarray(jax.device_get(
+                (p_eff - p_idle) * jnp.float32(tick_s)), np.float64)
+            self.stats.energy_j += float(e_np.mean())
+            self.stats.fleet_energy_j += float(e_np.sum())
+            self.stats.model_time_s += tick_s
+            ledger.tick_energy(float(e_np.sum()))
+            for i in range(n):
+                if running[i]:
+                    share = e_busy[i] / len(running[i])
+                    for slot in running[i]:
+                        ledger.charge(slot["req"].rid, share)
+
+            # placement: headroom + drain mask from the eager round just
+            # run; FIFO with head-of-line blocking (placement order is the
+            # SLO order — a starved head is a deferral, not a skip)
+            envs = getattr(self.controller, "last_envelope", None) \
+                if self.controller is not None else None
+            req = getattr(self.controller, "last_request", None) \
+                if self.controller is not None else None
+            headroom = rail_headroom(self.plane, envs)
+            pinned = (pinned_chip_mask(self.plane, req, envelope=envs)
+                      if req is not None else np.zeros(n, bool))
+            while pending:
+                occ_now = [len(r) for r in running]
+                chip = self.router.place(pending[0], occ_now, headroom,
+                                         pinned)
+                if chip is None:
+                    reason = ("capacity"
+                              if all(o >= cap for o in occ_now)
+                              else "pinned-drain")
+                    ledger.defer(pending[0].rid, reason, tick_s)
+                    self.stats.decode_sheds += 1
+                    self.stats.sheds_by_reason[reason] = (
+                        self.stats.sheds_by_reason.get(reason, 0) + 1)
+                    if reason == "pinned-drain":
+                        for rail, mask in pinned_rails(
+                                self.plane, req, envelope=envs).items():
+                            if mask.any():
+                                self.stats.sheds_by_rail[rail] = (
+                                    self.stats.sheds_by_rail.get(rail, 0)
+                                    + 1)
+                    self.stats.defer_time_s += tick_s
+                    break
+                r = pending.popleft()
+                ledger.place(r.rid, t, chip)
+                running[chip].append({
+                    "req": r,
+                    "prefill_left": float(r.prefill_tokens),
+                    "decode_left": float(r.decode_tokens)})
+            max_occ = max(max_occ, max(len(r) for r in running))
+
+            # progress: batched decode — every resident slot advances at
+            # the chip's modeled token rate; over-bound chips deliver
+            # degraded goodput this tick
+            t_step = np.asarray(jax.device_get(m["t_step_s"]), np.float64)
+            rate = tick_s / np.maximum(
+                np.broadcast_to(np.atleast_1d(t_step), (n,)), 1e-12)
+            over = np.zeros(n, bool)
+            for key in obs_keys:
+                v = frame.get(key)
+                if v is None:
+                    continue
+                a = np.asarray(jax.device_get(v), np.float64)
+                a = np.broadcast_to(np.atleast_1d(a), (n,))
+                over |= (~np.isnan(a)) & (a > error_bound)
+            if over.any():
+                degraded_ticks += int(over.sum())
+            rate = np.where(over, rate * degrade, rate)
+            t_end = t + tick_s
+            for i in range(n):
+                if not running[i]:
+                    continue
+                finished = []
+                for slot in running[i]:
+                    if slot["prefill_left"] > 0:
+                        slot["prefill_left"] -= rate[i] * prefill_speedup
+                        if slot["prefill_left"] <= 0:
+                            self.stats.prefill_tokens += (
+                                slot["req"].prefill_tokens)
+                        continue
+                    slot["decode_left"] -= rate[i]
+                    if slot["decode_left"] <= 0:
+                        finished.append(slot)
+                for slot in finished:
+                    running[i].remove(slot)
+                    self.stats.decode_tokens += slot["req"].decode_tokens
+                    ledger.finish(slot["req"].rid, t_end,
+                                  tokens_out=slot["req"].decode_tokens)
+            t = t_end
+
+        self.last_trace = {
+            "router": getattr(self.router, "name", type(self.router).__name__),
+            "ticks": ticks_run, "tick_s": tick_s,
+            "max_occupancy": max_occ, "capacity": cap,
+            "degraded_chip_ticks": degraded_ticks,
+            "unplaced": len(pending),
+            "unfinished": sum(len(r) for r in running),
+        }
+        return ledger
+
     def summary(self) -> dict[str, Any]:
         toks = max(self.stats.decode_tokens, 1)
         out = {
@@ -214,9 +450,14 @@ class ServeEngine:
             out["v_core_min"] = float(jnp.min(self.plane.v_core))
             out["v_io_min"] = float(jnp.min(self.plane.v_io))
             out["comp_level_min"] = int(jnp.min(self.plane.comp_level))
-        if self.admission_gate:
+        if self.admission_gate or self.router is not None:
             out["decode_sheds"] = self.stats.decode_sheds
             out["defer_time_s"] = self.stats.defer_time_s
+            # per-rail / per-reason split of the aggregate counters: which
+            # rail's envelope floor drove the shed (all-rails admission)
+            # and what reason each deferral carried
+            out["decode_sheds_by_rail"] = dict(self.stats.sheds_by_rail)
+            out["decode_sheds_by_reason"] = dict(self.stats.sheds_by_reason)
             if self.last_shed_reason is not None:
                 out["shed_reason"] = self.last_shed_reason
         if self._sor_state is not None:

@@ -1,0 +1,253 @@
+"""Headroom-aware fleet placement + per-request SLO accounting
+(docs/serve.md).
+
+The fourth consumer tier of the control API: observe -> decide ->
+arbitrate -> **place**. The control plane learns per-chip per-rail safe
+operating regions (`core/sor.py`); this module spends them — each chip's
+per-rail *headroom* (held voltage minus its confidence-blended learned
+floor) is the margin the chip has left to absorb runtime drift
+(load-coupled onset shifts, the consolidated-margins result), so work is
+placed where that margin is deepest:
+
+* memory-bound decode-heavy requests go to the deepest-VDD_HBM-headroom
+  chips, prefill-heavy ones weigh VDD_CORE;
+* chips pinned at an envelope floor (arbitration holds them at the learned
+  limit the policy keeps pushing against — `control_plane.pinned_rails`)
+  receive no new work and drain what they hold;
+* a `RoundRobinRouter` provides the headroom-blind baseline the
+  `benchmarks/serve_router.py` comparison (and its CI gate) is measured
+  against.
+
+Routers are host-side and numpy-only: placement runs between accounted
+ticks on concrete telemetry (the eager `last_request`/`last_envelope` the
+controllers record), never inside the jitted round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.power_plane import PowerPlaneState
+from repro.core.rails import TPU_V5E_RAIL_MAP, RailMap
+
+_RAIL_FIELDS = {"VDD_CORE": "v_core", "VDD_HBM": "v_hbm", "VDD_IO": "v_io"}
+
+
+def rail_headroom(plane: PowerPlaneState, envelopes: Any,
+                  rail_map: RailMap = TPU_V5E_RAIL_MAP
+                  ) -> dict[str, np.ndarray]:
+    """{rail: [n_chips] float} — held voltage minus the rail's
+    confidence-blended floor (`SafeEnvelope.floor(static v_min)`; the
+    platform static floor where no envelope is fitted). This is the margin
+    the chip has below its current operating point before arbitration pins
+    it: 0 means the chip is operating AT its learned limit."""
+    from repro.core.sor import envelope_for
+    n = plane.n_chips
+    out = {}
+    for name, field in _RAIL_FIELDS.items():
+        r = rail_map.by_name(name)
+        env = envelope_for(envelopes, name)
+        floor = (env.floor(r.v_min) if env is not None
+                 else jnp.float32(r.v_min))
+        held = jnp.asarray(getattr(plane, field), jnp.float32)
+        h = np.atleast_1d(np.asarray(jax.device_get(held - floor),
+                                     np.float64))
+        out[name] = np.broadcast_to(h, (n,)).copy()
+    return out
+
+
+@dataclasses.dataclass
+class HeadroomRouter:
+    """Scores each chip from the live learned envelopes and places a request
+    on the best-scoring eligible chip.
+
+    score_i = w_prefill * headroom[prefill_rail][i]
+            + w_decode  * headroom[decode_rail][i]
+            - occupancy_weight_v * occupancy[i] / capacity
+
+    where (w_prefill, w_decode) is the request's token mix — decode-heavy
+    requests chase VDD_HBM headroom (decode is HBM-bound), prefill-heavy
+    ones VDD_CORE — and the occupancy term trades volts of headroom against
+    queueing (one full batch slot costs `occupancy_weight_v / capacity`
+    volts of score). Pinned chips are excluded while `drain_pinned` (they
+    finish what they hold and shed first); ties break on the lowest chip
+    index (np.argmax), so placement is deterministic given the inputs."""
+    capacity: int
+    decode_rail: str = "VDD_HBM"
+    prefill_rail: str = "VDD_CORE"
+    occupancy_weight_v: float = 0.01
+    drain_pinned: bool = True
+    name: str = "headroom"
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+
+    def place(self, request, occupancy, headroom: dict[str, np.ndarray],
+              pinned=None) -> "int | None":
+        occ = np.asarray(occupancy, np.float64)
+        n = occ.shape[0]
+        eligible = occ < self.capacity
+        if self.drain_pinned and pinned is not None:
+            eligible &= ~np.asarray(pinned, bool)
+        if not eligible.any():
+            return None
+        w_decode = request.decode_fraction
+        zeros = np.zeros(n, np.float64)
+        h_d = np.asarray(headroom.get(self.decode_rail, zeros), np.float64)
+        h_p = np.asarray(headroom.get(self.prefill_rail, zeros), np.float64)
+        score = ((1.0 - w_decode) * h_p + w_decode * h_d
+                 - self.occupancy_weight_v * occ / self.capacity)
+        score = np.where(eligible, score, -np.inf)
+        return int(np.argmax(score))
+
+
+@dataclasses.dataclass
+class RoundRobinRouter:
+    """Headroom-blind baseline: next chip with a free batch slot, cursor
+    order, ignoring envelopes and pinning entirely — what serving looked
+    like before the fleet had per-chip margins to read."""
+    capacity: int
+    name: str = "roundrobin"
+    _cursor: int = dataclasses.field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+
+    def place(self, request, occupancy, headroom=None,
+              pinned=None) -> "int | None":
+        n = len(occupancy)
+        for k in range(n):
+            i = (self._cursor + k) % n
+            if occupancy[i] < self.capacity:
+                self._cursor = (i + 1) % n
+                return i
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Per-request SLO accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _RequestRecord:
+    rid: int
+    t_arrival_s: float
+    prefill_tokens: int
+    decode_tokens: int
+    t_placed_s: "float | None" = None
+    chip: "int | None" = None
+    t_done_s: "float | None" = None
+    tokens_out: int = 0
+    energy_j: float = 0.0        # modeled busy-energy share while resident
+    defers: int = 0
+    defer_time_s: float = 0.0
+
+
+class RequestLedger:
+    """Per-request SLO accounting for a routed serve run: admission,
+    placement, deferral (by reason code), completion, and modeled energy —
+    plus the latency percentiles the SLO story is told in. Timestamps are
+    trace-time seconds supplied by the caller (the engine's simulated
+    clock), so ledgers from the same seeded trace are reproducible."""
+
+    def __init__(self):
+        self._recs: dict[int, _RequestRecord] = {}
+        self._order: list[int] = []
+        self.fleet_energy_j = 0.0           # all chips, busy + idle
+        self.defers_by_reason: dict[str, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._recs)
+
+    def __getitem__(self, rid: int) -> _RequestRecord:
+        return self._recs[rid]
+
+    def records(self) -> list[_RequestRecord]:
+        return [self._recs[r] for r in self._order]
+
+    # -- lifecycle ------------------------------------------------------------
+    def admit(self, request, t_s: "float | None" = None) -> None:
+        if request.rid in self._recs:
+            raise ValueError(f"request {request.rid} already admitted")
+        self._recs[request.rid] = _RequestRecord(
+            rid=request.rid,
+            t_arrival_s=float(request.t_arrival_s if t_s is None else t_s),
+            prefill_tokens=request.prefill_tokens,
+            decode_tokens=request.decode_tokens)
+        self._order.append(request.rid)
+
+    def place(self, rid: int, t_s: float, chip: int) -> None:
+        rec = self._recs[rid]
+        if rec.t_placed_s is not None:
+            raise ValueError(f"request {rid} already placed")
+        rec.t_placed_s = float(t_s)
+        rec.chip = int(chip)
+
+    def defer(self, rid: int, reason: str, dt_s: float = 0.0) -> None:
+        rec = self._recs[rid]
+        rec.defers += 1
+        rec.defer_time_s += float(dt_s)
+        self.defers_by_reason[reason] = (
+            self.defers_by_reason.get(reason, 0) + 1)
+
+    def charge(self, rid: int, joules: float) -> None:
+        self._recs[rid].energy_j += float(joules)
+
+    def tick_energy(self, joules: float) -> None:
+        self.fleet_energy_j += float(joules)
+
+    def finish(self, rid: int, t_s: float, tokens_out: int) -> None:
+        rec = self._recs[rid]
+        if rec.t_placed_s is None:
+            raise ValueError(f"request {rid} finished before placement")
+        rec.t_done_s = float(t_s)
+        rec.tokens_out = int(tokens_out)
+
+    # -- statistics -----------------------------------------------------------
+    @staticmethod
+    def percentile(values, q: float) -> float:
+        """Linear-interpolated percentile at rank q/100 * (n-1) — the exact
+        arithmetic pinned by tests (numpy's default 'linear' method,
+        spelled out so the SLO numbers are specified, not inherited)."""
+        vals = sorted(float(v) for v in values)
+        if not vals:
+            return float("nan")
+        if not 0.0 <= q <= 100.0:
+            raise ValueError(f"q must be in [0, 100], got {q}")
+        rank = (len(vals) - 1) * q / 100.0
+        lo = int(np.floor(rank))
+        hi = int(np.ceil(rank))
+        frac = rank - lo
+        return vals[lo] * (1.0 - frac) + vals[hi] * frac
+
+    def summary(self) -> dict[str, Any]:
+        recs = self.records()
+        done = [r for r in recs if r.t_done_s is not None]
+        latency = [r.t_done_s - r.t_arrival_s for r in done]
+        queue = [r.t_placed_s - r.t_arrival_s for r in done]
+        tokens = sum(r.tokens_out for r in done)
+        out = {
+            "n_requests": len(recs),
+            "completed": len(done),
+            "placed": sum(1 for r in recs if r.t_placed_s is not None),
+            "defers": sum(r.defers for r in recs),
+            "defers_by_reason": dict(self.defers_by_reason),
+            "tokens_out": tokens,
+            "fleet_energy_j": self.fleet_energy_j,
+            "tokens_per_joule": tokens / max(self.fleet_energy_j, 1e-12),
+            "request_energy_j": sum(r.energy_j for r in recs),
+        }
+        for label, vals in (("latency_s", latency), ("queue_s", queue)):
+            out[f"p50_{label}"] = self.percentile(vals, 50.0)
+            out[f"p95_{label}"] = self.percentile(vals, 95.0)
+            out[f"p99_{label}"] = self.percentile(vals, 99.0)
+            out[f"mean_{label}"] = (float(np.mean(vals)) if vals
+                                    else float("nan"))
+        return out

@@ -1,0 +1,280 @@
+"""Headroom-aware fleet routing tests (serve/router.py, serve/traffic.py,
+ServeEngine.serve_trace — docs/serve.md):
+
+  * router invariants — no chip is placed past its batch capacity, pinned
+    chips drain (receive no new work) before shedding, placement is
+    deterministic under a fixed trace seed;
+  * degenerate fleet — a single-chip routed trace walks the exact same
+    plane trajectory as the plain engine's accounting loop (the router
+    adds placement, never control semantics);
+  * ledger — the spelled-out linear-interpolation percentile arithmetic,
+    lifecycle guards (double admit / finish-before-place raise);
+  * all-rails admission — `pinned_rails` flags a VDD_HBM floor during
+    decode exactly like the historical VDD_IO check, and the serve summary
+    splits shed counters per rail and per reason code.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.control_plane import (pinned_chip_mask, pinned_rails,
+                                      worst_chip_pinned)
+from repro.core.hwspec import FleetSpec
+from repro.core.policy import MultiRailClosedLoop, Policy, RailRequest
+from repro.core.power_plane import PowerPlaneState, StepProfile
+from repro.core.rails import TPU_V5E_RAIL_MAP
+from repro.serve.router import (HeadroomRouter, RequestLedger,
+                                RoundRobinRouter, rail_headroom)
+from repro.serve.traffic import Request, bursty_trace
+
+PROFILE = StepProfile(flops_per_chip=2e12, hbm_bytes_per_chip=8e9,
+                      ici_bytes_per_chip=4e9, grad_bytes_per_chip=3e9)
+STATIC_HBM_FLOOR = TPU_V5E_RAIL_MAP.by_name("VDD_HBM").v_min
+STATIC_IO_FLOOR = TPU_V5E_RAIL_MAP.by_name("VDD_IO").v_min
+
+
+def _req(rid=0, prefill=8, decode=32, t=0.0):
+    return Request(rid=rid, t_arrival_s=t, prefill_tokens=prefill,
+                   decode_tokens=decode)
+
+
+def _tiny_engine(**kw):
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve.engine import ServeEngine
+    cfg = get_config("minicpm_2b", tiny=True)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, max_len=24, batch_size=2,
+                       prefill_profile=PROFILE, decode_profile=PROFILE, **kw)
+
+
+class _PinHbmPolicy(Policy):
+    """Requests an impossible VDD_HBM so arbitration pins every chip at the
+    HBM floor — the decode-rail shed condition, deterministically."""
+    name = "pin-hbm-floor"
+
+    def decide(self, state, frame):
+        return RailRequest(v_hbm=jnp.zeros_like(jnp.asarray(state.v_hbm,
+                                                            jnp.float32)),
+                           reason="pinned-at-floor")
+
+
+# -- traffic ------------------------------------------------------------------
+
+def test_bursty_trace_deterministic_and_seed_sensitive():
+    a = bursty_trace(32, seed=11)
+    b = bursty_trace(32, seed=11)
+    c = bursty_trace(32, seed=12)
+    assert [dataclasses.astuple(r) for r in a] == \
+           [dataclasses.astuple(r) for r in b]
+    assert [dataclasses.astuple(r) for r in a] != \
+           [dataclasses.astuple(r) for r in c]
+    assert len(a) == 32
+    assert all(r.prefill_tokens >= 1 and r.decode_tokens >= 1 for r in a)
+    ts = [r.t_arrival_s for r in a]
+    assert ts == sorted(ts)
+
+
+# -- ledger percentile arithmetic --------------------------------------------
+
+def test_percentile_linear_interpolation():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    # rank = (n-1) * q/100: p50 -> 1.5 -> 2.5; p25 -> 0.75 -> 1.75
+    assert RequestLedger.percentile(vals, 50.0) == pytest.approx(2.5)
+    assert RequestLedger.percentile(vals, 25.0) == pytest.approx(1.75)
+    assert RequestLedger.percentile(vals, 0.0) == pytest.approx(1.0)
+    assert RequestLedger.percentile(vals, 100.0) == pytest.approx(4.0)
+    # matches numpy's default (linear) method on an awkward q
+    ref = np.percentile(np.asarray(vals), 99.0)
+    assert RequestLedger.percentile(vals, 99.0) == pytest.approx(float(ref))
+    assert np.isnan(RequestLedger.percentile([], 50.0))
+    with pytest.raises(ValueError):
+        RequestLedger.percentile(vals, 101.0)
+
+
+def test_ledger_lifecycle_guards():
+    led = RequestLedger()
+    r = _req(rid=7)
+    led.admit(r)
+    with pytest.raises(ValueError, match="already admitted"):
+        led.admit(r)
+    with pytest.raises(ValueError, match="before placement"):
+        led.finish(7, 1.0, tokens_out=4)
+    led.place(7, 0.5, chip=2)
+    with pytest.raises(ValueError, match="already placed"):
+        led.place(7, 0.6, chip=1)
+    led.defer(7, "capacity", 0.1)
+    led.finish(7, 1.0, tokens_out=32)
+    s = led.summary()
+    assert s["completed"] == 1 and s["defers"] == 1
+    assert s["defers_by_reason"] == {"capacity": 1}
+    assert s["p50_latency_s"] == pytest.approx(1.0)   # t_done - t_arrival
+    assert s["p50_queue_s"] == pytest.approx(0.5)     # t_placed - t_arrival
+
+
+# -- router unit invariants ---------------------------------------------------
+
+def test_headroom_router_respects_capacity_and_pinning():
+    r = HeadroomRouter(capacity=2)
+    # the pinned chip has the DEEPEST headroom — it must still be skipped
+    headroom = {"VDD_HBM": np.array([0.02, 0.50]),
+                "VDD_CORE": np.array([0.02, 0.50])}
+    assert r.place(_req(), [0, 0], headroom,
+                   pinned=np.array([False, True])) == 0
+    # full chips are ineligible even with headroom to spare
+    assert r.place(_req(), [2, 0], headroom,
+                   pinned=np.array([False, False])) == 1
+    # nowhere to go: everyone full or pinned
+    assert r.place(_req(), [2, 0], headroom,
+                   pinned=np.array([False, True])) is None
+    assert r.place(_req(), [2, 2], headroom, pinned=None) is None
+
+
+def test_headroom_router_weighs_token_mix():
+    r = HeadroomRouter(capacity=4, occupancy_weight_v=0.0)
+    headroom = {"VDD_HBM": np.array([0.30, 0.01]),
+                "VDD_CORE": np.array([0.01, 0.30])}
+    decode_heavy = _req(prefill=1, decode=99)
+    prefill_heavy = _req(prefill=99, decode=1)
+    assert r.place(decode_heavy, [0, 0], headroom) == 0   # chases VDD_HBM
+    assert r.place(prefill_heavy, [0, 0], headroom) == 1  # chases VDD_CORE
+
+
+def test_round_robin_router_cursor():
+    r = RoundRobinRouter(capacity=1)
+    assert r.place(_req(), [0, 0, 0]) == 0
+    assert r.place(_req(), [1, 0, 0]) == 1
+    assert r.place(_req(), [1, 1, 0]) == 2
+    assert r.place(_req(), [1, 1, 1]) is None
+    assert r.place(_req(), [0, 1, 1]) == 0   # wraps to the freed slot
+
+
+def test_rail_headroom_static_floor_when_unfitted():
+    plane = PowerPlaneState.fleet(3)
+    h = rail_headroom(plane, None)
+    for name in ("VDD_CORE", "VDD_HBM", "VDD_IO"):
+        r = TPU_V5E_RAIL_MAP.by_name(name)
+        assert h[name].shape == (3,)
+        np.testing.assert_allclose(h[name], r.nominal_v - r.v_min,
+                                   atol=1e-6)
+
+
+# -- all-rails pinning (satellite 1) ------------------------------------------
+
+def test_pinned_rails_flags_hbm_floor():
+    """The historical helper gated on VDD_IO only; a VDD_HBM floor during
+    decode must now be flagged too, with the per-rail breakdown."""
+    plane = PowerPlaneState.fleet(2)
+    floor = jnp.full((2,), np.float32(STATIC_HBM_FLOOR))
+    pinned_plane = dataclasses.replace(plane, v_hbm=floor)
+    req = RailRequest(v_hbm=jnp.asarray([0.0, 1.1], jnp.float32))
+    assert worst_chip_pinned(pinned_plane, req)
+    masks = pinned_rails(pinned_plane, req)
+    assert list(masks) == ["VDD_HBM"]          # only the requested rail
+    np.testing.assert_array_equal(masks["VDD_HBM"], [True, False])
+    np.testing.assert_array_equal(pinned_chip_mask(pinned_plane, req),
+                                  [True, False])
+    # holding above the floor is not pinned, even when the request wants it
+    assert not worst_chip_pinned(plane, req)
+    # multi-rail request: each rail reported independently
+    both = RailRequest(v_hbm=jnp.zeros((2,), jnp.float32),
+                       v_io=jnp.zeros((2,), jnp.float32))
+    io_floor = jnp.full((2,), np.float32(STATIC_IO_FLOOR))
+    pp = dataclasses.replace(pinned_plane, v_io=io_floor)
+    masks = pinned_rails(pp, both)
+    assert set(masks) == {"VDD_HBM", "VDD_IO"}
+    assert masks["VDD_HBM"].any() and masks["VDD_IO"].all()
+
+
+def test_generate_shed_breakdown_per_rail_and_reason():
+    fs = FleetSpec.sample(2, seed=5)
+    eng = _tiny_engine(policy=_PinHbmPolicy(), fleet=fs,
+                       admission_gate=True)
+    eng.generate(np.zeros((2, 4), np.int32), max_new_tokens=4)
+    s = eng.summary()
+    assert s["decode_sheds"] > 0
+    assert s["decode_sheds_by_rail"].get("VDD_HBM", 0) > 0
+    assert "VDD_IO" not in s["decode_sheds_by_rail"]
+    assert sum(s["decode_sheds_by_reason"].values()) == s["decode_sheds"]
+    assert "pinned-at-floor" in s["shed_reason"]
+
+
+# -- routed trace: engine-level invariants ------------------------------------
+
+def _routed_engine(n_chips=3, seed=9, router=None, **kw):
+    fs = FleetSpec.sample(n_chips, seed=seed)
+    router = router or HeadroomRouter(capacity=2)
+    return _tiny_engine(policy=MultiRailClosedLoop(), fleet=fs,
+                        router=router, **kw)
+
+
+def test_router_requires_fleet():
+    with pytest.raises(ValueError, match="fleet"):
+        _tiny_engine(policy=MultiRailClosedLoop(),
+                     router=HeadroomRouter(capacity=2))
+
+
+def test_serve_trace_capacity_invariant_and_completion():
+    eng = _routed_engine()
+    led = eng.serve_trace(bursty_trace(10, seed=4), max_ticks=4000)
+    s = led.summary()
+    assert s["completed"] == s["n_requests"] == 10
+    assert eng.last_trace["max_occupancy"] <= eng.router.capacity
+    assert eng.last_trace["unplaced"] == 0
+    assert eng.last_trace["unfinished"] == 0
+    assert s["fleet_energy_j"] > 0 and s["tokens_per_joule"] > 0
+    # engine stats and ledger agree on the fleet energy
+    assert eng.stats.fleet_energy_j == pytest.approx(s["fleet_energy_j"])
+
+
+def test_serve_trace_placement_deterministic():
+    def run():
+        eng = _routed_engine()
+        led = eng.serve_trace(bursty_trace(10, seed=4), max_ticks=4000)
+        return [(r.rid, r.chip, r.t_placed_s, r.t_done_s, r.defers)
+                for r in led.records()]
+    assert run() == run()
+
+
+def test_serve_trace_pinned_chips_drain_first():
+    """With every chip pinned at the HBM floor, the headroom router places
+    nothing (drain mode): deferrals carry the pinned-drain reason and the
+    per-rail shed split names VDD_HBM. Round-robin, headroom-blind, keeps
+    placing on pinned chips."""
+    fs = FleetSpec.sample(3, seed=9)
+    eng = _tiny_engine(policy=_PinHbmPolicy(), fleet=fs,
+                       router=HeadroomRouter(capacity=2))
+    led = eng.serve_trace(bursty_trace(4, seed=2), max_ticks=40)
+    assert led.summary()["placed"] == 0
+    assert led.defers_by_reason.get("pinned-drain", 0) > 0
+    assert eng.stats.sheds_by_rail.get("VDD_HBM", 0) > 0
+
+    eng_rr = _tiny_engine(policy=_PinHbmPolicy(), fleet=fs,
+                          router=RoundRobinRouter(capacity=2))
+    led_rr = eng_rr.serve_trace(bursty_trace(4, seed=2), max_ticks=40)
+    assert led_rr.summary()["placed"] > 0
+
+
+def test_single_chip_router_degenerates_to_plain_engine():
+    """On a one-chip fleet there is nothing to route: the traced engine's
+    plane must walk the exact trajectory the plain accounting loop walks
+    (same accounting, same control rounds; the router only adds placement)."""
+    fs = FleetSpec.sample(1, seed=13)
+    routed = _tiny_engine(policy=MultiRailClosedLoop(), fleet=fs,
+                          router=HeadroomRouter(capacity=2))
+    routed.serve_trace(bursty_trace(6, seed=8), max_ticks=400)
+    ticks = routed.last_trace["ticks"]
+    assert ticks > 0
+
+    plain = _tiny_engine(policy=MultiRailClosedLoop(), fleet=fs)
+    plain._account(plain.decode_profile, n=ticks)
+    for field in ("v_core", "v_hbm", "v_io"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(routed.plane, field)),
+            np.asarray(getattr(plain.plane, field)),
+            rtol=1e-6, err_msg=field)
