@@ -16,6 +16,11 @@ are machine-dependent — CI runners and dev boxes differ by integer factors
   records (``serve_router``) gate the roundrobin/headroom tokens-per-joule
   ratio and the headroom/roundrobin p99 latency ratio — growth of either
   means the headroom router's serving win shrank.
+* ``ticks_per_sec{fused,loop}`` / ``per_chip_us_ratio_vs_base`` records
+  (``serve_scale``) gate the loop/fused tick-rate ratio (growth = the
+  fused serve tick's speedup shrank) and the fused per-chip µs/tick
+  against the same run's smallest-fleet anchor (growth = tick cost
+  stopped amortizing with fleet size).
 
 Matching is by record ``name`` (and the files' ``bench`` tag): a record or
 metric present in the BASELINE but missing from the new run fails with a
@@ -82,6 +87,15 @@ def gate_metrics(rec: dict) -> dict[str, float]:
         # growth of headroom/roundrobin p99 = headroom got slower at tail
         out["headroom/roundrobin p99 latency ratio"] = (
             p99["headroom"] / max(p99["roundrobin"], 1e-9))
+    tps = rec.get("ticks_per_sec")
+    if isinstance(tps, dict) and "fused" in tps and "loop" in tps:
+        # growth of loop/fused = the fused serve tick's speedup shrank
+        out["loop/fused ticks-per-second ratio"] = (
+            tps["loop"] / max(tps["fused"], 1e-9))
+    if "per_chip_us_ratio_vs_base" in rec:
+        # growth = fused per-chip tick cost stopped amortizing with scale
+        out["fused per-chip us/tick ratio vs smallest-fleet base"] = (
+            float(rec["per_chip_us_ratio_vs_base"]))
     return out
 
 

@@ -45,6 +45,10 @@ MODULES = [
     # on the roundrobin/headroom tokens-per-joule and headroom/roundrobin
     # p99 ratios
     "benchmarks.serve_router",
+    # fused one-dispatch serve tick vs the per-tick host loop at fleet
+    # scale (docs/serve.md "serving at fleet scale"): gated on the
+    # loop/fused tick-rate ratio and the fused per-chip µs/tick scaling
+    "benchmarks.serve_scale",
     "benchmarks.roofline_table",        # deliverable (g)
 ]
 

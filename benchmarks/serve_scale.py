@@ -1,0 +1,160 @@
+"""Fleet-scale serving throughput: the fused one-dispatch serve tick vs
+the PR-8 per-tick host loop (docs/serve.md "serving at fleet scale").
+
+PR 8 proved headroom-aware placement wins; this bench measures whether the
+fleet can afford to RUN it at scale. The historical `serve_trace` loop
+pays ~8 blocking `device_get`s, per-chip Python loops and one eager
+control dispatch per tick, so its tick rate collapses as chips grow. The
+fused path compiles accounting -> observe overlay -> control round ->
+busy/idle energy rescale -> rate/over-bound flags into ONE jitted dispatch
+returning one packed host bundle, with slot bookkeeping vectorized over
+`[n_chips, capacity]` numpy arrays — the serving analogue of PR 6's fused
+control round.
+
+Both paths route the same committed `benchmarks/serve_router.py` world
+(same fleet seed, SOR-learning envelope-blind controller, load-coupled
+frontier observables, seeded bursty trace) at each fleet size; tests pin
+their ledgers equal, so this file measures pure tick machinery: ticks/sec,
+µs/tick and per-chip µs/tick, fused vs loop.
+
+The load weak-scales: requests AND arrival rate grow with the fleet
+(`REQ_PER_CHIP` requests/chip, rates x n/CHIPS[0]), holding per-chip
+occupancy constant — a 1024-chip fleet serves 1024 chips' worth of
+traffic, not 64's. That is what exposes the loop path's O(resident slots)
+per-tick Python cost next to the fused path's vectorized bookkeeping; an
+absolute-request config (a starved big fleet) measures only the shared
+jitted control round and understates the gap.
+
+The committed record (reports/BENCH_serve_scale.json) is ratio-gated by
+check_bench_regression.py:
+
+* ``ticks_per_sec{fused,loop}`` gates the loop/fused ratio — growth means
+  the fused speedup shrank (acceptance: >= 5x at 1024 chips, >= 2x at 64);
+* ``per_chip_us_ratio_vs_base`` gates the fused per-chip µs/tick at each
+  fleet size against the same run's smallest-fleet anchor — growth means
+  per-chip tick cost stopped amortizing with scale.
+
+Env knobs (SOR bench conventions): REPRO_BENCH_SERVE_SCALE_CHIPS
+(comma-separated fleet sizes, default "64,256,1024"),
+REPRO_BENCH_SERVE_SCALE_REQ_PER_CHIP (weak-scaled load, default 1.5),
+REPRO_BENCH_SERVE_SCALE_TICKS. The CI smoke runs a reduced config against
+its own committed baseline
+(reports/BENCH_smoke_serve_scale_baseline.json), full size is committed
+from a dev box.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from benchmarks import serve_router as sr
+from benchmarks.common import row
+from repro.core.control_plane import InGraphRailController
+from repro.core.hwspec import FleetSpec
+from repro.serve.router import HeadroomRouter
+from repro.serve.traffic import bursty_trace
+
+CHIPS = [int(x) for x in os.environ.get(
+    "REPRO_BENCH_SERVE_SCALE_CHIPS", "64,256,1024").split(",")]
+REQ_PER_CHIP = float(os.environ.get(
+    "REPRO_BENCH_SERVE_SCALE_REQ_PER_CHIP", "1.5"))
+MAX_TICKS = int(os.environ.get("REPRO_BENCH_SERVE_SCALE_TICKS", "400"))
+CAPACITY = 4
+
+
+def _trace(n_chips: int):
+    """Weak-scaled seeded traffic: `REQ_PER_CHIP * n_chips` requests with
+    arrival rates scaled by n_chips/CHIPS[0], so the trace span (and each
+    chip's offered load) stays constant across fleet sizes."""
+    scale = n_chips / CHIPS[0]
+    return bursty_trace(int(REQ_PER_CHIP * n_chips), seed=sr.SEED,
+                        quiet_rate_hz=8.0 * scale,
+                        burst_rate_hz=40.0 * scale, decode_mean=48.0)
+
+
+def _engine(n_chips: int):
+    """The serve_router bench world at `n_chips` (same fleet seed, same
+    SOR-learning envelope-blind controller, same load-coupled frontier
+    observables) — a fresh engine per timed path so neither run rides the
+    other's learned state."""
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve.engine import ServeEngine
+    cfg = get_config("minicpm_2b", tiny=True)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    fs = FleetSpec.sample(n_chips, seed=sr.SEED)
+    ctrl = InGraphRailController(
+        sr._EnvelopeBlindWalk(floors=dict(sr.POLICY_FLOORS), backoff=1.01,
+                              name="envelope-blind-walk"),
+        sor=sr.SOR_CFG)
+    eng = ServeEngine(cfg, params, max_len=24, batch_size=2,
+                      prefill_profile=sr.PROFILE, decode_profile=sr.PROFILE,
+                      fleet=fs, controller=ctrl,
+                      router=HeadroomRouter(capacity=CAPACITY))
+    return eng, sr._make_observe(fs, n_chips)
+
+
+def _timed_trace(n_chips: int, fused: bool):
+    """(wall_us, ticks, summary) of one full traced run on a fresh engine.
+    A 3-tick prime run first pays the jit compiles (the fused serve tick,
+    or the loop path's control_step_sor round), so the timed run measures
+    steady-state tick machinery."""
+    eng, observe = _engine(n_chips)
+    trace = _trace(n_chips)
+    kw = dict(observe=observe, error_bound=sr.ERROR_BOUND, fused=fused)
+    eng.serve_trace(trace, max_ticks=3, **kw)
+    t0 = time.perf_counter()
+    ledger = eng.serve_trace(trace, max_ticks=MAX_TICKS, **kw)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return wall_us, eng.last_trace["ticks"], ledger.summary()
+
+
+def run():
+    rows = []
+    base_pcus = None
+    for n in CHIPS:
+        n_requests = int(REQ_PER_CHIP * n)
+        wall, ticks, done = {}, {}, {}
+        for path in ("fused", "loop"):
+            wall[path], ticks[path], s = _timed_trace(n, path == "fused")
+            done[path] = s["completed"]
+        tps = {p: ticks[p] / max(wall[p] * 1e-6, 1e-12) for p in wall}
+        us_tick = {p: wall[p] / max(ticks[p], 1) for p in wall}
+        pcus = {p: us_tick[p] / n for p in wall}
+        if base_pcus is None:
+            base_pcus = pcus["fused"]
+        speedup = tps["fused"] / max(tps["loop"], 1e-12)
+        record = {
+            "n_chips": n, "n_requests": n_requests, "steps": MAX_TICKS,
+            "capacity": CAPACITY, "seed": sr.SEED,
+            "base_chips": CHIPS[0],
+            "ticks": dict(ticks),
+            "completed": dict(done),
+            "wall_time_us": {p: round(wall[p], 1) for p in wall},
+            "ticks_per_sec": {p: round(tps[p], 2) for p in tps},
+            "us_per_tick": {p: round(us_tick[p], 2) for p in us_tick},
+            "us_per_tick_per_chip": {p: round(pcus[p], 4) for p in pcus},
+            "fused_speedup": round(speedup, 3),
+            "per_chip_us_ratio_vs_base": round(
+                pcus["fused"] / max(base_pcus, 1e-12), 4),
+        }
+        rows.append({**row(
+            f"serve_scale.{n}chips.fused_vs_loop",
+            wall["fused"],
+            f"x{speedup:.1f} fused "
+            f"({tps['fused']:.0f}t/s vs {tps['loop']:.0f}t/s loop) "
+            f"us/tick/chip={pcus['fused']:.2f}f/{pcus['loop']:.2f}l "
+            f"ticks={ticks['fused']}f/{ticks['loop']}l "
+            f"completed={done['fused']}f/{done['loop']}l/{n_requests}req"),
+            "bench": "serve_scale",
+            "record": record})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -103,6 +103,49 @@ def arbitrate(plane: PowerPlaneState, request: RailRequest,
     return apply_request(plane, clamped)
 
 
+def rail_floors(plane: PowerPlaneState, envelope: Any = None,
+                rail_map: RailMap = TPU_V5E_RAIL_MAP) -> jnp.ndarray:
+    """`[n_rails, n_chips]` float32 of per-rail arbitration floors in
+    `RAIL_LANES` order: the confidence-blended learned floor
+    (`SafeEnvelope.floor(static v_min)`) where a rail carries a fitted
+    envelope, the platform static `Rail.v_min` where it does not. Pure
+    jnp — the fused serve tick packs these rows (and the headroom rows
+    derived from them) into its single host bundle, so routing reads
+    floors with zero extra device syncs."""
+    from repro.core.sor import envelope_for
+    n = plane.n_chips
+    rows = []
+    for name in RAIL_LANES:
+        r = rail_map.by_name(name)
+        env = envelope_for(envelope, name)
+        floor = (env.floor(r.v_min) if env is not None
+                 else jnp.float32(r.v_min))
+        rows.append(jnp.broadcast_to(
+            jnp.atleast_1d(jnp.asarray(floor, jnp.float32)), (n,)))
+    return jnp.stack(rows)
+
+
+def _pinned_lane(plane: PowerPlaneState, request: RailRequest | None,
+                 name: str, envelope: Any, rail_map: RailMap,
+                 atol: float):
+    """Pure-jnp pinned mask for one rail, or None when the request left it
+    alone — the shared arithmetic behind the host (`pinned_rails`) and
+    in-graph (`pinned_lane_masks`) spellings."""
+    if request is None:
+        return None
+    want = getattr(request, _LANE_FIELDS[name])
+    if want is None:
+        return None
+    from repro.core.sor import envelope_for
+    env = envelope_for(envelope, name)   # dict or single spelling
+    r = rail_map.by_name(name)
+    floor = (env.floor(r.v_min) if env is not None
+             else jnp.float32(r.v_min))
+    wantv = jnp.asarray(want, jnp.float32)
+    held = jnp.asarray(getattr(plane, _LANE_FIELDS[name]), jnp.float32)
+    return (wantv <= floor + atol) & (held <= floor + atol)
+
+
 def pinned_rails(plane: PowerPlaneState, request: RailRequest | None,
                  rail_map: RailMap = TPU_V5E_RAIL_MAP,
                  envelope: Any = None, atol: float = 1e-4
@@ -116,26 +159,45 @@ def pinned_rails(plane: PowerPlaneState, request: RailRequest | None,
     {rail: SafeEnvelope} dict or the historical bare VDD_IO envelope);
     rails without one pin against the platform static floor. Rails the
     request left alone (None) are absent from the result — no request, no
-    pinning claim."""
+    pinning claim. All requested rails come back in ONE stacked device
+    transfer (the historical spelling paid one blocking `device_get` per
+    rail)."""
     out: dict[str, np.ndarray] = {}
     if request is None:
         return out
-    from repro.core.sor import envelope_for
     n = plane.n_chips
-    for name, field in _LANE_FIELDS.items():
-        want = getattr(request, field)
-        if want is None:
+    names, lanes = [], []
+    for name in _LANE_FIELDS:
+        pinned = _pinned_lane(plane, request, name, envelope, rail_map,
+                              atol)
+        if pinned is None:
             continue
-        env = envelope_for(envelope, name)   # dict or single spelling
-        r = rail_map.by_name(name)
-        floor = (env.floor(r.v_min) if env is not None
-                 else jnp.float32(r.v_min))
-        wantv = jnp.asarray(want, jnp.float32)
-        held = jnp.asarray(getattr(plane, field), jnp.float32)
-        pinned = (wantv <= floor + atol) & (held <= floor + atol)
-        mask = np.atleast_1d(np.asarray(jax.device_get(pinned), bool))
-        out[name] = np.broadcast_to(mask, (n,)).copy()
-    return out
+        names.append(name)
+        lanes.append(jnp.broadcast_to(jnp.atleast_1d(pinned), (n,)))
+    if not names:
+        return out
+    masks = np.asarray(jax.device_get(jnp.stack(lanes)), bool)
+    return {name: masks[i].copy() for i, name in enumerate(names)}
+
+
+def pinned_lane_masks(plane: PowerPlaneState, request: RailRequest | None,
+                      rail_map: RailMap = TPU_V5E_RAIL_MAP,
+                      envelope: Any = None, atol: float = 1e-4
+                      ) -> jnp.ndarray:
+    """`[n_rails, n_chips]` bool in `RAIL_LANES` order, pure jnp: the
+    `pinned_rails` masks with all-False rows for rails the request left
+    alone (an absent rail makes no pinning claim, matching the host dict
+    spelling where such rails are simply missing). The fused serve tick
+    packs these rows into its single host bundle; `.any(axis=0)` is the
+    in-graph `pinned_chip_mask`."""
+    n = plane.n_chips
+    rows = []
+    for name in RAIL_LANES:
+        pinned = _pinned_lane(plane, request, name, envelope, rail_map,
+                              atol)
+        rows.append(jnp.zeros((n,), bool) if pinned is None
+                    else jnp.broadcast_to(jnp.atleast_1d(pinned), (n,)))
+    return jnp.stack(rows)
 
 
 def pinned_chip_mask(plane: PowerPlaneState, request: RailRequest | None,

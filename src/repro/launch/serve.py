@@ -42,6 +42,16 @@ def main():
     ap.add_argument("--trace-requests", type=int, default=48,
                     help="requests in the bursty trace (--router only)")
     ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--tick-path", choices=("auto", "fused", "loop"),
+                    default="auto",
+                    help="serve tick device path (--router only): 'fused' "
+                         "forces the one-dispatch jitted tick, 'loop' the "
+                         "historical per-tick host loop, 'auto' picks fused "
+                         "for in-graph controllers (docs/serve.md)")
+    ap.add_argument("--fast-forward", action="store_true",
+                    help="skip idle tick gaps (empty queue, no resident "
+                         "work) by jumping simulated time to the next "
+                         "arrival — fused tick path only")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny or True)
@@ -94,8 +104,11 @@ def main():
         # fleet reports unplaced work instead of spinning 20k ticks
         tick_s = 0.02
         span = trace.requests[-1].t_arrival_s if trace.requests else 0.0
+        fused = {"auto": None, "fused": True, "loop": False}[args.tick_path]
         ledger = engine.serve_trace(trace, tick_s=tick_s,
-                                    max_ticks=int(span / tick_s) + 400)
+                                    max_ticks=int(span / tick_s) + 400,
+                                    fused=fused,
+                                    fast_forward=args.fast_forward)
         print(f"{cfg.name} ({n/1e6:.1f}M): routed {len(trace)} requests "
               f"over {engine.n_chips} chips ({args.router})")
         print("trace:", engine.last_trace)

@@ -27,17 +27,25 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import sor as sor_mod
-from repro.core.control_plane import (InGraphRailController, as_controller,
-                                      pinned_chip_mask, pinned_rails,
-                                      with_sor)
+from repro.core.control_plane import (RAIL_LANES, InGraphRailController,
+                                      _concrete_or_none, _run_policy,
+                                      as_controller, pinned_lane_masks,
+                                      pinned_rails, rail_floors,
+                                      sharded_control_round, with_sor)
 from repro.core.hwspec import FleetSpec
 from repro.core.policy import WorstChipGate
 from repro.core.power_plane import (PowerPlaneState, StepProfile,
                                     account_and_observe,
                                     account_fleet_and_observe,
                                     chip_power_w_jnp, step_time_s)
+from repro.core.rails import TPU_V5E_RAIL_MAP
 from repro.core.telemetry import scalar_view
 from repro.models import registry
+
+# per-rail failure observables the serve loop reads back each tick (the
+# over-bound goodput-degrade signal) — extras keys overlaid by the caller's
+# observe() hook plus the typed grad_error field
+_OBS_KEYS = ("grad_error", "straggle_rate", "hbm_error_rate")
 
 
 @dataclasses.dataclass
@@ -65,7 +73,8 @@ class ServeEngine:
                  fleet: FleetSpec | None = None,
                  sor: "sor_mod.SorConfig | None" = None,
                  admission_gate: bool = False,
-                 router=None):
+                 router=None, mesh=None,
+                 shard_control: "bool | None" = None):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg)
@@ -117,6 +126,39 @@ class ServeEngine:
         self.prefill_profile = prefill_profile or StepProfile(1e9, 1e9, 0.0)
         self.decode_profile = decode_profile or StepProfile(1e8, 1e9, 0.0)
         self.stats = ServeStats()
+        # fleet-scale serving: `mesh=` threads a 1-D "chips" device mesh
+        # into the fused serve tick so the in-tick learned control round
+        # runs shard-parallel (control_plane.sharded_control_round under
+        # the router). `shard_control` mirrors FleetStepConfig: None
+        # auto-enables when the mesh spans more than one device; True
+        # forces the shard_map path even on a 1-device mesh (the
+        # bit-equality pin); False leaves a supplied mesh unused.
+        self.mesh = mesh
+        if shard_control is None:
+            shard_control = mesh is not None and mesh.devices.size > 1
+        if shard_control:
+            if mesh is None:
+                raise ValueError("shard_control=True needs a mesh")
+            if fleet is None:
+                raise ValueError("mesh= shards the [n_chips] serve plane; "
+                                 "pass fleet=FleetSpec")
+            if not (isinstance(self.controller, InGraphRailController)
+                    and self.controller.sor is not None):
+                raise ValueError(
+                    "mesh= shards the in-tick learned control round; build "
+                    "the engine with an in-graph controller carrying "
+                    "sor=SorConfig(...) (cross-chip policies are rejected "
+                    "— their fleet reduction would only see one shard)")
+            if self.n_chips % mesh.devices.size:
+                raise ValueError(
+                    f"n_chips={self.n_chips} is not divisible by the mesh "
+                    f"size {mesh.devices.size}")
+            self._sharded_round = sharded_control_round(self.controller,
+                                                        mesh)
+        else:
+            self._sharded_round = None
+        self.shard_control = bool(shard_control)
+        self._tick_cache: dict = {}   # (observe id, tick_s, bound) -> jit
 
         self._decode = jax.jit(
             lambda params, cache, batch: self.api.decode_fn(params, cache, batch))
@@ -235,7 +277,9 @@ class ServeEngine:
     def serve_trace(self, trace, *, max_ticks: int = 20_000,
                     observe=None, tick_s: "float | None" = None,
                     error_bound: float = 5e-3, degrade: float = 0.5,
-                    prefill_speedup: float = 8.0):
+                    prefill_speedup: float = 8.0,
+                    fused: "bool | None" = None,
+                    fast_forward: bool = False):
         """Route a seeded traffic trace (`serve/traffic.py`) over the fleet
         and return the per-request SLO ledger (`serve/router.py`).
 
@@ -251,11 +295,10 @@ class ServeEngine:
            couples onsets to load, the consolidated-margins drift);
         3. the controller runs one round (SOR learning included), exactly
            the `_account` control path;
-        4. per-rail headroom and the pinned-chip drain mask are read from
-           the controller's eager `last_envelope`/`last_request` and the
-           router places queued requests head-of-line FIFO (a request it
-           cannot place defers — reason `capacity` when every slot is
-           full, `pinned-drain` when only pinned chips had room);
+        4. per-rail headroom and the pinned-chip drain mask feed the
+           router, which places queued requests head-of-line FIFO (a
+           request it cannot place defers — reason `capacity` when every
+           slot is full, `pinned-drain` when only pinned chips had room);
         5. resident requests progress at their chip's modeled rate
            (`tick_s / t_step_chip` decode tokens per tick, batched decode:
            every slot advances together; prefill runs `prefill_speedup` x
@@ -269,6 +312,26 @@ class ServeEngine:
            each resident request is charged its share of its chip's busy
            energy.
 
+        `fused` selects the tick's device path (docs/serve.md "serving at
+        fleet scale"). `None` (default) auto-resolves: in-graph
+        controllers (and controller-less engines) run ONE jitted
+        `serve_tick` per tick — accounting, observe overlay, control
+        round, busy/idle energy rescale and the per-chip rate/over-bound
+        flags compile into a single dispatch whose packed host bundle is
+        the tick's only device transfer, and slot bookkeeping runs as
+        numpy `[n_chips, capacity]` arrays. Host-actuated controllers
+        (PMBus path) fall back to the historical per-tick loop, which
+        `fused=False` also forces — the oracle the fused path's ledger is
+        pinned against in tests. With a `mesh=` engine the fused tick's
+        learned round runs shard-parallel (`sharded_control_round`).
+
+        `fast_forward=True` (fused path only) jumps simulated time to the
+        next arrival whenever the queue is empty and no slot is resident —
+        the skipped ticks run no accounting and no control round, so the
+        trajectory is NOT tick-for-tick identical to a fast_forward=False
+        run across idle gaps (default off; `last_trace` reports the ticks
+        skipped).
+
         `tick_s` defaults to the fleet-mean decode step time at the current
         operating point. Deterministic given (trace, observe, controller):
         placement ties break by chip index and all randomness lives in the
@@ -279,21 +342,331 @@ class ServeEngine:
         if self.fleet_spec is None:
             raise ValueError("serve_trace routes over a fleet plane; pass "
                              "fleet=FleetSpec")
-        from repro.serve.router import RequestLedger, rail_headroom
+        from repro.serve.router import RequestLedger
+        # routers carry placement state (the round-robin cursor) — reset it
+        # per trace so back-to-back traces on one engine place identically
+        reset = getattr(self.router, "reset", None)
+        if callable(reset):
+            reset()
+        if fused is None:
+            fused = (self.controller is None
+                     or isinstance(self.controller, InGraphRailController))
+        if fused and self.controller is not None and not isinstance(
+                self.controller, InGraphRailController):
+            raise ValueError(
+                "fused=True compiles the control round into the serve "
+                "tick; a host-actuated controller (PMBus path) needs "
+                "fused=False")
+        if fast_forward and not fused:
+            raise ValueError("fast_forward rides the fused tick path; "
+                             "drop fused=False (or the host controller)")
+        if tick_s is None:
+            tick_s = float(scalar_view(
+                step_time_s(self.decode_profile, self.plane)))
         ledger = RequestLedger()
+        arrivals = sorted(trace, key=lambda r: (r.t_arrival_s, r.rid))
+        kw = dict(max_ticks=max_ticks, observe=observe, tick_s=tick_s,
+                  error_bound=error_bound, degrade=degrade,
+                  prefill_speedup=prefill_speedup)
+        if fused:
+            return self._serve_trace_fused(arrivals, ledger,
+                                           fast_forward=fast_forward, **kw)
+        return self._serve_trace_loop(arrivals, ledger, **kw)
+
+    # -- fused path: one jitted device round + vectorized host bookkeeping ----
+
+    def _serve_tick_jit(self, observe, tick_s: float, error_bound: float):
+        """The cached jitted serve tick for this (observe, tick_s,
+        error_bound) world — cached like `control_step_sor`'s round jit so
+        repeated traces dispatch without retracing."""
+        key = (id(observe), float(tick_s), float(error_bound))
+        fn = self._tick_cache.get(key)
+        if fn is None:
+            fn = self._build_serve_tick(observe, tick_s, error_bound)
+            self._tick_cache[key] = fn
+        return fn
+
+    def _build_serve_tick(self, observe, tick_s: float, error_bound: float):
+        """Build ONE fused serve tick: accounting -> observe overlay ->
+        control round -> busy/idle energy rescale -> per-chip rate/
+        over-bound flags, pure jnp, jitted as a single program. Returns
+        `(plane', sor_state', bundle, request, env)` where `bundle` is the
+        packed `[13, n_chips]` float32 host bundle — rows 0-3 `e_tick`,
+        `e_busy`, `t_step`, `over`; rows 4-6 per-rail floors; rows 7-9
+        per-rail headroom; rows 10-12 per-rail pinned masks (RAIL_LANES
+        order) — the tick's ONLY device->host transfer."""
+        spec = self.fleet_spec
+        variation = {k: jnp.asarray(v) for k, v in spec.variation().items()}
+        profile = self.decode_profile
+        c = self.controller
+        n = self.n_chips
+        rail_map = (getattr(c, "rail_map", TPU_V5E_RAIL_MAP)
+                    if c is not None else TPU_V5E_RAIL_MAP)
+        use_sor = (c is not None and getattr(c, "sor", None) is not None
+                   and hasattr(c, "control_step_sor"))
+        sharded = self._sharded_round
+        ts = jnp.float32(tick_s)
+
+        def _b(x):
+            return jnp.broadcast_to(
+                jnp.atleast_1d(jnp.asarray(x, jnp.float32)), (n,))
+
+        def tick(plane, sor_state, busy_frac, tick_idx):
+            plane, frame, m = account_fleet_and_observe(profile, plane,
+                                                        spec)
+            if observe is not None:
+                frame = observe(plane, frame, tick_idx, busy_frac)
+            request = env = None
+            if c is None:
+                pass
+            elif use_sor:
+                if sharded is not None:
+                    pre = plane
+                    plane, sor_state, _conf_sum, _conf_min = sharded(
+                        plane, frame, sor_state)
+                    # the request/envelopes the bundle rows need are
+                    # re-derived OUTSIDE the shard_map on the global
+                    # (sharded) shapes: envelopes are elementwise in the
+                    # post-ingest estimate and the decision is elementwise
+                    # per chip — the same math the per-shard round
+                    # arbitrated with
+                    env = sor_mod.rail_envelopes(sor_state.estimate, c.sor)
+                    request = c.policy.decide_env(pre, frame, env)
+                else:
+                    plane, sor_state, request, env = c.control_round(
+                        plane, frame, sor_state)
+            else:
+                plane, request = _run_policy(
+                    c.policy, plane, frame, frame, rail_map, host=False)
+            # busy/idle-blended energy: accounting assumed every chip
+            # fully busy — rescale to this tick's occupancy (idle slots
+            # burn static + uncore power only) and rewrite the plane's
+            # accumulator to match
+            p_busy = m["power_w"]
+            p_idle = chip_power_w_jnp(plane, 0.0, 0.0, 0.0, spec.base,
+                                      variation=variation)
+            p_eff = p_idle + (p_busy - p_idle) * busy_frac
+            e_tick = p_eff * ts
+            plane = dataclasses.replace(
+                plane, energy_j=plane.energy_j - m["energy_step_j"]
+                + e_tick)
+            over = jnp.zeros((n,), bool)
+            for key in _OBS_KEYS:
+                v = frame.get(key)
+                if v is None:
+                    continue
+                a = _b(v)
+                over = over | ((~jnp.isnan(a))
+                               & (a > jnp.float32(error_bound)))
+            floors = rail_floors(plane, env, rail_map)
+            held = jnp.stack([_b(getattr(plane, f))
+                              for f in ("v_core", "v_hbm", "v_io")])
+            pinned = pinned_lane_masks(plane, request, rail_map,
+                                       envelope=env)
+            bundle = jnp.concatenate([
+                jnp.stack([_b(e_tick), _b((p_eff - p_idle) * ts),
+                           _b(m["t_step_s"]), over.astype(jnp.float32)]),
+                floors,
+                held - floors,
+                pinned.astype(jnp.float32),
+            ])
+            return plane, sor_state, bundle, request, env
+
+        donate = (1,) if (use_sor and getattr(c, "donate", False)) else ()
+        return jax.jit(tick, donate_argnums=donate)
+
+    def _serve_trace_fused(self, arrivals, ledger, *, max_ticks, observe,
+                           tick_s, error_bound, degrade, prefill_speedup,
+                           fast_forward):
+        """The fused serve loop: per tick, ONE jitted device dispatch and
+        ONE packed bundle transfer; slot progress/finish bookkeeping runs
+        as numpy `[n_chips, capacity]` arrays (no per-slot dicts). Ledger
+        and stats are pinned equal to `_serve_trace_loop` on the same
+        world (tests/test_serve_scale.py)."""
+        from repro.serve.router import headroom_from_packed
+        n = self.n_chips
+        cap = self.router.capacity
+        c = self.controller
+        use_sor = (c is not None and getattr(c, "sor", None) is not None
+                   and hasattr(c, "control_step_sor"))
+        if use_sor and self._sor_state is None:
+            self._sor_state = c.init_sor(n if self.plane.is_fleet else None)
+        if self._sharded_round is not None:
+            from repro.kernels import ops as _ops
+            self.plane = _ops.shard_chip_tree(self.plane, self.mesh, n)
+            if self._sor_state is not None:
+                self._sor_state = _ops.shard_chip_tree(
+                    self._sor_state, self.mesh, n)
+        tick_fn = self._serve_tick_jit(observe, tick_s, error_bound)
+
+        n_req = len(arrivals)
+        arr_t = np.asarray([r.t_arrival_s for r in arrivals], np.float64)
+        req_prefill = np.asarray([r.prefill_tokens for r in arrivals],
+                                 np.int64)
+        req_decode = np.asarray([r.decode_tokens for r in arrivals],
+                                np.int64)
+        # per-request busy-energy accumulator, charged to the ledger once
+        # at trace end: one float64 add per resident tick in tick order —
+        # float-equal to the loop path's per-tick ledger.charge
+        energy_acc = np.zeros(n_req, np.float64)
+        charged = np.zeros(n_req, bool)
+
+        slot_req = np.full((n, cap), -1, np.int64)   # arrival index; -1 free
+        slot_prefill = np.zeros((n, cap), np.float64)
+        slot_decode = np.zeros((n, cap), np.float64)
+
+        pending: collections.deque = collections.deque()  # arrival indices
+        ai = 0
+        t = 0.0
+        max_occ = 0
+        degraded_ticks = 0
+        ticks_run = 0
+        ff_ticks = 0
+
+        for tick in range(max_ticks):
+            active = slot_req >= 0
+            resident = bool(active.any())
+            if ai >= n_req and not pending and not resident:
+                break
+            if (fast_forward and not pending and not resident
+                    and ai < n_req and arr_t[ai] > t):
+                # idle fleet, empty queue: jump simulated time to the
+                # first on-grid tick that reaches the next arrival. The
+                # skipped ticks run no accounting and no control round.
+                k = int(np.ceil((arr_t[ai] - t) / tick_s))
+                t += k * tick_s
+                ff_ticks += k
+            ticks_run += 1
+            while ai < n_req and arrivals[ai].t_arrival_s <= t:
+                ledger.admit(arrivals[ai])
+                pending.append(ai)
+                ai += 1
+            occ = active.sum(axis=1)
+            busy_frac = jnp.asarray(
+                np.minimum(occ.astype(np.float64), cap) / cap, jnp.float32)
+
+            self.plane, self._sor_state, bundle, request, env = tick_fn(
+                self.plane, self._sor_state, busy_frac, jnp.int32(tick))
+            if c is not None:
+                c.last_request = _concrete_or_none(request)
+                c.last_envelope = _concrete_or_none(env)
+            b = np.asarray(jax.device_get(bundle), np.float64)  # 1 transfer
+            e_np, e_busy, t_step = b[0], b[1], b[2]
+            over = b[3] > 0.5
+            headroom = headroom_from_packed(b[7:10])
+            pinned_rows = b[10:13] > 0.5
+            pinned = pinned_rows.any(axis=0)
+
+            self.stats.energy_j += float(e_np.mean())
+            self.stats.fleet_energy_j += float(e_np.sum())
+            self.stats.model_time_s += tick_s
+            ledger.tick_energy(float(e_np.sum()))
+            if resident:
+                chips, slots = np.nonzero(active)
+                idx = slot_req[chips, slots]
+                np.add.at(energy_acc, idx, e_busy[chips] / occ[chips])
+                charged[idx] = True
+
+            # placement: the whole pending queue in one vectorized router
+            # pass, FIFO head-of-line semantics pinned to sequential
+            # place(); an unplaceable head defers once and blocks the
+            # queue behind it
+            if pending:
+                placed = self.router.place_batch(
+                    [arrivals[i] for i in pending], occ, headroom, pinned)
+                for chip in placed:
+                    i = pending.popleft()
+                    ledger.place(arrivals[i].rid, t, chip)
+                    slot = int(np.argmin(slot_req[chip]))   # first free
+                    slot_req[chip, slot] = i
+                    slot_prefill[chip, slot] = float(
+                        arrivals[i].prefill_tokens)
+                    slot_decode[chip, slot] = float(
+                        arrivals[i].decode_tokens)
+                    active[chip, slot] = True
+                    occ[chip] += 1
+                if pending:
+                    reason = ("capacity" if bool((occ >= cap).all())
+                              else "pinned-drain")
+                    ledger.defer(arrivals[pending[0]].rid, reason, tick_s)
+                    self.stats.decode_sheds += 1
+                    self.stats.sheds_by_reason[reason] = (
+                        self.stats.sheds_by_reason.get(reason, 0) + 1)
+                    if reason == "pinned-drain":
+                        for lane, rail in enumerate(RAIL_LANES):
+                            if pinned_rows[lane].any():
+                                self.stats.sheds_by_rail[rail] = (
+                                    self.stats.sheds_by_rail.get(rail, 0)
+                                    + 1)
+                    self.stats.defer_time_s += tick_s
+            max_occ = max(max_occ, int(occ.max()) if n else 0)
+
+            # progress: batched decode over the [n_chips, capacity] slot
+            # arrays; over-bound chips deliver degraded goodput this tick
+            rate = tick_s / np.maximum(t_step, 1e-12)
+            if over.any():
+                degraded_ticks += int(over.sum())
+            rate = np.where(over, rate * degrade, rate)
+            t_end = t + tick_s
+            rate2d = np.broadcast_to(rate[:, None], (n, cap))
+            in_prefill = active & (slot_prefill > 0)
+            if in_prefill.any():
+                slot_prefill[in_prefill] -= (rate2d[in_prefill]
+                                             * prefill_speedup)
+                pf_done = in_prefill & (slot_prefill <= 0)
+                if pf_done.any():
+                    self.stats.prefill_tokens += int(
+                        req_prefill[slot_req[pf_done]].sum())
+            # a slot whose prefill crossed zero THIS tick decodes only
+            # from the next tick (the loop path's `continue`)
+            in_decode = active & ~in_prefill
+            if in_decode.any():
+                slot_decode[in_decode] -= rate2d[in_decode]
+                fin = in_decode & (slot_decode <= 0)
+                if fin.any():
+                    for chip, slot in zip(*np.nonzero(fin)):
+                        i = slot_req[chip, slot]
+                        self.stats.decode_tokens += int(req_decode[i])
+                        ledger.finish(arrivals[i].rid, t_end,
+                                      tokens_out=int(req_decode[i]))
+                    slot_req[fin] = -1
+            t = t_end
+
+        for i in np.nonzero(charged)[0]:
+            ledger.charge(arrivals[int(i)].rid, float(energy_acc[i]))
+
+        self.last_trace = {
+            "router": getattr(self.router, "name",
+                              type(self.router).__name__),
+            "ticks": ticks_run, "tick_s": tick_s,
+            "max_occupancy": max_occ, "capacity": cap,
+            "degraded_chip_ticks": degraded_ticks,
+            "unplaced": len(pending),
+            "unfinished": int((slot_req >= 0).sum()),
+            "fused": True,
+            "fast_forward_ticks": ff_ticks,
+        }
+        return ledger
+
+    # -- loop path: the historical per-tick host loop (the fused oracle) ------
+
+    def _serve_trace_loop(self, arrivals, ledger, *, max_ticks, observe,
+                          tick_s, error_bound, degrade, prefill_speedup):
+        """The PR-8 per-tick host loop: eager accounting, one control
+        dispatch and scattered device reads per tick, per-slot dict
+        bookkeeping. Kept verbatim as the semantics oracle the fused path
+        is pinned against, and as the only path host-actuated (PMBus)
+        controllers can run."""
+        from repro.serve.router import rail_headroom
         n = self.n_chips
         cap = self.router.capacity
         spec = self.fleet_spec
         variation = {k: jnp.asarray(v) for k, v in spec.variation().items()}
-        if tick_s is None:
-            tick_s = float(scalar_view(
-                step_time_s(self.decode_profile, self.plane)))
         account = lambda p: account_fleet_and_observe(
             self.decode_profile, p, spec)
         p_idle_fn = lambda p: chip_power_w_jnp(
             p, 0.0, 0.0, 0.0, spec.base, variation=variation)
 
-        arrivals = sorted(trace, key=lambda r: (r.t_arrival_s, r.rid))
         ai = 0
         pending: collections.deque = collections.deque()
         running: list[list[dict]] = [[] for _ in range(n)]
@@ -301,7 +674,6 @@ class ServeEngine:
         max_occ = 0
         degraded_ticks = 0
         ticks_run = 0
-        obs_keys = ("grad_error", "straggle_rate", "hbm_error_rate")
 
         for tick in range(max_ticks):
             if ai >= len(arrivals) and not pending \
@@ -346,14 +718,20 @@ class ServeEngine:
 
             # placement: headroom + drain mask from the eager round just
             # run; FIFO with head-of-line blocking (placement order is the
-            # SLO order — a starved head is a deferral, not a skip)
+            # SLO order — a starved head is a deferral, not a skip). The
+            # pinned masks are computed ONCE per tick (one stacked
+            # transfer) and reused by the defer path — their inputs don't
+            # change within a tick
             envs = getattr(self.controller, "last_envelope", None) \
                 if self.controller is not None else None
             req = getattr(self.controller, "last_request", None) \
                 if self.controller is not None else None
             headroom = rail_headroom(self.plane, envs)
-            pinned = (pinned_chip_mask(self.plane, req, envelope=envs)
-                      if req is not None else np.zeros(n, bool))
+            pin_masks = (pinned_rails(self.plane, req, envelope=envs)
+                         if req is not None else {})
+            pinned = np.zeros(n, bool)
+            for mask in pin_masks.values():
+                pinned |= mask
             while pending:
                 occ_now = [len(r) for r in running]
                 chip = self.router.place(pending[0], occ_now, headroom,
@@ -367,8 +745,7 @@ class ServeEngine:
                     self.stats.sheds_by_reason[reason] = (
                         self.stats.sheds_by_reason.get(reason, 0) + 1)
                     if reason == "pinned-drain":
-                        for rail, mask in pinned_rails(
-                                self.plane, req, envelope=envs).items():
+                        for rail, mask in pin_masks.items():
                             if mask.any():
                                 self.stats.sheds_by_rail[rail] = (
                                     self.stats.sheds_by_rail.get(rail, 0)
@@ -390,7 +767,7 @@ class ServeEngine:
             rate = tick_s / np.maximum(
                 np.broadcast_to(np.atleast_1d(t_step), (n,)), 1e-12)
             over = np.zeros(n, bool)
-            for key in obs_keys:
+            for key in _OBS_KEYS:
                 v = frame.get(key)
                 if v is None:
                     continue
@@ -429,6 +806,8 @@ class ServeEngine:
             "degraded_chip_ticks": degraded_ticks,
             "unplaced": len(pending),
             "unfinished": sum(len(r) for r in running),
+            "fused": False,
+            "fast_forward_ticks": 0,
         }
         return ledger
 
@@ -439,17 +818,26 @@ class ServeEngine:
             "decode_tokens": self.stats.decode_tokens,
             "energy_j": self.stats.energy_j,
             "model_time_s": self.stats.model_time_s,
-            "j_per_decoded_token": self.stats.energy_j / toks,
             # array-aware: fleet planes report the mean operating point
             "v_core": scalar_view(self.plane.v_core),
             "v_io": scalar_view(self.plane.v_io),
             "n_chips": self.n_chips,
         }
         if self.plane.is_fleet:
+            # fleet planes report joules/token from whole-fleet energy —
+            # energy_j is the per-chip MEAN while decode_tokens counts the
+            # whole fleet, so dividing the mean by fleet-total tokens (the
+            # historical j_per_decoded_token spelling) understated the
+            # fleet's cost by 1/n_chips; the scalar field stays
+            # scalar-plane-only
             out["fleet_energy_j"] = self.stats.fleet_energy_j
+            out["fleet_j_per_decoded_token"] = (
+                self.stats.fleet_energy_j / toks)
             out["v_core_min"] = float(jnp.min(self.plane.v_core))
             out["v_io_min"] = float(jnp.min(self.plane.v_io))
             out["comp_level_min"] = int(jnp.min(self.plane.comp_level))
+        else:
+            out["j_per_decoded_token"] = self.stats.energy_j / toks
         if self.admission_gate or self.router is not None:
             out["decode_sheds"] = self.stats.decode_sheds
             out["defer_time_s"] = self.stats.defer_time_s

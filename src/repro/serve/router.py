@@ -45,20 +45,29 @@ def rail_headroom(plane: PowerPlaneState, envelopes: Any,
     confidence-blended floor (`SafeEnvelope.floor(static v_min)`; the
     platform static floor where no envelope is fitted). This is the margin
     the chip has below its current operating point before arbitration pins
-    it: 0 means the chip is operating AT its learned limit."""
-    from repro.core.sor import envelope_for
+    it: 0 means the chip is operating AT its learned limit. All three
+    rails come back in ONE stacked device transfer (the historical
+    spelling paid one blocking `device_get` per rail); the fused serve
+    tick avoids even that by packing the same rows into its per-tick host
+    bundle (`headroom_from_packed`)."""
+    from repro.core.control_plane import rail_floors
     n = plane.n_chips
-    out = {}
-    for name, field in _RAIL_FIELDS.items():
-        r = rail_map.by_name(name)
-        env = envelope_for(envelopes, name)
-        floor = (env.floor(r.v_min) if env is not None
-                 else jnp.float32(r.v_min))
-        held = jnp.asarray(getattr(plane, field), jnp.float32)
-        h = np.atleast_1d(np.asarray(jax.device_get(held - floor),
-                                     np.float64))
-        out[name] = np.broadcast_to(h, (n,)).copy()
-    return out
+    held = jnp.stack([
+        jnp.broadcast_to(jnp.atleast_1d(
+            jnp.asarray(getattr(plane, field), jnp.float32)), (n,))
+        for field in _RAIL_FIELDS.values()])
+    h = np.asarray(jax.device_get(
+        held - rail_floors(plane, envelopes, rail_map)), np.float64)
+    return {name: h[i].copy() for i, name in enumerate(_RAIL_FIELDS)}
+
+
+def headroom_from_packed(rows) -> dict[str, np.ndarray]:
+    """{rail: [n_chips] float} from already-transferred per-rail headroom
+    rows (`[n_rails, n_chips]`, `control_plane.RAIL_LANES` order) — the
+    fused serve tick's packed host bundle. Zero device syncs: the rows
+    rode the tick's single bundle transfer."""
+    a = np.asarray(rows, np.float64)
+    return {name: a[i].copy() for i, name in enumerate(_RAIL_FIELDS)}
 
 
 @dataclasses.dataclass
@@ -88,6 +97,11 @@ class HeadroomRouter:
         if self.capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {self.capacity}")
 
+    def reset(self) -> None:
+        """Per-trace reset (`serve_trace` calls it at trace start). The
+        headroom router is stateless — this exists so both routers share
+        the trace-lifecycle interface."""
+
     def place(self, request, occupancy, headroom: dict[str, np.ndarray],
               pinned=None) -> "int | None":
         occ = np.asarray(occupancy, np.float64)
@@ -106,6 +120,41 @@ class HeadroomRouter:
         score = np.where(eligible, score, -np.inf)
         return int(np.argmax(score))
 
+    def place_batch(self, requests, occupancy,
+                    headroom: dict[str, np.ndarray],
+                    pinned=None) -> list[int]:
+        """Place a whole FIFO queue in one pass: the headroom terms of
+        every request's score are computed as one `[n_requests, n_chips]`
+        matrix, and only the occupancy term (the one thing placement
+        itself changes) updates between requests. Returns the chip per
+        placed request, head-of-line prefix order — placement stops at the
+        first request with no eligible chip, exactly like repeated
+        sequential `place()` calls (same arithmetic, same lowest-index
+        tie-break), which tests pin bit-equal."""
+        if not requests:
+            return []
+        occ = np.asarray(occupancy, np.float64).copy()
+        n = occ.shape[0]
+        elig = np.ones(n, bool)
+        if self.drain_pinned and pinned is not None:
+            elig &= ~np.asarray(pinned, bool)
+        w = np.asarray([r.decode_fraction for r in requests], np.float64)
+        zeros = np.zeros(n, np.float64)
+        h_d = np.asarray(headroom.get(self.decode_rail, zeros), np.float64)
+        h_p = np.asarray(headroom.get(self.prefill_rail, zeros), np.float64)
+        base = (1.0 - w)[:, None] * h_p[None, :] + w[:, None] * h_d[None, :]
+        out: list[int] = []
+        for k in range(len(requests)):
+            eligible = elig & (occ < self.capacity)
+            if not eligible.any():
+                break
+            score = base[k] - self.occupancy_weight_v * occ / self.capacity
+            score = np.where(eligible, score, -np.inf)
+            chip = int(np.argmax(score))
+            out.append(chip)
+            occ[chip] += 1.0
+        return out
+
 
 @dataclasses.dataclass
 class RoundRobinRouter:
@@ -120,6 +169,12 @@ class RoundRobinRouter:
         if self.capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {self.capacity}")
 
+    def reset(self) -> None:
+        """Per-trace reset: rewind the cursor so back-to-back traces on
+        one engine place identically (`serve_trace` calls it at trace
+        start; historically the second trace started mid-cursor)."""
+        self._cursor = 0
+
     def place(self, request, occupancy, headroom=None,
               pinned=None) -> "int | None":
         n = len(occupancy)
@@ -129,6 +184,29 @@ class RoundRobinRouter:
                 self._cursor = (i + 1) % n
                 return i
         return None
+
+    def place_batch(self, requests, occupancy, headroom=None,
+                    pinned=None) -> list[int]:
+        """Whole-queue round-robin in one numpy pass. Sequential cursor
+        semantics place one request per free chip per cyclic sweep (between
+        two visits to the same chip every other chip is visited once), so
+        the placement order is exactly: sweep s = 0, 1, ... over the
+        cursor-rotated chip order, keeping chips with more than s free
+        slots — which vectorizes as a boolean [capacity, n_chips] mask.
+        Tests pin the result bit-equal to repeated `place()` calls,
+        including the final cursor position."""
+        if not requests:
+            return []
+        occ = np.asarray(occupancy, np.int64)
+        n = occ.shape[0]
+        rot = (self._cursor + np.arange(n)) % n
+        free = self.capacity - occ[rot]
+        keep = free[None, :] > np.arange(self.capacity)[:, None]
+        order = np.broadcast_to(rot, keep.shape)[keep]   # sweep-major
+        out = order[: len(requests)].tolist()
+        if out:
+            self._cursor = int((out[-1] + 1) % n)
+        return [int(i) for i in out]
 
 
 # ---------------------------------------------------------------------------
