@@ -21,6 +21,12 @@ are machine-dependent — CI runners and dev boxes differ by integer factors
   fused serve tick's speedup shrank) and the fused per-chip µs/tick
   against the same run's smallest-fleet anchor (growth = tick cost
   stopped amortizing with fleet size).
+* ``tokens_per_joule{batched,unbatched}`` / ``p99_latency_s{...}`` /
+  ``degraded_chip_ticks{migrate,drain}`` records (``serve_batching``)
+  gate the unbatched/batched tokens-per-joule and batched/unbatched p99
+  ratios (growth = the continuous-batching win shrank) and the
+  migrate/drain degraded-chip-ticks ratio (growth toward 1.0 = migration
+  stopped recovering degraded ticks).
 
 Matching is by record ``name`` (and the files' ``bench`` tag): a record or
 metric present in the BASELINE but missing from the new run fails with a
@@ -87,6 +93,20 @@ def gate_metrics(rec: dict) -> dict[str, float]:
         # growth of headroom/roundrobin p99 = headroom got slower at tail
         out["headroom/roundrobin p99 latency ratio"] = (
             p99["headroom"] / max(p99["roundrobin"], 1e-9))
+    if isinstance(tpj, dict) and "batched" in tpj and "unbatched" in tpj:
+        # growth of unbatched/batched = the continuous-batching win shrank
+        out["unbatched/batched tokens-per-joule ratio"] = (
+            tpj["unbatched"] / max(tpj["batched"], 1e-9))
+    if isinstance(p99, dict) and "batched" in p99 and "unbatched" in p99:
+        # growth of batched/unbatched p99 = batching got slower at tail
+        out["batched/unbatched p99 latency ratio"] = (
+            p99["batched"] / max(p99["unbatched"], 1e-9))
+    dct = rec.get("degraded_chip_ticks")
+    if isinstance(dct, dict) and "migrate" in dct and "drain" in dct:
+        # growth of migrate/drain = migration recovers fewer degraded
+        # chip-ticks than drain-pinned-only (1.0 = migration does nothing)
+        out["migrate/drain degraded-chip-ticks ratio"] = (
+            dct["migrate"] / max(dct["drain"], 1e-9))
     tps = rec.get("ticks_per_sec")
     if isinstance(tps, dict) and "fused" in tps and "loop" in tps:
         # growth of loop/fused = the fused serve tick's speedup shrank

@@ -14,9 +14,11 @@ across PRs.
 from __future__ import annotations
 
 import argparse
+import datetime
 import importlib
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
@@ -49,8 +51,44 @@ MODULES = [
     # scale (docs/serve.md "serving at fleet scale"): gated on the
     # loop/fused tick-rate ratio and the fused per-chip µs/tick scaling
     "benchmarks.serve_scale",
+    # continuous batching vs one-request-per-slot, and in-flight migration
+    # vs drain-pinned-only (docs/serve.md "continuous batching &
+    # migration"): gated on the unbatched/batched tokens-per-joule,
+    # batched/unbatched p99, and migrate/drain degraded-chip-ticks ratios
+    "benchmarks.serve_batching",
     "benchmarks.roofline_table",        # deliverable (g)
 ]
+
+
+def _git_commit() -> "str | None":
+    """The commit the records were produced at (None outside a checkout
+    or without git on PATH) — provenance for the cross-PR trajectory."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def _append_trajectory(out_dir: str, stamp: dict,
+                       by_bench: "dict[str, list]") -> str:
+    """Append ONE cumulative row per --json-out run to
+    `<out_dir>/BENCH_trajectory.jsonl`: the commit/time stamp plus each
+    bench's gated within-run ratios (`check_bench_regression.gate_metrics`
+    — the same numbers CI gates, so the trajectory is comparable across
+    machines). The BENCH_*.json files are overwritten per run; this file
+    only grows, which is what makes the cross-PR story tellable."""
+    from benchmarks.check_bench_regression import gate_metrics
+    row_out = {**stamp, "benches": {
+        bench: {rec["name"]: gate_metrics(rec) for rec in records}
+        for bench, records in by_bench.items()}}
+    path = os.path.join(out_dir, "BENCH_trajectory.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(row_out, sort_keys=True) + "\n")
+    return path
 
 
 def main(argv=None) -> None:
@@ -117,15 +155,25 @@ def main(argv=None) -> None:
         if by_bench:
             out_dir = os.path.dirname(args.json_out) or "."
             os.makedirs(out_dir, exist_ok=True)
+            # commit/PR provenance: every record file carries the commit
+            # it was produced at, and each --json-out run appends one row
+            # to the cumulative cross-PR trajectory next to it
+            stamp = {"commit": _git_commit(),
+                     "generated_utc": datetime.datetime.now(
+                         datetime.timezone.utc).isoformat(
+                             timespec="seconds"),
+                     "modules_run": modules}
             for bench, records in by_bench.items():
                 path = (args.json_out if bench == "fleet_frontier"
                         else os.path.join(out_dir, f"BENCH_{bench}.json"))
-                out = {"bench": bench, "modules_run": modules,
+                out = {"bench": bench, **stamp,
                        "run_wall_time_s": round(wall_s, 3),
                        "failures": failures, "records": records}
                 with open(path, "w") as f:
                     json.dump(out, f, indent=1)
                 print(f"perf record ({len(records)} entries) -> {path}")
+            tpath = _append_trajectory(out_dir, stamp, by_bench)
+            print(f"trajectory row appended -> {tpath}")
         else:
             # a selection that ran no record-emitting module must not
             # clobber the accumulated trajectory entry with an empty file

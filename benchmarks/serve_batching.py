@@ -1,0 +1,224 @@
+"""Continuous batching + in-flight migration for compiled fleet serving
+(docs/serve.md "continuous batching & migration").
+
+Two questions, one committed record file:
+
+**Does continuous batching pay?** The same weak-scaled bursty trace is
+served twice on the serve_router bench world — once with `batch_cap=CAP`
+(each chip a token-level decode batch over CAP resident lanes at the
+shared-roofline per-lane rate) and once with `batch_cap=1` (one request
+per chip at the full single-lane rate, the PR-9 semantics oracle). The
+batched fleet holds CAP x the lanes, so the burst that drowns the
+unbatched fleet's queue is absorbed; per-lane rate is sublinear in
+occupancy (`power_plane.batched_lane_time_s`), so the throughput gain is
+the roofline's shared fraction, not a free CAP x. Reported: tokens/joule,
+goodput (decoded tokens per simulated second), p99 latency, both arms.
+
+**Does migration recover degraded ticks?** A forced-pin scenario — the
+same world at saturating load, where chips that accepted work before the
+load-coupled onset shift re-cross the error bound and sit there serving
+degraded — run with `migrate_after_ticks=K` vs `drain_pinned`-only
+(migration off). Migration must STRICTLY reduce degraded chip-ticks: a
+hot chip's decode lanes move to deep-headroom chips, its busy_frac drops,
+its onset recedes, it recovers; drain-only leaves resident work degrading
+to completion.
+
+Both ratios are committed in reports/BENCH_serve_batching.json and gated
+by check_bench_regression.py: unbatched/batched tokens-per-joule,
+batched/unbatched p99, and migrate/drain degraded-chip-ticks (growth of
+any = the win shrank). All simulated-time numbers are seed-deterministic;
+the CI smoke runs a reduced config against its own committed baseline
+(reports/BENCH_smoke_serve_batching_baseline.json).
+
+Env knobs: REPRO_BENCH_SERVE_BATCHING_{CHIPS,REQ_PER_CHIP,TICKS,CAP} for
+the batching arm, REPRO_BENCH_SERVE_BATCHING_{MIG_CHIPS,MIG_REQUESTS,
+MIG_AFTER} for the migration scenario.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+
+from benchmarks import serve_router as sr
+from benchmarks import serve_scale as ss
+from benchmarks.common import row
+from repro.core.power_plane import StepProfile, account_fleet_and_observe
+from repro.serve.traffic import bursty_trace
+
+N_CHIPS = int(os.environ.get("REPRO_BENCH_SERVE_BATCHING_CHIPS", "64"))
+REQ_PER_CHIP = float(os.environ.get(
+    "REPRO_BENCH_SERVE_BATCHING_REQ_PER_CHIP", "6"))
+MAX_TICKS = int(os.environ.get("REPRO_BENCH_SERVE_BATCHING_TICKS", "4000"))
+CAP = int(os.environ.get("REPRO_BENCH_SERVE_BATCHING_CAP", "8"))
+BASE_CHIPS = 64   # weak-scaling anchor: rates scale with n/BASE_CHIPS
+
+MIG_CHIPS = int(os.environ.get(
+    "REPRO_BENCH_SERVE_BATCHING_MIG_CHIPS", "16"))
+MIG_REQUESTS = int(os.environ.get(
+    "REPRO_BENCH_SERVE_BATCHING_MIG_REQUESTS", "96"))
+MIG_AFTER = int(os.environ.get(
+    "REPRO_BENCH_SERVE_BATCHING_MIG_AFTER", "6"))
+
+# sr.PROFILE is prefill/training-shaped: its FLOPs term sits at the memory
+# roofline (t_comp ~ t_mem ~ 10ms), so once the controller's gradient
+# compression collapses the collective term the world is COMPUTE-bound —
+# and per-lane decode FLOPs don't share across a batch (BatchShares.flops
+# = 0), so continuous batching would (correctly) buy nothing. Real decode
+# is memory-bound: per-token FLOPs are ~2*params while the per-step HBM
+# traffic is the full weights read, amortized over every resident lane —
+# which is exactly WHY continuous batching pays. This bench serves with a
+# decode-shaped profile: same HBM/ICI bytes as sr.PROFILE, FLOPs at the
+# decode ratio (t_comp ~ 0.4ms << t_mem ~ 9.8ms).
+DECODE_PROFILE = StepProfile(
+    flops_per_chip=8e10,
+    hbm_bytes_per_chip=sr.PROFILE.hbm_bytes_per_chip,
+    ici_bytes_per_chip=sr.PROFILE.ici_bytes_per_chip,
+    grad_bytes_per_chip=sr.PROFILE.grad_bytes_per_chip)
+
+
+def _trace(n_chips: int, req_per_chip: float):
+    """Weak-scaled seeded traffic anchored at BASE_CHIPS (the committed
+    64-chip config): per-chip offered load is constant across fleet
+    sizes, so the smoke config stresses each chip identically. Rates are
+    16x the serve_scale trace's — a saturating burst: the offered token
+    rate exceeds BOTH fleets' service rates, so each arm drains a backlog
+    at its own fleet throughput and the goodput/p99 ratios measure exactly
+    what continuous batching buys (an arrival-bound fleet never exercises
+    the extra lanes — every arm just keeps up)."""
+    scale = n_chips / BASE_CHIPS
+    return bursty_trace(max(int(req_per_chip * n_chips), 1), seed=sr.SEED,
+                        quiet_rate_hz=128.0 * scale,
+                        burst_rate_hz=640.0 * scale, decode_mean=48.0)
+
+
+def _warm(eng, observe, n_chips: int):
+    """The serve_router idle warmup: envelopes converge before the trace
+    routes, so placement (and migration) reads LEARNED margins."""
+    idle = jnp.zeros((n_chips,), jnp.float32)
+    for w in range(sr.WARMUP_ROUNDS):
+        eng.plane, frame, _ = account_fleet_and_observe(
+            eng.decode_profile, eng.plane, eng.fleet_spec)
+        frame = observe(eng.plane, frame, 1_000_000 + w, idle)
+        eng._control_tick(frame)
+
+
+def _run(n_chips: int, trace, *, capacity: int, batch_cap: int,
+         migrate_after_ticks: "int | None" = None):
+    """(engine, ledger, wall_us) of one warmed traced run."""
+    eng, observe = ss._engine(n_chips, capacity=capacity,
+                              batch_cap=batch_cap,
+                              decode_profile=DECODE_PROFILE)
+    _warm(eng, observe, n_chips)
+    t0 = time.perf_counter()
+    ledger = eng.serve_trace(trace, observe=observe, max_ticks=MAX_TICKS,
+                             error_bound=sr.ERROR_BOUND,
+                             migrate_after_ticks=migrate_after_ticks)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return eng, ledger, wall_us
+
+
+def run():
+    rows = []
+
+    # -- continuous batching vs batch_cap=1 on the weak-scaled trace ------
+    trace = _trace(N_CHIPS, REQ_PER_CHIP)
+    arms = {}
+    for arm, (capacity, batch_cap) in (("batched", (CAP, CAP)),
+                                       ("unbatched", (1, 1))):
+        eng, ledger, wall_us = _run(N_CHIPS, trace, capacity=capacity,
+                                    batch_cap=batch_cap)
+        s = ledger.summary()
+        sim_s = eng.last_trace["ticks"] * eng.last_trace["tick_s"]
+        arms[arm] = {"summary": s, "trace": eng.last_trace,
+                     "wall_us": wall_us,
+                     "goodput_tok_per_s": s["tokens_out"] / max(sim_s,
+                                                                1e-12)}
+    b, u = arms["batched"]["summary"], arms["unbatched"]["summary"]
+    tpj = {"batched": b["tokens_per_joule"],
+           "unbatched": u["tokens_per_joule"]}
+    p99 = {"batched": b["p99_latency_s"], "unbatched": u["p99_latency_s"]}
+    goodput = {a: arms[a]["goodput_tok_per_s"] for a in arms}
+    tpj_gain = tpj["batched"] / max(tpj["unbatched"], 1e-12)
+    goodput_gain = goodput["batched"] / max(goodput["unbatched"], 1e-12)
+    record = {
+        "n_chips": N_CHIPS, "n_requests": len(trace), "steps": MAX_TICKS,
+        "capacity": {"batched": CAP, "unbatched": 1},
+        "batch_cap": CAP, "seed": sr.SEED, "base_chips": BASE_CHIPS,
+        "req_per_chip": REQ_PER_CHIP,
+        "tokens_per_joule": tpj,
+        "tokens_per_joule_gain": round(tpj_gain, 3),
+        "goodput_tok_per_s": {a: round(goodput[a], 2) for a in goodput},
+        "goodput_gain": round(goodput_gain, 3),
+        "p99_latency_s": p99,
+        "p50_latency_s": {"batched": b["p50_latency_s"],
+                          "unbatched": u["p50_latency_s"]},
+        "completed": {"batched": b["completed"],
+                      "unbatched": u["completed"]},
+        "defers": {"batched": b["defers"], "unbatched": u["defers"]},
+        "ticks": {"batched": arms["batched"]["trace"]["ticks"],
+                  "unbatched": arms["unbatched"]["trace"]["ticks"]},
+        "degraded_ticks": {
+            "batched": arms["batched"]["trace"]["degraded_chip_ticks"],
+            "unbatched": arms["unbatched"]["trace"]["degraded_chip_ticks"]},
+    }
+    rows.append({**row(
+        f"serve_batching.{N_CHIPS}chips.batched_vs_unbatched",
+        arms["batched"]["wall_us"],
+        f"tok/J={tpj['batched']:.2f}b/{tpj['unbatched']:.2f}u "
+        f"(x{tpj_gain:.2f}) goodput x{goodput_gain:.2f} "
+        f"p99={p99['batched']:.2f}s/{p99['unbatched']:.2f}s "
+        f"completed={b['completed']}b/{u['completed']}u/{len(trace)}req"),
+        "bench": "serve_batching",
+        "record": record})
+
+    # -- migration vs drain-only in the forced-pin scenario ---------------
+    mig_trace = bursty_trace(MIG_REQUESTS, seed=sr.SEED,
+                             quiet_rate_hz=8.0 * MIG_CHIPS / BASE_CHIPS * 4,
+                             burst_rate_hz=40.0 * MIG_CHIPS / BASE_CHIPS * 4,
+                             decode_mean=96.0)
+    mig = {}
+    for arm, after in (("migrate", MIG_AFTER), ("drain", None)):
+        eng, ledger, wall_us = _run(MIG_CHIPS, mig_trace, capacity=4,
+                                    batch_cap=4,
+                                    migrate_after_ticks=after)
+        mig[arm] = {"summary": ledger.summary(), "trace": eng.last_trace,
+                    "wall_us": wall_us,
+                    "events": len(ledger.migration_events)}
+    dct = {a: mig[a]["trace"]["degraded_chip_ticks"] for a in mig}
+    rdt = {a: mig[a]["trace"]["resident_degraded_ticks"] for a in mig}
+    n_migs = mig["migrate"]["summary"]["migrations"]
+    mig_ratio = dct["migrate"] / max(dct["drain"], 1e-12)
+    record = {
+        "n_chips": MIG_CHIPS, "n_requests": MIG_REQUESTS,
+        "steps": MAX_TICKS, "capacity": 4, "batch_cap": 4,
+        "seed": sr.SEED, "migrate_after_ticks": MIG_AFTER,
+        "migrations": n_migs,
+        "migration_stall_s": mig["migrate"]["summary"][
+            "migration_stall_s"],
+        "degraded_chip_ticks": dct,
+        "degraded_ratio": round(mig_ratio, 4),
+        "resident_degraded_ticks": rdt,
+        "completed": {a: mig[a]["summary"]["completed"] for a in mig},
+        "tokens_per_joule_by_arm": {
+            a: mig[a]["summary"]["tokens_per_joule"] for a in mig},
+        "p99_latency_s_by_arm": {
+            a: mig[a]["summary"]["p99_latency_s"] for a in mig},
+    }
+    rows.append({**row(
+        f"serve_batching.{MIG_CHIPS}chips.migrate_vs_drain",
+        mig["migrate"]["wall_us"],
+        f"degraded_ticks={dct['migrate']}m/{dct['drain']}d "
+        f"(x{mig_ratio:.2f}) migrations={n_migs} "
+        f"completed={record['completed']['migrate']}m/"
+        f"{record['completed']['drain']}d/{MIG_REQUESTS}req"),
+        "bench": "serve_batching",
+        "record": record})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

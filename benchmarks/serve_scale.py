@@ -75,11 +75,14 @@ def _trace(n_chips: int):
                         burst_rate_hz=40.0 * scale, decode_mean=48.0)
 
 
-def _engine(n_chips: int):
+def _engine(n_chips: int, *, capacity: int = CAPACITY,
+            batch_cap: "int | None" = None, decode_profile=None):
     """The serve_router bench world at `n_chips` (same fleet seed, same
     SOR-learning envelope-blind controller, same load-coupled frontier
     observables) — a fresh engine per timed path so neither run rides the
-    other's learned state."""
+    other's learned state. `capacity`/`batch_cap`/`decode_profile` let
+    benchmarks/serve_batching.py build the continuous-batching variants
+    of the same world."""
     from repro.configs import get_config
     from repro.models import registry
     from repro.serve.engine import ServeEngine
@@ -92,9 +95,11 @@ def _engine(n_chips: int):
                               name="envelope-blind-walk"),
         sor=sr.SOR_CFG)
     eng = ServeEngine(cfg, params, max_len=24, batch_size=2,
-                      prefill_profile=sr.PROFILE, decode_profile=sr.PROFILE,
+                      prefill_profile=sr.PROFILE,
+                      decode_profile=decode_profile or sr.PROFILE,
                       fleet=fs, controller=ctrl,
-                      router=HeadroomRouter(capacity=CAPACITY))
+                      router=HeadroomRouter(capacity=capacity),
+                      batch_cap=batch_cap)
     return eng, sr._make_observe(fs, n_chips)
 
 

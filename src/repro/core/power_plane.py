@@ -182,6 +182,46 @@ def step_time_s(profile: StepProfile, state: PowerPlaneState,
     return overlap * t_max + (1.0 - overlap) * t_sum
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchShares:
+    """How much of each roofline term a continuous-batching decode batch
+    SHARES across its resident lanes (1.0 = fully amortized, one copy of
+    the work serves every lane; 0.0 = per-lane, the term scales linearly
+    with batch size). Decode FLOPs are per-token (nothing shared); the HBM
+    term is dominated by the weights read, which one batched matmul
+    amortizes over every lane; collectives carry mostly weight-sharded
+    traffic with a per-lane activation tail."""
+    flops: float = 0.0
+    hbm: float = 0.9
+    ici: float = 0.7
+
+
+def batched_lane_time_s(t_comp, t_mem, t_coll, lanes,
+                        shares: BatchShares = BatchShares(),
+                        overlap: float = 1.0) -> jnp.ndarray:
+    """Per-lane step time of a `lanes`-deep continuous decode batch, from
+    the single-lane roofline terms: each term grows by its UNSHARED
+    fraction per extra lane,
+
+        t_term' = t_term * (1 + (1 - share_term) * (b - 1)),  b = max(lanes, 1)
+
+    and the terms recombine exactly like `step_time_s` (max under perfect
+    overlap, blended toward the sum below it). Every lane advances one
+    token per batched step, so chip throughput is `b / t_lane` — sublinear
+    in b through the unshared fractions, the roofline's diminishing
+    return. At b == 1 every scale factor is exactly 1.0f, so the result is
+    BITWISE equal to `step_time_s` on the same terms — the batch-cap=1
+    oracle guarantee the serve engine's fused tick is pinned on."""
+    b = jnp.maximum(jnp.asarray(lanes, jnp.float32), 1.0)
+    extra = b - 1.0
+    tc = t_comp * (1.0 + jnp.float32(1.0 - shares.flops) * extra)
+    tm = t_mem * (1.0 + jnp.float32(1.0 - shares.hbm) * extra)
+    tl = t_coll * (1.0 + jnp.float32(1.0 - shares.ici) * extra)
+    t_max = jnp.maximum(tc, jnp.maximum(tm, tl))
+    t_sum = tc + tm + tl
+    return overlap * t_max + (1.0 - overlap) * t_sum
+
+
 def chip_power_w_jnp(state: PowerPlaneState, util_mxu, util_hbm, util_ici,
                      spec: ChipSpec = V5E,
                      variation: dict | None = None) -> jnp.ndarray:

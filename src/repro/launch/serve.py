@@ -52,7 +52,31 @@ def main():
                     help="skip idle tick gaps (empty queue, no resident "
                          "work) by jumping simulated time to the next "
                          "arrival — fused tick path only")
+    ap.add_argument("--batch-cap", type=int, default=0,
+                    help="continuous batching: each chip decodes a "
+                         "token-level batch over up to BATCH_CAP resident "
+                         "lanes at the shared-roofline per-lane rate "
+                         "(0 = historical full-rate-per-slot model; "
+                         "--router only — the cap becomes the router's "
+                         "lane capacity)")
+    ap.add_argument("--migrate-after-ticks", type=int, default=0,
+                    help="in-flight migration: evacuate a chip's resident "
+                         "decode lanes after its pinned/over-bound flag "
+                         "held this many consecutive ticks (0 = off; "
+                         "needs --router headroom — round-robin has no "
+                         "migration planner)")
     args = ap.parse_args()
+    if args.batch_cap < 0:
+        ap.error(f"--batch-cap must be >= 0, got {args.batch_cap}")
+    if args.migrate_after_ticks < 0:
+        ap.error(f"--migrate-after-ticks must be >= 0, got "
+                 f"{args.migrate_after_ticks}")
+    if args.batch_cap and args.router == "none":
+        ap.error("--batch-cap batches a router's lanes; pass --router "
+                 "headroom (or roundrobin)")
+    if args.migrate_after_ticks and args.router != "headroom":
+        ap.error("--migrate-after-ticks needs the headroom router's "
+                 "migration planner; pass --router headroom")
 
     cfg = get_config(args.arch, tiny=args.tiny or True)
     if cfg.family == "encdec":
@@ -83,16 +107,20 @@ def main():
         # would (correctly) shed the whole trace. Keep pinned chips
         # eligible here; benchmarks/serve_router.py and the tests
         # exercise the drain semantics against a frontier-error world.
-        router = (HeadroomRouter(capacity=args.batch, drain_pinned=False)
+        # --batch-cap sets the lane capacity (lanes ARE the router's
+        # slots); without it the historical --batch slot count stands
+        lanes = args.batch_cap or args.batch
+        router = (HeadroomRouter(capacity=lanes, drain_pinned=False)
                   if args.router == "headroom"
-                  else RoundRobinRouter(capacity=args.batch))
+                  else RoundRobinRouter(capacity=lanes))
     engine = ServeEngine(
         cfg, params, max_len=args.prompt_len + args.max_new + 8,
         batch_size=args.batch,
         prefill_profile=StepProfile(2.0 * n * args.batch * args.prompt_len,
                                     2.0 * n, 0.0),
         decode_profile=StepProfile(2.0 * n * args.batch, 2.0 * n, 0.0),
-        controller=controller, fleet=fleet, router=router)
+        controller=controller, fleet=fleet, router=router,
+        batch_cap=args.batch_cap or None)
     if router is not None:
         # routed serving: place a seeded bursty trace by per-rail headroom
         # (docs/serve.md) and report the per-request SLO ledger
@@ -108,7 +136,9 @@ def main():
         ledger = engine.serve_trace(trace, tick_s=tick_s,
                                     max_ticks=int(span / tick_s) + 400,
                                     fused=fused,
-                                    fast_forward=args.fast_forward)
+                                    fast_forward=args.fast_forward,
+                                    migrate_after_ticks=(
+                                        args.migrate_after_ticks or None))
         print(f"{cfg.name} ({n/1e6:.1f}M): routed {len(trace)} requests "
               f"over {engine.n_chips} chips ({args.router})")
         print("trace:", engine.last_trace)

@@ -34,10 +34,11 @@ from repro.core.control_plane import (RAIL_LANES, InGraphRailController,
                                       sharded_control_round, with_sor)
 from repro.core.hwspec import FleetSpec
 from repro.core.policy import WorstChipGate
-from repro.core.power_plane import (PowerPlaneState, StepProfile,
-                                    account_and_observe,
+from repro.core.power_plane import (BatchShares, PowerPlaneState,
+                                    StepProfile, account_and_observe,
                                     account_fleet_and_observe,
-                                    chip_power_w_jnp, step_time_s)
+                                    batched_lane_time_s, chip_power_w_jnp,
+                                    step_time_s)
 from repro.core.rails import TPU_V5E_RAIL_MAP
 from repro.core.telemetry import scalar_view
 from repro.models import registry
@@ -74,7 +75,9 @@ class ServeEngine:
                  sor: "sor_mod.SorConfig | None" = None,
                  admission_gate: bool = False,
                  router=None, mesh=None,
-                 shard_control: "bool | None" = None):
+                 shard_control: "bool | None" = None,
+                 batch_cap: "int | None" = None,
+                 batch_shares: "BatchShares | None" = None):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg)
@@ -123,6 +126,33 @@ class ServeEngine:
                              "fleet=FleetSpec (n_chips=1 degenerates to the "
                              "plain engine)")
         self.last_trace: dict | None = None
+        # continuous batching: `batch_cap=B` makes each chip a token-level
+        # decode batch over its B resident lanes — the fused tick's rate
+        # model shares the roofline terms across lanes (batched_lane_time_s)
+        # instead of granting every slot the chip's full single-lane rate.
+        # Lanes ARE the router's slots, so the cap must equal the router's
+        # capacity; None keeps the historical full-rate-per-slot model, and
+        # batch_cap=1 degenerates to it EXACTLY (the rate model is bitwise
+        # the base model at b=1), so both reuse the unbatched tick graph —
+        # the PR-9 ledger bit-equality oracle.
+        if batch_cap is not None:
+            if router is None:
+                raise ValueError("batch_cap batches a chip's resident "
+                                 "lanes; pass router= (the lanes are the "
+                                 "router's slots)")
+            if batch_cap < 1:
+                raise ValueError(f"batch_cap must be >= 1, got {batch_cap}")
+            if batch_cap != router.capacity:
+                raise ValueError(
+                    f"batch_cap={batch_cap} must equal the router's "
+                    f"capacity ({router.capacity}) — lanes are the "
+                    f"router's slots, one number describes both")
+        self.batch_cap = batch_cap
+        self.batch_shares = batch_shares or BatchShares()
+        self._batched = batch_cap is not None and batch_cap > 1
+        if batch_shares is not None and batch_cap is None:
+            raise ValueError("batch_shares= tunes the batched rate model; "
+                             "pass batch_cap= as well")
         self.prefill_profile = prefill_profile or StepProfile(1e9, 1e9, 0.0)
         self.decode_profile = decode_profile or StepProfile(1e8, 1e9, 0.0)
         self.stats = ServeStats()
@@ -279,7 +309,9 @@ class ServeEngine:
                     error_bound: float = 5e-3, degrade: float = 0.5,
                     prefill_speedup: float = 8.0,
                     fused: "bool | None" = None,
-                    fast_forward: bool = False):
+                    fast_forward: bool = False,
+                    migrate_after_ticks: "int | None" = None,
+                    migrate_stall_s_per_token: float = 1e-3):
         """Route a seeded traffic trace (`serve/traffic.py`) over the fleet
         and return the per-request SLO ledger (`serve/router.py`).
 
@@ -332,6 +364,19 @@ class ServeEngine:
         run across idle gaps (default off; `last_trace` reports the ticks
         skipped).
 
+        `migrate_after_ticks=K` (fused path, headroom-planner routers
+        only) arms in-flight migration: a chip whose pinned/over-bound
+        flag has held for K consecutive ticks gets its resident
+        decode-phase lanes re-placed by `router.plan_migration` onto the
+        deepest-headroom unpinned chips, most-decode-left first. A
+        migrated lane pays a KV-transfer stall of
+        `migrate_stall_s_per_token x tokens processed so far` before it
+        progresses again (it occupies its destination lane throughout),
+        and the ledger records a "migrated" event with source/destination.
+        Sustained `pinned-drain` pressure thereby MOVES work instead of
+        only deferring admits; a triggered chip that keeps lanes (no
+        eligible destination) re-arms after another K ticks.
+
         `tick_s` defaults to the fleet-mean decode step time at the current
         operating point. Deterministic given (trace, observe, controller):
         placement ties break by chip index and all randomness lives in the
@@ -360,6 +405,24 @@ class ServeEngine:
         if fast_forward and not fused:
             raise ValueError("fast_forward rides the fused tick path; "
                              "drop fused=False (or the host controller)")
+        if self._batched and not fused:
+            raise ValueError(
+                "continuous batching (batch_cap >= 2) rides the fused "
+                "tick path — the loop path is kept verbatim as the "
+                "batch-cap=1 semantics oracle; drop fused=False")
+        if migrate_after_ticks is not None:
+            if migrate_after_ticks < 1:
+                raise ValueError(f"migrate_after_ticks must be >= 1, got "
+                                 f"{migrate_after_ticks}")
+            if not fused:
+                raise ValueError("migration rides the fused tick path; "
+                                 "drop fused=False")
+            if not callable(getattr(self.router, "plan_migration", None)):
+                raise ValueError(
+                    "migrate_after_ticks needs a router with a migration "
+                    "planner (HeadroomRouter.plan_migration) — the "
+                    "round-robin baseline is headroom-blind and cannot "
+                    "pick destinations")
         if tick_s is None:
             tick_s = float(scalar_view(
                 step_time_s(self.decode_profile, self.plane)))
@@ -369,8 +432,10 @@ class ServeEngine:
                   error_bound=error_bound, degrade=degrade,
                   prefill_speedup=prefill_speedup)
         if fused:
-            return self._serve_trace_fused(arrivals, ledger,
-                                           fast_forward=fast_forward, **kw)
+            return self._serve_trace_fused(
+                arrivals, ledger, fast_forward=fast_forward,
+                migrate_after_ticks=migrate_after_ticks,
+                migrate_stall_s_per_token=migrate_stall_s_per_token, **kw)
         return self._serve_trace_loop(arrivals, ledger, **kw)
 
     # -- fused path: one jitted device round + vectorized host bookkeeping ----
@@ -394,7 +459,13 @@ class ServeEngine:
         packed `[13, n_chips]` float32 host bundle — rows 0-3 `e_tick`,
         `e_busy`, `t_step`, `over`; rows 4-6 per-rail floors; rows 7-9
         per-rail headroom; rows 10-12 per-rail pinned masks (RAIL_LANES
-        order) — the tick's ONLY device->host transfer."""
+        order) — the tick's ONLY device->host transfer. A continuous-
+        batching engine (`batch_cap >= 2`) grows it to `[15, n_chips]`:
+        row 13 the effective batch depth the rate was computed at
+        (`max(round(busy_frac * batch_cap), 1)` — occupancy recovered
+        exactly from the busy fraction, so the tick signature does not
+        change) and row 14 the batched PER-LANE step time
+        (`batched_lane_time_s` over this tick's roofline terms)."""
         spec = self.fleet_spec
         variation = {k: jnp.asarray(v) for k, v in spec.variation().items()}
         profile = self.decode_profile
@@ -406,6 +477,9 @@ class ServeEngine:
                    and hasattr(c, "control_step_sor"))
         sharded = self._sharded_round
         ts = jnp.float32(tick_s)
+        batched = self._batched
+        cap = jnp.float32(self.batch_cap) if batched else None
+        shares = self.batch_shares
 
         def _b(x):
             return jnp.broadcast_to(
@@ -463,13 +537,23 @@ class ServeEngine:
                               for f in ("v_core", "v_hbm", "v_io")])
             pinned = pinned_lane_masks(plane, request, rail_map,
                                        envelope=env)
-            bundle = jnp.concatenate([
+            rows = [
                 jnp.stack([_b(e_tick), _b((p_eff - p_idle) * ts),
                            _b(m["t_step_s"]), over.astype(jnp.float32)]),
                 floors,
                 held - floors,
                 pinned.astype(jnp.float32),
-            ])
+            ]
+            if batched:
+                # effective batch depth from the busy fraction (occ/cap is
+                # exact in f32 for occ <= cap; round kills the dust) and
+                # the shared-roofline per-lane step time it implies
+                b_eff = jnp.maximum(jnp.round(_b(busy_frac) * cap), 1.0)
+                t_lane = batched_lane_time_s(
+                    _b(m["t_comp_s"]), _b(m["t_mem_s"]), _b(m["t_coll_s"]),
+                    b_eff, shares)
+                rows.append(jnp.stack([b_eff, t_lane]))
+            bundle = jnp.concatenate(rows)
             return plane, sor_state, bundle, request, env
 
         donate = (1,) if (use_sor and getattr(c, "donate", False)) else ()
@@ -477,12 +561,16 @@ class ServeEngine:
 
     def _serve_trace_fused(self, arrivals, ledger, *, max_ticks, observe,
                            tick_s, error_bound, degrade, prefill_speedup,
-                           fast_forward):
+                           fast_forward, migrate_after_ticks=None,
+                           migrate_stall_s_per_token=1e-3):
         """The fused serve loop: per tick, ONE jitted device dispatch and
         ONE packed bundle transfer; slot progress/finish bookkeeping runs
-        as numpy `[n_chips, capacity]` arrays (no per-slot dicts). Ledger
-        and stats are pinned equal to `_serve_trace_loop` on the same
-        world (tests/test_serve_scale.py)."""
+        as numpy `[n_chips, capacity]` lane arrays (no per-slot dicts).
+        Ledger and stats are pinned equal to `_serve_trace_loop` on the
+        same world (tests/test_serve_scale.py); a batched engine reads its
+        per-lane rate from the bundle's grown rows, and migration (when
+        armed) re-places decode-phase lanes off chips whose pinned/over
+        flag held for K ticks, before placement sees the tick's queue."""
         from repro.serve.router import headroom_from_packed
         n = self.n_chips
         cap = self.router.capacity
@@ -514,12 +602,20 @@ class ServeEngine:
         slot_req = np.full((n, cap), -1, np.int64)   # arrival index; -1 free
         slot_prefill = np.zeros((n, cap), np.float64)
         slot_decode = np.zeros((n, cap), np.float64)
+        # KV-transfer stall left per lane (seconds): a freshly migrated
+        # lane occupies its destination but makes no progress until its
+        # stall drains
+        slot_stall = np.zeros((n, cap), np.float64)
+        migrating = migrate_after_ticks is not None
+        streak = np.zeros(n, np.int64)   # consecutive pinned/over ticks
+        n_migrations = 0
 
         pending: collections.deque = collections.deque()  # arrival indices
         ai = 0
         t = 0.0
         max_occ = 0
         degraded_ticks = 0
+        resident_degraded_ticks = 0
         ticks_run = 0
         ff_ticks = 0
 
@@ -556,6 +652,12 @@ class ServeEngine:
             headroom = headroom_from_packed(b[7:10])
             pinned_rows = b[10:13] > 0.5
             pinned = pinned_rows.any(axis=0)
+            # batched engines progress lanes at the shared-roofline
+            # per-lane step time the tick computed (row 14); unbatched
+            # (and batch_cap=1) engines keep the base step time — the
+            # SAME host arithmetic either way, so batch_cap=1 stays
+            # bit-equal to the historical path
+            t_rate = b[14] if self._batched else t_step
 
             self.stats.energy_j += float(e_np.mean())
             self.stats.fleet_energy_j += float(e_np.sum())
@@ -566,6 +668,56 @@ class ServeEngine:
                 idx = slot_req[chips, slots]
                 np.add.at(energy_acc, idx, e_busy[chips] / occ[chips])
                 charged[idx] = True
+                resident_degraded_ticks += int((over & (occ > 0)).sum())
+
+            # in-flight migration: a chip whose pinned/over flag held K
+            # consecutive ticks hands its decode-phase lanes to the
+            # planner, most decode-left first; each migrated lane pays a
+            # token-proportional KV-transfer stall at its destination.
+            # Runs BEFORE placement, so this tick's admits see the
+            # post-migration occupancy.
+            if migrating:
+                streak = np.where(pinned | over, streak + 1, 0)
+                trig = streak >= migrate_after_ticks
+                cand = (active & trig[:, None] & (slot_prefill <= 0)
+                        if trig.any() else None)
+                if cand is not None and cand.any():
+                    c_chips, c_slots = np.nonzero(cand)
+                    left = slot_decode[c_chips, c_slots]
+                    order = np.lexsort(
+                        (slot_req[c_chips, c_slots], -left))
+                    reqs = [arrivals[int(slot_req[c_chips[k], c_slots[k]])]
+                            for k in order]
+                    dests = self.router.plan_migration(
+                        reqs, occ, headroom, pinned=pinned, exclude=trig)
+                    for k, dst in zip(order, dests):
+                        if dst is None:
+                            continue
+                        src_c, src_s = int(c_chips[k]), int(c_slots[k])
+                        i = int(slot_req[src_c, src_s])
+                        d_slot = int(np.argmin(slot_req[dst]))  # first free
+                        done_tokens = (req_prefill[i] + req_decode[i]
+                                       - slot_decode[src_c, src_s])
+                        stall_s = float(migrate_stall_s_per_token
+                                        * done_tokens)
+                        slot_req[dst, d_slot] = i
+                        slot_prefill[dst, d_slot] = 0.0
+                        slot_decode[dst, d_slot] = slot_decode[src_c, src_s]
+                        slot_stall[dst, d_slot] = stall_s
+                        slot_req[src_c, src_s] = -1
+                        slot_stall[src_c, src_s] = 0.0
+                        active[dst, d_slot] = True
+                        active[src_c, src_s] = False
+                        occ[dst] += 1
+                        occ[src_c] -= 1
+                        ledger.migrate(arrivals[i].rid, t, src_c, int(dst),
+                                       stall_s=stall_s,
+                                       src_streak=int(streak[src_c]))
+                        n_migrations += 1
+                if trig.any():
+                    # triggered chips had their shot (or nothing to move);
+                    # re-arm after another K hot ticks
+                    streak[trig] = 0
 
             # placement: the whole pending queue in one vectorized router
             # pass, FIFO head-of-line semantics pinned to sequential
@@ -583,6 +735,7 @@ class ServeEngine:
                         arrivals[i].prefill_tokens)
                     slot_decode[chip, slot] = float(
                         arrivals[i].decode_tokens)
+                    slot_stall[chip, slot] = 0.0
                     active[chip, slot] = True
                     occ[chip] += 1
                 if pending:
@@ -601,14 +754,22 @@ class ServeEngine:
                     self.stats.defer_time_s += tick_s
             max_occ = max(max_occ, int(occ.max()) if n else 0)
 
-            # progress: batched decode over the [n_chips, capacity] slot
+            # progress: batched decode over the [n_chips, capacity] lane
             # arrays; over-bound chips deliver degraded goodput this tick
-            rate = tick_s / np.maximum(t_step, 1e-12)
+            rate = tick_s / np.maximum(t_rate, 1e-12)
             if over.any():
                 degraded_ticks += int(over.sum())
             rate = np.where(over, rate * degrade, rate)
             t_end = t + tick_s
             rate2d = np.broadcast_to(rate[:, None], (n, cap))
+            if migrating:
+                # freshly migrated lanes sit out their KV-transfer stall:
+                # they occupy (and count toward the batch) but advance
+                # nothing until the stall drains
+                stalled = active & (slot_stall > 0)
+                if stalled.any():
+                    slot_stall[stalled] -= tick_s
+                    active = active & ~stalled
             in_prefill = active & (slot_prefill > 0)
             if in_prefill.any():
                 slot_prefill[in_prefill] -= (rate2d[in_prefill]
@@ -641,10 +802,13 @@ class ServeEngine:
             "ticks": ticks_run, "tick_s": tick_s,
             "max_occupancy": max_occ, "capacity": cap,
             "degraded_chip_ticks": degraded_ticks,
+            "resident_degraded_ticks": resident_degraded_ticks,
             "unplaced": len(pending),
             "unfinished": int((slot_req >= 0).sum()),
             "fused": True,
             "fast_forward_ticks": ff_ticks,
+            "batch_cap": self.batch_cap,
+            "migrations": n_migrations,
         }
         return ledger
 

@@ -155,6 +155,48 @@ class HeadroomRouter:
             occ[chip] += 1.0
         return out
 
+    def plan_migration(self, requests, occupancy,
+                       headroom: dict[str, np.ndarray],
+                       pinned=None, exclude=None) -> "list[int | None]":
+        """Destinations for in-flight lanes being evacuated off hot chips:
+        one entry per request, the deepest-headroom eligible chip by the
+        SAME score `place` uses (phase-mix headroom blend minus the
+        occupancy term, lowest-index tie-break), or None when no chip is
+        eligible. Unlike `place_batch` an unplaceable request does NOT
+        block the ones behind it — migration is best-effort, not FIFO.
+        Eligibility: below capacity, not `exclude`d (the source chips
+        being evacuated), and never pinned — pinned chips are excluded
+        regardless of `drain_pinned`, since parking evacuated work on a
+        chip already at its envelope floor recreates the problem being
+        solved. Occupancy advances per granted destination, so one
+        planning pass spreads a whole evacuation."""
+        if not requests:
+            return []
+        occ = np.asarray(occupancy, np.float64).copy()
+        n = occ.shape[0]
+        elig = np.ones(n, bool)
+        if pinned is not None:
+            elig &= ~np.asarray(pinned, bool)
+        if exclude is not None:
+            elig &= ~np.asarray(exclude, bool)
+        w = np.asarray([r.decode_fraction for r in requests], np.float64)
+        zeros = np.zeros(n, np.float64)
+        h_d = np.asarray(headroom.get(self.decode_rail, zeros), np.float64)
+        h_p = np.asarray(headroom.get(self.prefill_rail, zeros), np.float64)
+        base = (1.0 - w)[:, None] * h_p[None, :] + w[:, None] * h_d[None, :]
+        out: "list[int | None]" = []
+        for k in range(len(requests)):
+            eligible = elig & (occ < self.capacity)
+            if not eligible.any():
+                out.append(None)
+                continue
+            score = base[k] - self.occupancy_weight_v * occ / self.capacity
+            score = np.where(eligible, score, -np.inf)
+            chip = int(np.argmax(score))
+            out.append(chip)
+            occ[chip] += 1.0
+        return out
+
 
 @dataclasses.dataclass
 class RoundRobinRouter:
@@ -226,6 +268,8 @@ class _RequestRecord:
     energy_j: float = 0.0        # modeled busy-energy share while resident
     defers: int = 0
     defer_time_s: float = 0.0
+    migrations: int = 0          # in-flight moves off pinned/over chips
+    stall_time_s: float = 0.0    # KV-transfer stall paid across migrations
 
 
 class RequestLedger:
@@ -240,6 +284,10 @@ class RequestLedger:
         self._order: list[int] = []
         self.fleet_energy_j = 0.0           # all chips, busy + idle
         self.defers_by_reason: dict[str, int] = {}
+        # "migrated" lifecycle events, trace order: one dict per in-flight
+        # move (rid, t_s, src, dst, stall_s, src_streak — the pinned/over
+        # streak length that triggered the evacuation)
+        self.migration_events: list[dict] = []
 
     def __len__(self) -> int:
         return len(self._recs)
@@ -274,6 +322,33 @@ class RequestLedger:
         rec.defer_time_s += float(dt_s)
         self.defers_by_reason[reason] = (
             self.defers_by_reason.get(reason, 0) + 1)
+
+    def migrate(self, rid: int, t_s: float, src: int, dst: int,
+                stall_s: float = 0.0, src_streak: int = 0) -> None:
+        """Record an in-flight move of a resident request from chip `src`
+        to chip `dst` (the "migrated" lifecycle event): the record's chip
+        becomes the destination, and the KV-transfer stall it pays is
+        accumulated. Guards mirror the rest of the lifecycle — migrating
+        an unplaced or finished request raises, as does a source that
+        disagrees with where the ledger believes the request lives."""
+        rec = self._recs[rid]
+        if rec.t_placed_s is None:
+            raise ValueError(f"request {rid} migrated before placement")
+        if rec.t_done_s is not None:
+            raise ValueError(f"request {rid} migrated after completion")
+        if rec.chip != int(src):
+            raise ValueError(f"request {rid} lives on chip {rec.chip}, "
+                             f"not the claimed source {src}")
+        if int(src) == int(dst):
+            raise ValueError(f"request {rid}: migration source == "
+                             f"destination ({src})")
+        rec.chip = int(dst)
+        rec.migrations += 1
+        rec.stall_time_s += float(stall_s)
+        self.migration_events.append({
+            "rid": rid, "t_s": float(t_s), "src": int(src),
+            "dst": int(dst), "stall_s": float(stall_s),
+            "src_streak": int(src_streak)})
 
     def charge(self, rid: int, joules: float) -> None:
         self._recs[rid].energy_j += float(joules)
@@ -321,6 +396,8 @@ class RequestLedger:
             "fleet_energy_j": self.fleet_energy_j,
             "tokens_per_joule": tokens / max(self.fleet_energy_j, 1e-12),
             "request_energy_j": sum(r.energy_j for r in recs),
+            "migrations": sum(r.migrations for r in recs),
+            "migration_stall_s": sum(r.stall_time_s for r in recs),
         }
         for label, vals in (("latency_s", latency), ("queue_s", queue)):
             out[f"p50_{label}"] = self.percentile(vals, 50.0)

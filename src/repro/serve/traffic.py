@@ -61,6 +61,35 @@ class TrafficTrace:
         return sum(r.decode_tokens for r in self.requests)
 
 
+def steady_trace(
+    n_requests: int,
+    *,
+    rate_hz: float = 10.0,
+    t_start_s: float = 0.0,
+    prefill_tokens: int = 8,
+    decode_tokens: int = 48,
+) -> TrafficTrace:
+    """Deterministic evenly-spaced arrivals with FIXED token counts — no
+    randomness at all. The forced-pin migration scenario and the
+    fast-forward tests want full control of exactly when work lands and
+    how big it is; a seeded bursty trace can only approximate that."""
+    if n_requests < 1:
+        raise ValueError(f"n_requests must be >= 1, got {n_requests}")
+    if rate_hz <= 0:
+        raise ValueError("rate_hz must be positive")
+    requests = tuple(
+        Request(rid=rid, t_arrival_s=float(t_start_s + rid / rate_hz),
+                prefill_tokens=int(prefill_tokens),
+                decode_tokens=int(decode_tokens))
+        for rid in range(n_requests))
+    metadata = {
+        "kind": "steady", "n_requests": n_requests, "rate_hz": rate_hz,
+        "t_start_s": t_start_s, "prefill_tokens": prefill_tokens,
+        "decode_tokens": decode_tokens,
+    }
+    return TrafficTrace(requests=requests, seed=0, metadata=metadata)
+
+
 def bursty_trace(
     n_requests: int,
     seed: int = 0,

@@ -1,0 +1,423 @@
+"""Continuous batching + in-flight migration tests (docs/serve.md
+"continuous batching & migration"):
+
+  * rate model — `batched_lane_time_s` at b=1 is BITWISE `step_time_s`
+    (every scale factor is exactly 1.0f), monotone in lanes, and inert
+    when every roofline term is fully shared;
+  * batch-cap=1 oracle — a `batch_cap=1`, migration-off engine reproduces
+    the PR-9 fused ledger bit-equal on BOTH routers (same tick graph by
+    construction: `batch_cap=1` never builds the batched rows);
+  * batched throughput — on a memory-bound decode profile a cap=4 fleet
+    drains the same backlog in strictly fewer ticks than cap=1 (the
+    shared-HBM amortization the bench measures at scale);
+  * migration planner — `plan_migration` picks deepest-headroom eligible
+    chips, never pinned/excluded/full ones, spreads an evacuation by
+    advancing occupancy, and is best-effort (None entries do not block);
+  * migration ledger — the "migrated" lifecycle event moves the record's
+    chip, accumulates stall, and guards against unplaced/finished/
+    wrong-source/self moves;
+  * migrate vs drain — on the warmed bench world under saturating load,
+    `migrate_after_ticks=K` strictly reduces degraded chip-ticks vs
+    drain_pinned-only and every completed migrated request ends on its
+    final destination chip;
+  * validation — batching/migration knob misuse fails loudly in the
+    engine and the serve launcher;
+  * fast-forward — an arrival strictly inside a skipped idle gap (off the
+    tick grid) is re-entered at the same tick the walked run reaches.
+"""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hwspec import FleetSpec
+from repro.core.power_plane import (BatchShares, PowerPlaneState,
+                                    batched_lane_time_s, step_terms,
+                                    step_time_s)
+from repro.serve.router import (HeadroomRouter, RequestLedger,
+                                RoundRobinRouter)
+from repro.serve.traffic import Request, bursty_trace, steady_trace
+
+from benchmarks import serve_batching as sb
+from benchmarks import serve_router as sr
+from tests.test_serve_scale import (_assert_analog_close,
+                                    _bench_world_engine, _discrete, _mesh,
+                                    _tiny_engine, multi_device)
+
+
+# -- the batched lane-rate model ----------------------------------------------
+
+def test_lane_time_b1_bitwise_equals_step_time():
+    """At b=1 every per-term scale factor is exactly (1 + share*0) = 1.0f,
+    so the recombination is the SAME f32 arithmetic as step_time_s — the
+    identity the batch-cap=1 ledger oracle rests on."""
+    fs = FleetSpec.sample(6, seed=sr.SEED)
+    plane = PowerPlaneState.from_fleet(fs)
+    var = fs.variation()
+    tc, tm, tl = step_terms(sr.PROFILE, plane, variation=var)
+    lane = batched_lane_time_s(tc, tm, tl, jnp.ones(6, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(lane), np.asarray(step_time_s(sr.PROFILE, plane,
+                                                 variation=var)))
+
+
+def test_lane_time_monotone_and_sublinear():
+    tc = jnp.float32(0.001)
+    tm = jnp.float32(0.010)
+    tl = jnp.float32(0.006)
+    prev = None
+    for b in (1, 2, 4, 8, 16):
+        t = float(batched_lane_time_s(tc, tm, tl, b))
+        if prev is not None:
+            assert t > prev[1]                      # more lanes, slower lane
+            # ...but sublinearly: chip throughput b/t keeps growing while
+            # a shared term dominates
+            assert b / t > prev[0] / prev[1]
+        prev = (b, t)
+
+
+def test_lane_time_fully_shared_terms_are_free():
+    """shares=1.0 everywhere: one copy of the work serves every lane, so
+    the lane time must not move with b at all."""
+    shares = BatchShares(flops=1.0, hbm=1.0, ici=1.0)
+    tc, tm, tl = (jnp.float32(x) for x in (0.002, 0.010, 0.006))
+    t1 = float(batched_lane_time_s(tc, tm, tl, 1, shares))
+    t16 = float(batched_lane_time_s(tc, tm, tl, 16, shares))
+    assert t1 == t16 == pytest.approx(0.010)
+
+
+# -- batch-cap=1 + migration-off: the PR-9 ledger bit-equality oracle ---------
+
+@pytest.mark.parametrize("make_router", [
+    lambda: HeadroomRouter(capacity=1),
+    lambda: RoundRobinRouter(capacity=1),
+], ids=["headroom", "roundrobin"])
+def test_batch_cap_one_bit_equal_to_unbatched_fused(make_router):
+    """batch_cap=1 must reproduce the PR-9 fused path's ledger bit-equal:
+    the engine never builds the batched tick rows at cap 1, so both runs
+    execute the SAME jitted program — discrete ledger AND analog state
+    are exactly equal, not merely close."""
+    trace = bursty_trace(16, seed=sr.SEED, quiet_rate_hz=8.0,
+                         burst_rate_hz=40.0, decode_mean=48.0)
+    runs = {}
+    for cap in (None, 1):
+        eng, observe = _bench_world_engine(make_router(), n_chips=6,
+                                           batch_cap=cap)
+        led = eng.serve_trace(trace, observe=observe, max_ticks=900,
+                              error_bound=sr.ERROR_BOUND)
+        runs[cap] = (eng, led)
+    eng_n, led_n = runs[None]
+    eng_1, led_1 = runs[1]
+    assert not eng_1._batched and eng_1.last_trace["batch_cap"] == 1
+    assert eng_1.last_trace["migrations"] == 0
+    assert _discrete(eng_n, led_n) == _discrete(eng_1, led_1)
+    assert led_n.fleet_energy_j == led_1.fleet_energy_j
+    for ra, rb in zip(led_n.records(), led_1.records()):
+        assert ra.energy_j == rb.energy_j
+    for field in ("v_core", "v_hbm", "v_io", "energy_j"):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(getattr(eng_n.plane, field))),
+            np.asarray(jax.device_get(getattr(eng_1.plane, field))),
+            err_msg=field)
+
+
+# -- batched throughput on a memory-bound decode profile ----------------------
+
+def test_batched_backlog_drains_in_fewer_ticks():
+    """A pure backlog (every request at t=0) on the bench's decode-shaped
+    profile: the cap=4 fleet must finish in strictly fewer ticks than the
+    cap=1 fleet — the weights-read amortization continuous batching is
+    for. No observe world: this isolates the lane-rate model from the
+    pinning dynamics the migration tests cover."""
+    trace = steady_trace(16, rate_hz=1e9, prefill_tokens=8,
+                         decode_tokens=48)
+    ticks = {}
+    for cap in (1, 4):
+        fs = FleetSpec.sample(4, seed=sr.SEED)
+        eng = _tiny_engine(fleet=fs, router=HeadroomRouter(capacity=cap),
+                           batch_cap=cap,
+                           decode_profile=sb.DECODE_PROFILE)
+        led = eng.serve_trace(trace, max_ticks=3000)
+        assert led.summary()["completed"] == 16
+        ticks[cap] = eng.last_trace["ticks"]
+    assert ticks[4] < ticks[1]
+    # the gain is real amortization, not a rounding artifact
+    assert ticks[1] / ticks[4] > 1.5
+
+
+def test_steady_trace_is_deterministic_and_even():
+    tr = steady_trace(5, rate_hz=10.0, t_start_s=1.0, prefill_tokens=4,
+                      decode_tokens=16)
+    assert [r.t_arrival_s for r in tr.requests] == [
+        pytest.approx(1.0 + i / 10.0) for i in range(5)]
+    assert all(r.prefill_tokens == 4 and r.decode_tokens == 16
+               for r in tr.requests)
+    assert tr.metadata["kind"] == "steady"
+
+
+# -- the migration planner ----------------------------------------------------
+
+def _hr(core, hbm, io):
+    return {"VDD_CORE": np.asarray(core, np.float64),
+            "VDD_HBM": np.asarray(hbm, np.float64),
+            "VDD_IO": np.asarray(io, np.float64)}
+
+
+def _dreq(rid, decode=32, prefill=0):
+    return Request(rid=rid, t_arrival_s=0.0, prefill_tokens=prefill,
+                   decode_tokens=decode)
+
+
+def test_plan_migration_prefers_deepest_headroom_skips_hot_chips():
+    r = HeadroomRouter(capacity=2)
+    occ = np.array([2, 0, 0, 0])
+    hr = _hr([0.3, 0.01, 0.2, 0.1], [0.3, 0.01, 0.2, 0.1],
+             [0.3, 0.01, 0.2, 0.1])
+    exclude = np.array([True, False, False, False])
+    dests = r.plan_migration([_dreq(0), _dreq(1), _dreq(2)], occ, hr,
+                             exclude=exclude)
+    # deepest headroom first (chip 2), occupancy advances: 2, 2, then 3
+    assert dests == [2, 2, 3]
+
+
+def test_plan_migration_never_targets_pinned_even_with_drain_off():
+    r = HeadroomRouter(capacity=4, drain_pinned=False)
+    occ = np.array([0, 0])
+    hr = _hr([0.5, 0.1], [0.5, 0.1], [0.5, 0.1])
+    pinned = np.array([True, False])
+    # chip 0 has far deeper headroom but is pinned: parking evacuated work
+    # there would recreate the problem being solved
+    assert r.plan_migration([_dreq(0)], occ, hr, pinned=pinned) == [1]
+
+
+def test_plan_migration_best_effort_does_not_block():
+    r = HeadroomRouter(capacity=1)
+    occ = np.array([1, 0])
+    hr = _hr([0.1, 0.2], [0.1, 0.2], [0.1, 0.2])
+    # one free lane for two evacuees: first takes it, second gets None,
+    # and a third request (nothing left) also gets None — no head-of-line
+    # blocking, unlike place_batch
+    dests = r.plan_migration([_dreq(0), _dreq(1), _dreq(2)], occ, hr)
+    assert dests == [1, None, None]
+
+
+def test_plan_migration_empty_and_roundrobin_has_no_planner():
+    assert HeadroomRouter(capacity=2).plan_migration([], [0], _hr([0.1],
+                                                    [0.1], [0.1])) == []
+    assert not hasattr(RoundRobinRouter(capacity=2), "plan_migration")
+
+
+# -- the "migrated" lifecycle event -------------------------------------------
+
+def test_ledger_migrate_moves_chip_and_accumulates_stall():
+    led = RequestLedger()
+    led.admit(_dreq(0, decode=32), 0.0)
+    led.place(0, 0.5, chip=3)
+    led.migrate(0, 1.0, src=3, dst=1, stall_s=0.04, src_streak=6)
+    led.migrate(0, 2.0, src=1, dst=2, stall_s=0.02, src_streak=7)
+    led.finish(0, 3.0, tokens_out=32)
+    rec = led.records()[0]
+    assert rec.chip == 2 and rec.migrations == 2
+    assert rec.stall_time_s == pytest.approx(0.06)
+    assert [e["src"] for e in led.migration_events] == [3, 1]
+    assert led.migration_events[0]["src_streak"] == 6
+    s = led.summary()
+    assert s["migrations"] == 2
+    assert s["migration_stall_s"] == pytest.approx(0.06)
+
+
+def test_ledger_migrate_guards():
+    led = RequestLedger()
+    led.admit(_dreq(0), 0.0)
+    with pytest.raises(ValueError, match="before placement"):
+        led.migrate(0, 1.0, src=0, dst=1)
+    led.place(0, 0.5, chip=0)
+    with pytest.raises(ValueError, match="not the claimed source"):
+        led.migrate(0, 1.0, src=2, dst=1)
+    with pytest.raises(ValueError, match="source == destination"):
+        led.migrate(0, 1.0, src=0, dst=0)
+    led.finish(0, 2.0, tokens_out=8)
+    with pytest.raises(ValueError, match="after completion"):
+        led.migrate(0, 3.0, src=0, dst=1)
+
+
+# -- migrate vs drain on the warmed bench world -------------------------------
+
+def _warmed_bench_run(n_chips, cap, trace, migrate_after_ticks):
+    eng, observe = _bench_world_engine(HeadroomRouter(capacity=cap),
+                                       n_chips=n_chips, batch_cap=cap,
+                                       decode_profile=sb.DECODE_PROFILE)
+    sb._warm(eng, observe, n_chips)
+    led = eng.serve_trace(trace, observe=observe, max_ticks=4000,
+                          error_bound=sr.ERROR_BOUND,
+                          migrate_after_ticks=migrate_after_ticks)
+    return eng, led
+
+
+def test_migration_strictly_reduces_degraded_chip_ticks():
+    """The bench's forced-pin scenario at test scale: saturating load on
+    the load-coupled-onset world makes busy chips re-cross the error
+    bound and sit degraded; migration must actually fire AND strictly
+    reduce degraded chip-ticks vs letting pinned chips drain."""
+    n, cap = 8, 4
+    trace = bursty_trace(96, seed=sr.SEED, quiet_rate_hz=16.0,
+                         burst_rate_hz=80.0, decode_mean=96.0)
+    runs = {a: _warmed_bench_run(n, cap, trace, k)
+            for a, k in (("migrate", 6), ("drain", None))}
+    eng_m, led_m = runs["migrate"]
+    eng_d, led_d = runs["drain"]
+    assert eng_m.last_trace["migrations"] > 0
+    assert eng_d.last_trace["migrations"] == 0
+    assert led_d.summary()["migrations"] == 0
+    assert (eng_m.last_trace["degraded_chip_ticks"]
+            < eng_d.last_trace["degraded_chip_ticks"])
+    # both arms still finish the whole trace
+    assert led_m.summary()["completed"] == led_d.summary()["completed"] \
+        == 96
+    # lifecycle consistency: every migrated request's record ends on the
+    # destination of its LAST migration event, pays its stall, and the
+    # event stream never self-moves
+    by_rid = {}
+    for e in led_m.migration_events:
+        assert e["src"] != e["dst"]
+        assert e["src_streak"] >= 6
+        by_rid[e["rid"]] = e
+    assert by_rid
+    recs = {r.rid: r for r in led_m.records()}
+    for rid, e in by_rid.items():
+        assert recs[rid].migrations >= 1
+        assert recs[rid].stall_time_s > 0.0
+        assert recs[rid].chip == e["dst"]
+    s = led_m.summary()
+    assert s["migrations"] == len(led_m.migration_events)
+    assert s["migration_stall_s"] == pytest.approx(
+        sum(e["stall_s"] for e in led_m.migration_events))
+
+
+# -- validation ---------------------------------------------------------------
+
+def test_engine_batching_validation_errors():
+    fs = FleetSpec.sample(2, seed=5)
+    with pytest.raises(ValueError, match="router"):
+        _tiny_engine(fleet=fs, batch_cap=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        _tiny_engine(fleet=fs, router=HeadroomRouter(capacity=2),
+                     batch_cap=0)
+    with pytest.raises(ValueError, match="must equal the router"):
+        _tiny_engine(fleet=fs, router=HeadroomRouter(capacity=3),
+                     batch_cap=2)
+    with pytest.raises(ValueError, match="batch_cap"):
+        _tiny_engine(fleet=fs, router=HeadroomRouter(capacity=2),
+                     batch_shares=BatchShares())
+
+
+def test_serve_trace_batching_validation_errors():
+    fs = FleetSpec.sample(2, seed=5)
+    eng = _tiny_engine(fleet=fs, router=HeadroomRouter(capacity=2),
+                       batch_cap=2)
+    with pytest.raises(ValueError, match="batch-cap=1 semantics oracle"):
+        eng.serve_trace(bursty_trace(3, seed=2), max_ticks=10,
+                        fused=False)
+    with pytest.raises(ValueError, match=">= 1"):
+        eng.serve_trace(bursty_trace(3, seed=2), max_ticks=10,
+                        migrate_after_ticks=0)
+    with pytest.raises(ValueError, match="migration rides the fused"):
+        eng2 = _tiny_engine(fleet=fs, router=HeadroomRouter(capacity=2))
+        eng2.serve_trace(bursty_trace(3, seed=2), max_ticks=10,
+                         fused=False, migrate_after_ticks=3)
+    with pytest.raises(ValueError, match="migration planner"):
+        eng3 = _tiny_engine(fleet=fs, router=RoundRobinRouter(capacity=2))
+        eng3.serve_trace(bursty_trace(3, seed=2), max_ticks=10,
+                         migrate_after_ticks=3)
+
+
+def _launch(*extra):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "minicpm_2b", "--tiny", *extra],
+        capture_output=True, text=True, timeout=120)
+
+
+def test_launcher_rejects_bad_batching_flags():
+    """argparse-level validation fires before any model build, so these
+    subprocesses are cheap."""
+    r = _launch("--batch-cap", "2")
+    assert r.returncode == 2 and "--router" in r.stderr
+    r = _launch("--fleet-chips", "4", "--router", "roundrobin",
+                "--migrate-after-ticks", "3")
+    assert r.returncode == 2 and "headroom" in r.stderr
+    r = _launch("--batch-cap", "-1")
+    assert r.returncode == 2 and ">= 0" in r.stderr
+
+
+# -- fast-forward: arrival strictly inside the skipped gap --------------------
+
+def test_fast_forward_arrival_inside_gap_re_enters_on_time():
+    """The second arrival lands OFF the tick grid, strictly inside the
+    idle gap the fast-forward jump spans: the jump must re-enter at the
+    first tick >= the arrival (never skip past it), reproducing the
+    walked run's placement and completion exactly."""
+    fs = FleetSpec.sample(2, seed=5)
+    trace = [Request(rid=0, t_arrival_s=0.0, prefill_tokens=4,
+                     decode_tokens=8),
+             Request(rid=1, t_arrival_s=3.7001, prefill_tokens=4,
+                     decode_tokens=8)]
+    runs = {}
+    for ff in (False, True):
+        eng = _tiny_engine(fleet=fs, router=HeadroomRouter(capacity=2))
+        led = eng.serve_trace(list(trace), max_ticks=6000, tick_s=1 / 64,
+                              fast_forward=ff)
+        runs[ff] = (eng, led)
+    eng_w, led_w = runs[False]
+    eng_f, led_f = runs[True]
+    assert eng_f.last_trace["fast_forward_ticks"] > 0
+    assert [(r.rid, r.t_placed_s, r.chip, r.t_done_s, r.tokens_out)
+            for r in led_f.records()] == \
+           [(r.rid, r.t_placed_s, r.chip, r.t_done_s, r.tokens_out)
+            for r in led_w.records()]
+    # the re-entry tick is the first grid point at/after the arrival —
+    # placement is never EARLIER than the arrival and less than one tick
+    # after the walked run's own grid hit
+    r1 = led_f.records()[1]
+    assert r1.t_placed_s >= 3.7001
+    assert r1.t_placed_s - 3.7001 < 1 / 64 + 1e-9
+
+
+# -- batched fused tick on a device mesh --------------------------------------
+
+@multi_device
+def test_mesh_batched_serve_matches_unmeshed():
+    """The batched fused tick under shard_map: the [15, n] bundle's extra
+    rows (b_eff, t_lane) ride the same sharded control round. Discrete
+    token/defer accounting must match the unmeshed batched engine with
+    analog state allclose (the PR-7 multi-device drift bound)."""
+    ndev = max(d for d in (2, 4, 8) if d <= len(jax.devices()))
+    n_chips, cap = 2 * ndev, 4
+    trace = bursty_trace(16, seed=sr.SEED, quiet_rate_hz=8.0,
+                         burst_rate_hz=40.0, decode_mean=48.0)
+
+    def _eng(mesh=None):
+        return _bench_world_engine(HeadroomRouter(capacity=cap),
+                                   n_chips=n_chips, batch_cap=cap,
+                                   decode_profile=sb.DECODE_PROFILE,
+                                   mesh=mesh)
+
+    eng0, obs0 = _eng()
+    led0 = eng0.serve_trace(trace, observe=obs0, max_ticks=600,
+                            error_bound=sr.ERROR_BOUND)
+    eng8, obs8 = _eng(mesh=_mesh(ndev))
+    assert eng8.shard_control and eng8._batched
+    led8 = eng8.serve_trace(trace, observe=obs8, max_ticks=600,
+                            error_bound=sr.ERROR_BOUND)
+    a, b = _discrete(eng0, led0), _discrete(eng8, led8)
+    assert [(r[0], r[1], r[4], r[5]) for r in a["records"]] == \
+           [(r[0], r[1], r[4], r[5]) for r in b["records"]]
+    for key in ("defers_by_reason", "unplaced", "unfinished",
+                "prefill_tokens", "decode_tokens"):
+        assert a[key] == b[key], key
+    assert led0.summary()["completed"] == led8.summary()["completed"] == 16
+    _assert_analog_close(led0, led8, eng0, eng8, rtol=1e-3)

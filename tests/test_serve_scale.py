@@ -72,9 +72,10 @@ def _tiny_engine(**kw):
         api = registry.build(cfg)
         _MODEL["cfg"] = cfg
         _MODEL["params"] = api.init(jax.random.PRNGKey(0))
+    kw.setdefault("prefill_profile", PROFILE)
+    kw.setdefault("decode_profile", PROFILE)
     return ServeEngine(_MODEL["cfg"], _MODEL["params"], max_len=24,
-                       batch_size=2, prefill_profile=PROFILE,
-                       decode_profile=PROFILE, **kw)
+                       batch_size=2, **kw)
 
 
 # -- place_batch vs sequential place (both routers, randomized mixes) ---------
@@ -184,17 +185,21 @@ def test_headroom_from_packed_matches_rail_headroom():
 
 # -- fused serve_tick vs the PR-8 loop (the committed bench world) ------------
 
-def _bench_world_engine(router, n_chips=8, mesh=None, shard_control=None):
+def _bench_world_engine(router, n_chips=8, mesh=None, shard_control=None,
+                        **kw):
     """The committed benchmarks/serve_router.py world at test scale: same
     fleet seed, same SOR-learning envelope-blind controller, same
-    load-coupled frontier observables."""
+    load-coupled frontier observables. Extra kwargs (batch_cap,
+    decode_profile, ...) pass through to the engine —
+    tests/test_serve_batching.py builds the continuous-batching variants
+    of the same world."""
     fs = FleetSpec.sample(n_chips, seed=sr.SEED)
     ctrl = InGraphRailController(
         sr._EnvelopeBlindWalk(floors=dict(sr.POLICY_FLOORS), backoff=1.01,
                               name="envelope-blind-walk"),
         sor=sr.SOR_CFG)
     eng = _tiny_engine(fleet=fs, controller=ctrl, router=router,
-                       mesh=mesh, shard_control=shard_control)
+                       mesh=mesh, shard_control=shard_control, **kw)
     return eng, sr._make_observe(fs, n_chips)
 
 

@@ -420,6 +420,64 @@ def test_unknown_age_carries_zero_fit_weight():
     assert w[0, 0] == 0.0
 
 
+def test_stale_polled_samples_downweight_an_actual_refit():
+    """End-to-end through fit_history, not just the weight vector: a batch
+    of RECENTLY-PUSHED but stale-at-observation POLLED samples (big
+    `age_s` — a PMBus poll that returned an old READ_VOUT conversion)
+    carries a misleading frontier. Staleness-blind weighting hands them
+    the highest recency weight and drags the fitted frontier toward their
+    onset; with `age_halflife_s` set, the same window refits to
+    (essentially) the fresh samples' frontier. And with every age at 0.0
+    the halflife multiplies weights by exactly 1.0f, so the config is
+    bit-inert on fresh-only telemetry — turning the knob on cannot move
+    an all-fresh fleet's envelopes."""
+    n = 4
+    sweep = np.linspace(0.76, 0.58, 24)
+
+    def _frame(v, onset, age):
+        vv = jnp.full((n,), float(v), jnp.float32)
+        err = BOUND * 10.0 ** jnp.clip(30.0 * (onset - vv), -6.0, 3.0)
+        return TelemetryFrame(grad_error=err, v_io=vv, v_core=vv,
+                              v_hbm=vv,
+                              age_s=jnp.full((n,), float(age)),
+                              provenance=Provenance.POLLED)
+
+    h = FrameHistory.create(40, n_chips=n)
+    for v in sweep:                      # fresh world: onset 0.66
+        h = h.push(_frame(v, 0.66, 0.0))
+    for v in sweep[::3]:                 # stale poll: onset LOOKED like 0.72
+        h = h.push(_frame(v, 0.72, 60.0))
+
+    aware = sor.fit_history(
+        h, sor.SorConfig(refresh_every=1, decay=0.96, error_bound=BOUND,
+                         age_halflife_s=2.0))
+    blind = sor.fit_history(
+        h, sor.SorConfig(refresh_every=1, decay=0.96, error_bound=BOUND))
+    assert (np.asarray(aware.confidence) > 0).all()
+    vf_aware = np.asarray(aware.v_frontier)[0]
+    vf_blind = np.asarray(blind.v_frontier)[0]
+    # 0.5**(60/2) ~ 1e-9: the stale batch is effectively erased, so the
+    # aware frontier sits at the fresh onset; the blind one is dragged
+    # >= 20 mV up toward the stale batch's 0.72
+    assert (vf_aware < vf_blind - 0.02).all()
+    np.testing.assert_allclose(vf_aware, 0.66, atol=0.01)
+
+    h_fresh = FrameHistory.create(40, n_chips=n)
+    for v in sweep:
+        h_fresh = h_fresh.push(_frame(v, 0.66, 0.0))
+    on = sor.fit_history(
+        h_fresh, sor.SorConfig(refresh_every=1, decay=0.96,
+                               error_bound=BOUND, age_halflife_s=2.0))
+    off = sor.fit_history(
+        h_fresh, sor.SorConfig(refresh_every=1, decay=0.96,
+                               error_bound=BOUND))
+    for field in ("intercept", "slope", "v_frontier", "confidence",
+                  "n_eff"):
+        np.testing.assert_array_equal(np.asarray(getattr(on, field)),
+                                      np.asarray(getattr(off, field)),
+                                      err_msg=field)
+
+
 def test_host_actuate_only_with_sor_rejected():
     """sor= on a policy-less (pure actuation) host controller would never
     observe anything — reject instead of silently never learning."""
